@@ -1,0 +1,77 @@
+"""Shared benchmark machinery: modeled v5e roofline times from compiled cost.
+
+This container has no TPU, so "time" for every benchmark is the roofline
+model evaluated on the compiled artifact (single device, no collectives):
+
+    t = max(HLO_flops / 197e12, HLO_bytes / 819e9)          [seconds]
+
+For Pallas-kernel paths XLA reports a near-zero-cost custom-call, so kernels
+are accounted analytically (reads + writes + model flops) — flagged in the
+`source` column.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+@dataclasses.dataclass
+class Modeled:
+    name: str
+    flops: float
+    hbm_bytes: float
+    source: str = "hlo"  # hlo | analytic
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t(self) -> float:
+        return max(self.t_compute, self.t_memory)
+
+    @property
+    def us(self) -> float:
+        return self.t * 1e6
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+
+def modeled(name: str, fn: Callable, *args) -> Modeled:
+    """Lower+compile fn(*args as ShapeDtypeStructs ok) and read its cost."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return Modeled(name, float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)))
+
+
+def analytic(name: str, flops: float, hbm_bytes: float) -> Modeled:
+    return Modeled(name, flops, hbm_bytes, source="analytic")
+
+
+def sds(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit(rows: list[tuple[str, float, str]]):
+    """Print the `name,us_per_call,derived` CSV contract."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

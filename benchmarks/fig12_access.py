@@ -1,0 +1,53 @@
+"""Paper Fig. 12 — data-accessing requirement: staged butterfly vs the
+multilayer-dataflow (fused) execution.
+
+The paper compresses the SPM access requirement below 12.48% by keeping all
+butterfly stages resident in the PE array.  TPU analogue: HBM bytes of the
+log N staged XLA execution (one round-trip per stage) vs the fused Pallas
+kernel (one read of x + weights, one write of y; intermediate stays in VMEM).
+
+derived: access ratio fused/staged (lower = better orchestration).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import butterfly as bf, monarch as mo
+from benchmarks.common import analytic, emit, modeled, sds
+
+
+def rows():
+    out = []
+    tokens = 4096
+    for n in (1024, 4096, 8192):
+        stages = bf.num_stages(n)
+        factors = [sds(sh, jnp.bfloat16) for sh in bf.stage_shapes(n)]
+        x = sds((tokens, n), jnp.bfloat16)
+        m_staged = modeled(
+            f"fig12/n{n}/staged-radix2",
+            lambda xx, *fs: bf.apply_butterfly(list(fs), xx),
+            x, *factors,
+        )
+        # fused kernel: x once in, y once out, grouped weights once
+        b = 1 << mo.split_point(n)
+        nb = n // b
+        w_bytes = (nb * b * b + b * nb * nb) * 2
+        io_bytes = 2 * tokens * n * 2 + w_bytes
+        flops = mo.monarch_flops(n, b, tokens)
+        m_fused = analytic(f"fig12/n{n}/fused-multilayer", flops, io_bytes)
+        ratio = m_fused.hbm_bytes / m_staged.hbm_bytes
+        out.append((m_staged.name, m_staged.us, f"bytes={m_staged.hbm_bytes/1e6:.1f}MB"))
+        out.append(
+            (m_fused.name, m_fused.us,
+             f"bytes={m_fused.hbm_bytes/1e6:.1f}MB access_ratio={ratio:.2%}")
+        )
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Fig. 14 — calUnit utilization across stage divisions.
+
+The paper finds balanced Cooley-Tukey divisions (64x64 over 16x256) maximise
+calculation-unit utilization.  TPU analogue: MXU utilization proxy for each
+division = useful flops / flops of the 128-aligned MXU tiles each stage's
+matmuls occupy (small radices waste systolic-array occupancy exactly like
+shallow stages waste PE flow in the paper).
+
+derived: utilization per division; best division flagged.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import stage_division as sd
+from benchmarks.common import emit
+
+
+def _divisions(n: int):
+    out = []
+    for r1 in (16, 32, 64, 128, 256, 512):
+        if n % r1 == 0 and n // r1 <= 512 and n // r1 >= 2:
+            out.append((r1, n // r1))
+    return out
+
+
+def mxu_utilization(plan, tokens=4096):
+    """useful / occupied flops with 128x128 MXU tiles, batched over tokens."""
+    useful = 0.0
+    occupied = 0.0
+    n = int(np.prod(plan))
+    for r in plan:
+        batch = tokens * (n // r)  # rows through the r x r stage matmul
+        useful += 2 * batch * r * r
+        tile = 128
+        pad = -(-r // tile) * tile
+        rows_pad = -(-batch // 8) * 8
+        occupied += 2 * rows_pad * pad * pad
+    return useful / occupied
+
+
+def rows():
+    out = []
+    for n in (2048, 4096, 8192):
+        best, best_u = None, -1.0
+        cands = []
+        for plan in _divisions(n):
+            u = mxu_utilization(plan)
+            cands.append((plan, u))
+            if u > best_u:
+                best, best_u = plan, u
+        for plan, u in cands:
+            flag = " <-- best" if plan == best else ""
+            out.append(
+                (f"fig14/bpmm-{n}/{plan[0]}x{plan[1]}", 0.0, f"mxu_util={u:.2%}{flag}")
+            )
+        bal = sd.plan_stages(n, 512)
+        out.append((f"fig14/bpmm-{n}/planner", 0.0, f"planner_chose={bal}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Fig. 15 — execution time: dense attention kernels vs butterfly
+kernels under the multilayer-dataflow orchestration.
+
+TPU analogue, per ViT/BERT kernel: modeled time of the dense kernel (XLA) vs
+the butterfly replacement executed (a) staged — the block-oriented baseline,
+and (b) fused/orchestrated — analytic kernel accounting.  The speedup
+dense/fused mirrors the paper's tensor-core-vs-dataflow rows; staged/fused
+mirrors its cuda-core (butterfly on GPU) rows.
+
+derived: speedups.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import butterfly as bf, monarch as mo, stage_division as sd
+from benchmarks.common import analytic, emit, modeled, sds
+
+CASES = [
+    ("vit-at-all", 128, 256, 768),
+    ("vit-to_qkv", 128, 256, 768),
+    ("bert-at-all-4k", 4, 4096, 1024),
+    ("bert-to_qkv-4k", 4, 4096, 1024),
+    ("bert-at-all-64k", 1, 65536, 1024),
+]
+
+
+def dense_attention(q, k, v):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(q.shape[-1] * 1.0)
+    p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _fft_analytic(name, b, s, d):
+    """Fused 2-stage FFT mixing kernel: one HBM round trip per stage chain."""
+    sp, hp = sd.plan_stages(s), sd.plan_stages(d)
+    flops = b * (d * sd.stage_flops(s, sp) + s * sd.stage_flops(d, hp))
+    # chain: hidden DFT (1 round trip, re+im out), seq DFT (re+im in, re out)
+    io = b * s * d * 2 * (1 + 2 + 2 + 1)
+    return analytic(name, flops, io)
+
+
+def rows():
+    out = []
+    for name, b, s, d in CASES:
+        h, hd = d // 64, 64
+        if "at-all" in name:
+            q = sds((b, s, h, hd))
+            m_dense = modeled(f"fig15/{name}/dense", dense_attention, q, q, q)
+            m_fused = _fft_analytic(f"fig15/{name}/butterfly-fused", b, s, d)
+        else:
+            x = sds((b * s, d))
+            w = sds((d, 3 * d))
+            m_dense = modeled(f"fig15/{name}/dense", lambda x, w: x @ w, x, w)
+            n2 = 1 << (d - 1).bit_length()
+            bsz = 1 << mo.split_point(n2)
+            nb = n2 // bsz
+            flops = 3 * mo.monarch_flops(n2, bsz, b * s)
+            io = 3 * (2 * b * s * n2 * 2 + (nb * bsz**2 + bsz * nb**2) * 2)
+            m_fused = analytic(f"fig15/{name}/butterfly-fused", flops, io)
+        speed = m_dense.t / m_fused.t
+        out.append((m_dense.name, m_dense.us, f"bound={m_dense.bound}"))
+        out.append((m_fused.name, m_fused.us, f"speedup_vs_dense={speed:.2f}x"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 17 — FABNet across sequence scales 128..1K.
+
+Modeled per-block forward time of FABNet (2D-FFT attention + BPMM FFN)
+against the dense vanilla block of the same width, at the paper's scales.
+derived: speedup over the dense baseline (the paper normalises to Jetson
+Nano; we normalise to the dense-XLA baseline on the same chip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.layers import Runtime
+from benchmarks.common import Modeled, emit, sds
+
+
+def block_time(cfg, b, s) -> Modeled:
+    rt = Runtime(mesh=None)
+    params = M.abstract_params(cfg)
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    fn = lambda p, t: tf.forward(p, cfg, t, rt, mode="eval")[0]
+    compiled = jax.jit(fn).lower(params, batch).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return Modeled(cfg.name, float(cost["flops"]), float(cost["bytes accessed"]))
+
+
+def rows():
+    out = []
+    fab = registry.get("fabnet-base")
+    dense = dataclasses.replace(
+        fab, name="fabnet-dense-baseline",
+        butterfly=type(fab.butterfly)(),  # all-dense policy
+    )
+    for s in (128, 256, 512, 1024):
+        b = 32
+        m_fab = block_time(dataclasses.replace(fab, remat=False), b, s)
+        m_dense = block_time(dataclasses.replace(dense, remat=False), b, s)
+        sp = m_dense.t / m_fab.t
+        out.append((f"fig17/fabnet-{s}", m_fab.us, f"speedup_vs_dense={sp:.2f}x"))
+        out.append((f"fig17/dense-{s}", m_dense.us, f"bound={m_dense.bound}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: lower+probe config variants of the three chosen
+cells and log hypothesis -> change -> before/after to results/hillclimb.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell mamba2
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell mixtral
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell vanilla
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import registry
+
+
+def _variants_mamba2():
+    base = registry.get("mamba2-130m")
+    return "mamba2-130m", "train_4k", [
+        ("baseline(sp+tp)", base),
+        ("pure_dp", dataclasses.replace(base, pure_dp=True)),
+        ("pure_dp+chunk64", dataclasses.replace(base, pure_dp=True, ssm_chunk=64)),
+        ("pure_dp+chunk256", dataclasses.replace(base, pure_dp=True, ssm_chunk=256)),
+    ]
+
+
+def _variants_mixtral():
+    base = registry.get("mixtral-8x22b")
+    return "mixtral-8x22b", "train_4k", [
+        ("baseline(sp)", base),
+        ("boundary_replicated", dataclasses.replace(base, boundary_mode="replicated")),
+        (
+            "boundary_replicated+bf16sm",
+            dataclasses.replace(base, boundary_mode="replicated", attn_f32_softmax=False),
+        ),
+        (
+            "bf16sm_only",
+            dataclasses.replace(base, attn_f32_softmax=False),
+        ),
+    ]
+
+
+def _variants_qwen3():
+    base = registry.get("qwen3-0.6b")
+    return "qwen3-0.6b", "train_4k", [
+        ("baseline(sp)", base),
+        ("pure_dp", dataclasses.replace(base, pure_dp=True)),
+        ("boundary_replicated", dataclasses.replace(base, boundary_mode="replicated")),
+        ("pure_dp+bf16sm", dataclasses.replace(base, pure_dp=True, attn_f32_softmax=False)),
+    ]
+
+
+CELLS = {
+    "mamba2": _variants_mamba2,
+    "mixtral": _variants_mixtral,
+    "qwen3": _variants_qwen3,
+}
+
+
+def main():
+    from repro.launch.dryrun import run_cell  # imports after XLA_FLAGS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--only", default=None, help="run a single variant by name")
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    arch, shape, variants = CELLS[args.cell]()
+    with open(args.out, "a") as f:
+        for name, cfg in variants:
+            if args.only and name != args.only:
+                continue
+            rec = run_cell(arch, shape, multi_pod=False, cfg_override=cfg)
+            rec["variant"] = name
+            rec["cell"] = args.cell
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(
+                    f"[{args.cell}/{name}] t_comp={r['t_compute']*1e3:.1f}ms "
+                    f"t_mem={r['t_memory']*1e3:.1f}ms t_coll={r['t_collective']*1e3:.1f}ms "
+                    f"dom={r['dominant']} useful={r['useful_ratio']:.2f} "
+                    f"roofline={r['roofline_fraction']:.2%} "
+                    f"mem/dev={rec['memory']['peak_est_bytes']/2**30:.1f}GiB",
+                    flush=True,
+                )
+            else:
+                print(f"[{args.cell}/{name}] {rec['status']}: {rec.get('error','')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

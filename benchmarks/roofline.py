@@ -1,0 +1,67 @@
+"""Roofline table generator: reads dry-run jsonl records and renders the
+EXPERIMENTS.md §Roofline table (terms in seconds, dominant bottleneck,
+MODEL_FLOPS ratio, roofline fraction)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(paths: list[str]) -> list[dict]:
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh) — reruns override
+    dedup: dict[tuple, dict] = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — | — | "
+                f"{r['reason']} |")
+    if r["status"] != "ok" or not r.get("roofline"):
+        return f"| {r['arch']} | {r['shape']} | ERROR: {r.get('error','?')[:60]} |"
+    rl = r["roofline"]
+    mem = r["memory"]["peak_est_bytes"] / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {rl['t_compute']*1e3:.1f} | "
+        f"{rl['t_memory']*1e3:.1f} | {rl['t_collective']*1e3:.1f} | {mem:.1f} | "
+        f"**{rl['dominant']}** | {rl['useful_ratio']:.2f} | "
+        f"{rl['roofline_fraction']:.1%} | |"
+    )
+
+
+HEADER = (
+    "| arch | shape | t_compute (ms) | t_memory (ms) | t_collective (ms) | "
+    "mem/dev (GiB) | dominant | MODEL/HLO flops | roofline frac | note |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = [HEADER]
+    order = {s: i for i, s in enumerate(["train_4k", "prefill_32k", "decode_32k", "long_500k"])}
+    recs = [r for r in recs if r["mesh"] == mesh]
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        rows.append(fmt_row(r))
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(table(load(args.files), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

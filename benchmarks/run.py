@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: `PYTHONPATH=src python -m benchmarks.run [--only fig2]`.
+
+Every module maps to one paper artifact (see DESIGN.md §6).  Times are
+modeled v5e roofline times from compiled HLO cost (this host is CPU-only);
+`derived` carries the paper-relevant ratio for each artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig2_profiling,
+    fig12_access,
+    fig14_division,
+    fig15_speedup,
+    fig17_fabnet,
+    table4_e2e,
+)
+
+MODULES = {
+    "fig2": fig2_profiling,
+    "fig12": fig12_access,
+    "fig14": fig14_division,
+    "fig15": fig15_speedup,
+    "fig17": fig17_fabnet,
+    "table4": table4_e2e,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(MODULES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            MODULES[name].main()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

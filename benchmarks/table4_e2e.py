@@ -1,0 +1,59 @@
+"""Paper Table IV — end-to-end one-layer vanilla transformer (1K seq, 1K
+hidden, LRA-Image, batch 256): latency and throughput.
+
+The paper reports 2.06 ms / 485 pred/s for its design (vs 2.4 ms for the
+FPGA butterfly accelerator).  We report the modeled v5e latency of the same
+workload, butterfly vs dense, and the derived throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import vanilla_1layer
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.layers import Runtime
+from benchmarks.common import Modeled, emit, sds
+
+BATCH, SEQ = 256, 1024
+
+
+def model_time(cfg) -> Modeled:
+    rt = Runtime(mesh=None)
+    params = M.abstract_params(cfg)
+    batch = {"tokens": sds((BATCH, SEQ), jnp.int32)}
+    fn = lambda p, t: tf.forward(p, cfg, t, rt, mode="eval")[0]
+    compiled = jax.jit(fn).lower(params, batch).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return Modeled(cfg.name, float(cost["flops"]), float(cost["bytes accessed"]))
+
+
+def rows():
+    out = []
+    bfly = dataclasses.replace(vanilla_1layer.FULL, remat=False)
+    dense = dataclasses.replace(vanilla_1layer.DENSE, remat=False)
+    m_b = model_time(bfly)
+    m_d = model_time(dense)
+    for m, tag in ((m_b, "butterfly"), (m_d, "dense")):
+        lat_ms = m.t * 1e3
+        pred_s = BATCH / m.t
+        out.append(
+            (f"table4/{tag}", m.us,
+             f"latency_ms={lat_ms:.3f} pred_per_s={pred_s:.0f} bound={m.bound}")
+        )
+    out.append(("table4/speedup", 0.0, f"butterfly_vs_dense={m_d.t/m_b.t:.2f}x"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

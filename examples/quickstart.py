@@ -1,0 +1,38 @@
+"""Quickstart: the paper's technique as a three-line config change.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.api import ButterflyPolicy
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.layers import Runtime
+
+rt = Runtime(mesh=None)
+
+# 1. any registered architecture...
+dense_cfg = registry.get("qwen3-0.6b", reduced=True)
+
+# 2. ...becomes butterfly-sparse by swapping the policy (BPMM on qkv/out/ffn,
+#    executed in the grouped multilayer-dataflow form)
+bfly_cfg = dataclasses.replace(
+    dense_cfg,
+    name="qwen3-0.6b+bpmm",
+    butterfly=ButterflyPolicy(impl="monarch", max_block=32),
+)
+
+for cfg in (dense_cfg, bfly_cfg):
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    loss, metrics = tf.loss_fn(params, cfg, {"tokens": tokens, "labels": tokens}, rt)
+    n = M.count_params(cfg)
+    print(f"{cfg.name:24s} params={n:>12,}  loss={float(loss):.3f}")
+
+print("\nbutterfly compression:",
+      f"{M.count_params(bfly_cfg) / M.count_params(dense_cfg):.1%} of dense parameters")

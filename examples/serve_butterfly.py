@@ -1,0 +1,29 @@
+"""Batched serving of a butterfly-sparse model: prefill + decode with KV
+caches through the ServeLoop driver.
+
+    PYTHONPATH=src python examples/serve_butterfly.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import Request, ServeLoop
+from repro.models import model as M
+
+cfg = registry.get("qwen3-0.6b+bpmm", reduced=True)
+cfg = dataclasses.replace(cfg, dtype="float32")
+mesh = make_local_mesh()
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+loop = ServeLoop(cfg, mesh, params, batch=4, cache_len=64)
+requests = [
+    Request(uid=i, prompt=np.arange(3 + i, dtype=np.int32) % cfg.vocab, max_new=8)
+    for i in range(4)
+]
+done = loop.run(requests)
+for r in done:
+    print(f"request {r.uid}: prompt={list(r.prompt)} -> generated={r.generated}")

@@ -1,0 +1,38 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base].
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352, MoE 16e top-4.
+16 experts on the 16-way model axis -> 1 expert per device (EP).
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    vocab=100352,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    n_experts=16,
+    top_k=4,
+    rope_theta=5e5,
+    grad_accum=4,  # micro-batch must stay divisible by the 32-way DP degree
+)
+
+REDUCED = ModelConfig(
+    name="dbrx-132b-reduced",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    n_experts=4,
+    top_k=2,
+    attn_chunk=8,
+)

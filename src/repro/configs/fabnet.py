@@ -1,0 +1,45 @@
+"""FABNet-Base [paper benchmark] — the SOTA butterfly accelerator's workload
+(Fan et al., MICRO'22 — paper ref [8]): 2D-FFT attention + BPMM FFN encoder
+blocks, evaluated at sequence scales 128..1K (paper Fig. 17).
+"""
+
+from repro.core.api import ButterflyPolicy
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="fabnet-base",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    vocab=30522,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+    butterfly=ButterflyPolicy(
+        impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=True
+    ),
+)
+
+REDUCED = ModelConfig(
+    name="fabnet-base-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+    attn_chunk=8,
+    butterfly=ButterflyPolicy(
+        impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=True,
+        max_block=32,
+    ),
+)

@@ -1,0 +1,36 @@
+"""internvl2-26b [vlm] — InternViT + InternLM2 [arXiv:2404.16821].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.  The InternViT
+frontend is a STUB: `input_specs()` provides precomputed patch embeddings
+(n_img_tokens x d_model) prepended to the text (DESIGN.md §4).
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    vocab=92553,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    n_img_tokens=256,
+    grad_accum=4,
+)
+
+REDUCED = ModelConfig(
+    name="internvl2-26b-reduced",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    n_img_tokens=8,
+    attn_chunk=8,
+)

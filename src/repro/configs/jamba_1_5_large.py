@@ -1,0 +1,53 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7, MoE [arXiv:2403.19887].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2.
+Period of 8: attention at slot 0, mamba at slots 1-7; MoE FFN every other
+layer (36 MoE layers).  bf16 params + bf16 moments (398B: the fp32 state
+would not fit 256 chips — DESIGN §5).
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="jamba-1.5-large",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    vocab=65536,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    n_experts=16,
+    top_k=2,
+    moe_period=2,
+    attn_period=8,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=8,
+    ssm_chunk=128,
+    param_dtype="bfloat16",
+    grad_accum=8,  # micro-batch must stay divisible by the 32-way DP degree
+)
+
+REDUCED = ModelConfig(
+    name="jamba-1.5-large-reduced",
+    family="hybrid",
+    n_layers=8,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    n_experts=4,
+    top_k=2,
+    moe_period=2,
+    attn_period=8,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_groups=2,
+    ssm_chunk=8,
+    attn_chunk=8,
+)

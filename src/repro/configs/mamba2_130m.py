@@ -1,0 +1,32 @@
+"""mamba2-130m [ssm] — SSD, attention-free [arXiv:2405.21060].
+
+24L d_model=768 (attn-free) vocab=50280, ssm_state=128.
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    vocab=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_chunk=128,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-130m-reduced",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_groups=1,
+    ssm_chunk=8,
+)

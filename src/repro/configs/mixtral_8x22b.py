@@ -1,0 +1,40 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA [arXiv:2401.04088].
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, MoE 8e top-2.
+Experts (8) don't divide the 16-way model axis -> expert-TP fallback.
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    vocab=32768,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    n_experts=8,
+    top_k=2,
+    sliding_window=4096,
+    rope_theta=1e6,
+    grad_accum=4,  # micro-batch must stay divisible by the 32-way DP degree
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-8x22b-reduced",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    n_experts=4,
+    top_k=2,
+    sliding_window=16,
+    attn_chunk=8,
+)

@@ -1,0 +1,35 @@
+"""qwen2-72b [dense] — GQA, QKV bias [arXiv:2407.10671].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    vocab=152064,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    qkv_bias=True,
+    rope_theta=1e6,
+    grad_accum=8,
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-72b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=160,
+    qkv_bias=True,
+    attn_chunk=8,
+)

@@ -1,0 +1,35 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-0.6B].
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936 (head_dim=128 as in
+the released model — decoupled from d_model/n_heads).
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    vocab=151936,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    qk_norm=True,
+    rope_theta=1e6,
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-0.6b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    qk_norm=True,
+    attn_chunk=8,
+)

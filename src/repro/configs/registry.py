@@ -1,0 +1,90 @@
+"""Architecture registry: ``get("<arch>[+variant]", reduced=...)``.
+
+Variants apply the paper's technique to any architecture as a config suffix:
+    +bpmm      Monarch-grouped BPMM on qkv/out/ffn (the multilayer-dataflow form)
+    +bpmm-r2   faithful radix-2 staged BPMM (the §Perf baseline form)
+    +bpmm-k    fused Pallas-kernel BPMM
+    +fft       2D-FFT attention replacement (non-causal stacks only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.api import ButterflyPolicy
+from repro.models.config import ModelConfig
+
+from repro.configs import (
+    dbrx_132b,
+    fabnet,
+    internvl2_26b,
+    jamba_1_5_large,
+    mamba2_130m,
+    mixtral_8x22b,
+    qwen2_72b,
+    qwen3_0_6b,
+    vanilla_1layer,
+    whisper_base,
+    yi_34b,
+    yi_6b,
+)
+
+_MODULES = {
+    "mamba2-130m": mamba2_130m,
+    "mixtral-8x22b": mixtral_8x22b,
+    "dbrx-132b": dbrx_132b,
+    "internvl2-26b": internvl2_26b,
+    "yi-34b": yi_34b,
+    "qwen2-72b": qwen2_72b,
+    "yi-6b": yi_6b,
+    "qwen3-0.6b": qwen3_0_6b,
+    "whisper-base": whisper_base,
+    "jamba-1.5-large": jamba_1_5_large,
+    "fabnet-base": fabnet,
+    "vanilla-1layer": vanilla_1layer,
+}
+
+ASSIGNED = [
+    "mamba2-130m",
+    "mixtral-8x22b",
+    "dbrx-132b",
+    "internvl2-26b",
+    "yi-34b",
+    "qwen2-72b",
+    "yi-6b",
+    "qwen3-0.6b",
+    "whisper-base",
+    "jamba-1.5-large",
+]
+
+PAPER = ["fabnet-base", "vanilla-1layer"]
+
+_VARIANTS = {
+    "bpmm": dict(impl="monarch"),
+    "bpmm-r2": dict(impl="radix2"),
+    "bpmm-k": dict(impl="monarch_kernel"),
+    "fft": dict(impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=False),
+}
+
+
+def names() -> list[str]:
+    return list(_MODULES)
+
+
+def get(name: str, reduced: bool = False) -> ModelConfig:
+    base, _, variant = name.partition("+")
+    if base not in _MODULES:
+        raise KeyError(f"unknown arch {base!r}; known: {sorted(_MODULES)}")
+    mod = _MODULES[base]
+    cfg: ModelConfig = mod.REDUCED if reduced else mod.FULL
+    if variant:
+        if variant not in _VARIANTS:
+            raise KeyError(f"unknown variant {variant!r}; known: {sorted(_VARIANTS)}")
+        kw = dict(_VARIANTS[variant])
+        if variant == "fft" and cfg.causal:
+            raise ValueError(f"{base} is causal; the FFT (FNet) mixer is encoder-only")
+        if reduced:
+            kw["max_block"] = 32
+        pol = dataclasses.replace(cfg.butterfly, **kw)
+        cfg = dataclasses.replace(cfg, name=f"{cfg.name}+{variant}", butterfly=pol)
+    return cfg

@@ -1,0 +1,67 @@
+"""Assigned input shapes (the x4 axis of the 40-cell matrix) + input specs.
+
+``decode_*`` / ``long_*`` lower `decode_step` (one new token against a
+seq_len-deep KV cache); ``train_*`` lowers `train_step`; ``prefill_*`` lowers
+`prefill`.  `applicable()` encodes the skip rules from DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "Shape", "applicable", "batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """DESIGN.md §4: long_500k needs sub-quadratic attention."""
+    if shape.name != "long_500k":
+        return True, ""
+    if cfg.family == "encdec":
+        return False, "enc-dec (448-token decoder in the real model); full attention"
+    if cfg.family in ("ssm", "hybrid"):
+        return True, "O(1)-state decode (SSM/hybrid)"
+    if cfg.sliding_window:
+        return True, f"SWA window={cfg.sliding_window} bounds the KV cache"
+    return False, "pure full attention — quadratic; skipped per assignment"
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct stand-ins for the non-cache model inputs."""
+    tok = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+    one = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    adt = jnp.dtype(cfg.dtype)
+    out: dict = {}
+    if shape.kind == "train":
+        out = {"tokens": tok, "labels": tok}
+    elif shape.kind == "prefill":
+        out = {"tokens": tok}
+    else:  # decode
+        out = {"tokens": one}
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct((shape.batch, cfg.enc_seq, cfg.d_model), adt)
+    if cfg.n_img_tokens and shape.kind != "decode":
+        out["img_embeds"] = jax.ShapeDtypeStruct(
+            (shape.batch, cfg.n_img_tokens, cfg.d_model), adt
+        )
+    return out

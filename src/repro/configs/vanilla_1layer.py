@@ -1,0 +1,62 @@
+"""One-layer vanilla transformer [paper Table IV benchmark].
+
+1K sequence x 1K hidden, 2D-FFT on the attention matrix, BPMM on the
+two-layer FFN; LRA-Image vocabulary (256 pixel intensities), batch 256.
+"""
+
+from repro.core.api import ButterflyPolicy
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="vanilla-1layer",
+    family="dense",
+    n_layers=1,
+    d_model=1024,
+    vocab=256,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+    butterfly=ButterflyPolicy(
+        impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=True
+    ),
+)
+
+# dense baseline of the same shape (the paper's comparison object)
+DENSE = ModelConfig(
+    name="vanilla-1layer-dense",
+    family="dense",
+    n_layers=1,
+    d_model=1024,
+    vocab=256,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+)
+
+REDUCED = ModelConfig(
+    name="vanilla-1layer-reduced",
+    family="dense",
+    n_layers=1,
+    d_model=64,
+    vocab=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+    attn_chunk=8,
+    butterfly=ButterflyPolicy(
+        impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=True,
+        max_block=32,
+    ),
+)

@@ -1,0 +1,41 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+6L d_model=512 8H d_ff=2048 vocab=51865.  6 encoder + 6 decoder layers;
+the mel-conv frontend is a STUB: `input_specs()` provides (B, 1500, 512)
+precomputed frame embeddings.  RoPE replaces learned positions (DESIGN §7).
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    n_enc_layers=6,
+    enc_seq=1500,
+    d_model=512,
+    vocab=51865,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    norm="layernorm",
+    act="gelu",
+)
+
+REDUCED = ModelConfig(
+    name="whisper-base-reduced",
+    family="encdec",
+    n_layers=2,
+    n_enc_layers=2,
+    enc_seq=12,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    norm="layernorm",
+    act="gelu",
+    attn_chunk=8,
+)

@@ -1,0 +1,34 @@
+"""yi-34b [dense] — llama-arch GQA [arXiv:2403.04652].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+56 q-heads don't divide the 16-way model axis -> context-parallel attention.
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    vocab=64000,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    rope_theta=5e6,
+    grad_accum=4,
+)
+
+REDUCED = ModelConfig(
+    name="yi-34b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=7,  # keeps the non-divisible-heads (CP fallback) wiring honest
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    attn_chunk=8,
+)

@@ -1,0 +1,32 @@
+"""yi-6b [dense] — llama-arch GQA [arXiv:2403.04652].
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    vocab=64000,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    rope_theta=5e6,
+)
+
+REDUCED = ModelConfig(
+    name="yi-6b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=96,
+    attn_chunk=8,
+)

@@ -1,0 +1,12 @@
+# The paper's primary contribution: butterfly sparsity (BPMM + FFT attention)
+# orchestrated as a multilayer dataflow — faithful radix-2 form, grouped
+# (Monarch) TPU-native form, Cooley-Tukey multi-stage division, Fig.10 slicing.
+from repro.core.api import (  # noqa: F401
+    ButterflyPolicy,
+    LinearSpec,
+    apply_linear,
+    init_linear,
+    linear_flops,
+    linear_param_count,
+)
+from repro.core.fft_mixing import fnet_mixing, fnet_mixing_reference  # noqa: F401

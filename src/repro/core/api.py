@@ -1,0 +1,208 @@
+"""User-facing butterfly layers: the paper's technique as a composable module.
+
+``ButterflyPolicy`` selects where butterfly sparsity enters a model (the
+paper's ablation axes: q/k/v projections, output projection, FFN, experts) and
+which execution form runs it:
+
+* ``radix2``        — faithful staged BPMM (log N passes; §Perf baseline)
+* ``monarch``       — grouped two-super-stage XLA einsums (multilayer dataflow)
+* ``monarch_kernel``— fused Pallas kernel (one HBM round-trip; TPU target)
+* ``dense``         — no sparsity (the paper's dense baseline)
+
+All linear layers in the model zoo route through :func:`init_linear` /
+:func:`apply_linear`, so the technique is a config flag, not a model fork.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import butterfly as bfly
+from repro.core import monarch as mo
+from repro.core.slicing import SlicePlan, plan_slicing
+
+__all__ = [
+    "ButterflyPolicy",
+    "LinearSpec",
+    "init_linear",
+    "apply_linear",
+    "linear_param_count",
+    "linear_flops",
+]
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ButterflyPolicy:
+    """Where + how butterfly sparsity is applied (paper Fig. 11 ablation axes)."""
+
+    impl: str = "dense"  # dense | radix2 | monarch | monarch_kernel
+    on_qkv: bool = True
+    on_out: bool = True
+    on_ffn: bool = True
+    on_experts: bool = False
+    fft_attention: bool = False  # FNet-style AT-all replacement (encoder only)
+    max_piece: int = 8192
+    max_block: int = 512  # super-stage radix budget (paper's DFG limit)
+
+    @property
+    def enabled(self) -> bool:
+        return self.impl != "dense"
+
+    def for_site(self, site: str) -> str:
+        """Effective impl for a layer site in {qkv, out, ffn, experts, other}."""
+        if not self.enabled:
+            return "dense"
+        ok = {
+            "qkv": self.on_qkv,
+            "out": self.on_out,
+            "ffn": self.on_ffn,
+            "experts": self.on_experts,
+        }.get(site, False)
+        return self.impl if ok else "dense"
+
+
+DENSE = ButterflyPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    din: int
+    dout: int
+    impl: str = "dense"
+    use_bias: bool = False
+    max_piece: int = 8192
+    max_block: int = 512
+
+    @property
+    def slices(self) -> SlicePlan:
+        return plan_slicing(self.din, self.dout, self.max_piece)
+
+    @property
+    def block(self) -> int:
+        return 1 << mo.split_point(self.slices.piece, self.max_block)
+
+
+def init_linear(key: jax.Array, spec: LinearSpec, dtype=jnp.float32) -> Params:
+    kw, kb = jax.random.split(key)
+    params: Params = {}
+    if spec.impl == "dense":
+        scale = 1.0 / math.sqrt(spec.din)
+        params["w"] = jax.random.normal(kw, (spec.din, spec.dout), dtype) * scale
+    elif spec.impl == "radix2":
+        sp = spec.slices
+        stages = []
+        for shape in bfly.stage_shapes(sp.piece):
+            kw, k = jax.random.split(kw)
+            w = jax.random.normal(k, (sp.gout, sp.gin, *shape), dtype)
+            stages.append(w * math.sqrt(0.5) / math.sqrt(sp.gin) ** (1.0 / len(bfly.stage_shapes(sp.piece))))
+        params["stages"] = stages
+    elif spec.impl in ("monarch", "monarch_kernel"):
+        sp = spec.slices
+        b = spec.block
+        nb = sp.piece // b
+        kr, kl = jax.random.split(kw)
+        gscale = 1.0 / math.sqrt(sp.gin)
+        params["r"] = (
+            jax.random.normal(kr, (sp.gout, sp.gin, nb, b, b), dtype) / math.sqrt(b)
+        )
+        params["l"] = (
+            jax.random.normal(kl, (sp.gout, sp.gin, b, nb, nb), dtype)
+            / math.sqrt(nb)
+            * gscale
+        )
+    else:
+        raise ValueError(f"unknown linear impl {spec.impl!r}")
+    if spec.use_bias:
+        params["b"] = jnp.zeros((spec.dout,), dtype)
+    return params
+
+
+def _pad_last(x: jax.Array, to: int) -> jax.Array:
+    pad = to - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def apply_linear(params: Params, spec: LinearSpec, x: jax.Array) -> jax.Array:
+    """y = x @ W (+ b) under the configured butterfly execution form."""
+    if spec.impl == "dense":
+        y = x @ params["w"].astype(x.dtype)
+    elif spec.impl == "radix2":
+        y = _apply_radix2(params, spec, x)
+    elif spec.impl == "monarch":
+        y = _apply_monarch(params, spec, x)
+    elif spec.impl == "monarch_kernel":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        y = ops.monarch_linear(params, spec, x)
+    else:
+        raise ValueError(spec.impl)
+    if spec.use_bias:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def _apply_radix2(params: Params, spec: LinearSpec, x: jax.Array) -> jax.Array:
+    """Faithful staged BPMM over the slice grid — one strided pass per stage."""
+    sp = spec.slices
+    x = _pad_last(x, sp.din_pad)
+    lead = x.shape[:-1]
+    # (..., gin, piece) -> broadcast a gout axis; stream stages
+    xg = x.reshape(*lead, 1, sp.gin, sp.piece)
+    for w in params["stages"]:
+        w = w.astype(x.dtype)
+        gout, gin, blocks, _, _, s = w.shape
+        xr = xg.reshape(*lead, xg.shape[-3], gin, blocks, 2, s)
+        x0, x1 = xr[..., 0, :], xr[..., 1, :]
+        y0 = w[..., 0, 0, :] * x0 + w[..., 0, 1, :] * x1
+        y1 = w[..., 1, 0, :] * x0 + w[..., 1, 1, :] * x1
+        xg = jnp.stack([y0, y1], axis=-2).reshape(*lead, gout, gin, sp.piece)
+    y = xg.sum(axis=-2).reshape(*lead, sp.dout_pad)
+    return y[..., : sp.dout]
+
+
+def _apply_monarch(params: Params, spec: LinearSpec, x: jax.Array) -> jax.Array:
+    """Grouped two-super-stage apply over the slice grid (XLA einsums)."""
+    sp = spec.slices
+    r, l = params["r"].astype(x.dtype), params["l"].astype(x.dtype)
+    gout, gin, nb, b, _ = r.shape
+    x = _pad_last(x, sp.din_pad)
+    lead = x.shape[:-1]
+    xr = x.reshape(*lead, gin, nb, b)
+    u = jnp.einsum("oghij,...ghj->...oghi", r, xr)
+    y = jnp.einsum("ogjhk,...ogkj->...oghj", l, u)
+    y = y.sum(axis=-3).reshape(*lead, sp.dout_pad)
+    return y[..., : sp.dout]
+
+
+def linear_param_count(spec: LinearSpec) -> int:
+    if spec.impl == "dense":
+        n = spec.din * spec.dout
+    else:
+        sp = spec.slices
+        g = sp.gin * sp.gout
+        if spec.impl == "radix2":
+            n = g * bfly.butterfly_param_count(sp.piece)
+        else:
+            n = g * mo.monarch_param_count(sp.piece, spec.block)
+    return n + (spec.dout if spec.use_bias else 0)
+
+
+def linear_flops(spec: LinearSpec, tokens: int) -> int:
+    """Model (useful) FLOPs for `tokens` row-vectors through this layer."""
+    if spec.impl == "dense":
+        return 2 * tokens * spec.din * spec.dout
+    sp = spec.slices
+    g = sp.gin * sp.gout
+    if spec.impl == "radix2":
+        # 4 mul + 2 add per element pair per stage = 6 flops per 2 elements
+        return tokens * g * 3 * sp.piece * bfly.num_stages(sp.piece)
+    return tokens * g * mo.monarch_flops(sp.piece, spec.block)

@@ -1,0 +1,144 @@
+"""Radix-2 butterfly factor matrices — the paper-faithful BPMM substrate.
+
+A length-``N = 2**m`` butterfly product is ``W = B_m @ ... @ B_1`` where stage
+``k`` pairs elements at stride ``s = 2**(k-1)`` inside contiguous blocks of
+size ``2**k`` (paper Fig. 4).  Each stage holds exactly ``2N`` nonzeros, so the
+full product has ``2 N log2 N`` parameters vs ``N**2`` dense — the 2/N-sparse
+factors of paper §II-B.
+
+This module is the *faithful* form: ``apply_butterfly`` executes the stages one
+by one, exactly the way a block-oriented backend (GPU / plain XLA) runs them —
+one strided reshape + elementwise multiply-add per stage, i.e. one HBM
+round-trip per stage.  That is the memory-bound behaviour the paper profiles in
+Fig. 2 and is the §Perf baseline.  The orchestrated (multilayer-dataflow) form
+lives in :mod:`repro.core.monarch` and :mod:`repro.kernels.monarch_bpmm`.
+
+Weight layout per stage ``k`` (1-based):  ``w_k`` has shape
+``(N / 2**k, 2, 2, 2**(k-1))`` = (blocks, out-arm, in-arm, twiddle-index).
+For block ``j`` and offset ``t < s``::
+
+    y[j*2s + t]     = w[j,0,0,t] * x[j*2s + t] + w[j,0,1,t] * x[j*2s + s + t]
+    y[j*2s + s + t] = w[j,1,0,t] * x[j*2s + t] + w[j,1,1,t] * x[j*2s + s + t]
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "num_stages",
+    "stage_shapes",
+    "init_butterfly",
+    "fft_butterfly_factors",
+    "bit_reversal_permutation",
+    "apply_stage",
+    "apply_butterfly",
+    "butterfly_to_dense",
+    "butterfly_param_count",
+]
+
+
+def num_stages(n: int) -> int:
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"butterfly size must be a power of two >= 2, got {n}")
+    return n.bit_length() - 1
+
+
+def stage_shapes(n: int) -> list[tuple[int, int, int, int]]:
+    """Weight shapes [(blocks, 2, 2, stride)] for stages k = 1..log2(n)."""
+    return [(n >> k, 2, 2, 1 << (k - 1)) for k in range(1, num_stages(n) + 1)]
+
+
+def butterfly_param_count(n: int) -> int:
+    return 2 * n * num_stages(n)
+
+
+def init_butterfly(key: jax.Array, n: int, dtype=jnp.float32) -> list[jax.Array]:
+    """Random init of a radix-2 butterfly stack.
+
+    Each 2x2 arm block is initialised so the stage is approximately
+    norm-preserving: entries ~ N(0, 1/2) per arm (fan-in of 2 per output).
+    """
+    keys = jax.random.split(key, num_stages(n))
+    factors = []
+    for k, shape in zip(keys, stage_shapes(n)):
+        factors.append(jax.random.normal(k, shape, dtype) * math.sqrt(0.5))
+    return factors
+
+
+def bit_reversal_permutation(n: int) -> np.ndarray:
+    """Index permutation ``P_N`` of Eq. (4): decimation-in-time input order."""
+    m = num_stages(n)
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(m):
+        rev |= ((idx >> b) & 1) << (m - 1 - b)
+    return rev
+
+
+def fft_butterfly_factors(n: int) -> list[jax.Array]:
+    """Complex radix-2 DIT factors: ``DFT_N = B_m ... B_1 P_bitrev`` (Eq. 4).
+
+    Stage k combines arms with twiddle ``w = exp(-2πi t / 2**k)``::
+
+        top = x_top + w * x_bot ;  bot = x_top - w * x_bot
+    """
+    factors = []
+    for blocks, _, _, s in stage_shapes(n):
+        t = np.arange(s)
+        w = np.exp(-2j * np.pi * t / (2 * s)).astype(np.complex64)
+        ones = np.ones_like(w)
+        stage = np.stack(
+            [np.stack([ones, w], 0), np.stack([ones, -w], 0)], 0
+        )  # (2, 2, s)
+        factors.append(jnp.asarray(np.broadcast_to(stage, (blocks, 2, 2, s)).copy()))
+    return factors
+
+
+def apply_stage(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Apply one butterfly stage along the last axis of ``x``."""
+    blocks, _, _, s = w.shape
+    n = x.shape[-1]
+    if n != blocks * 2 * s:
+        raise ValueError(f"stage of size {blocks * 2 * s} applied to dim {n}")
+    xr = x.reshape(*x.shape[:-1], blocks, 2, s)
+    x0, x1 = xr[..., 0, :], xr[..., 1, :]
+    y0 = w[:, 0, 0] * x0 + w[:, 0, 1] * x1
+    y1 = w[:, 1, 0] * x0 + w[:, 1, 1] * x1
+    return jnp.stack([y0, y1], axis=-2).reshape(x.shape)
+
+
+def apply_butterfly(factors: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Faithful staged execution: ``B_m(...B_1(x))`` — log N passes over x."""
+    for w in factors:
+        x = apply_stage(w, x)
+    return x
+
+
+def _stage_dense(w: np.ndarray) -> np.ndarray:
+    """Materialise one stage as a dense (n, n) matrix (tests / conversion)."""
+    blocks, _, _, s = w.shape
+    n = blocks * 2 * s
+    out = np.zeros((n, n), dtype=np.asarray(w).dtype)
+    for j in range(blocks):
+        base = j * 2 * s
+        for t in range(s):
+            out[base + t, base + t] = w[j, 0, 0, t]
+            out[base + t, base + s + t] = w[j, 0, 1, t]
+            out[base + s + t, base + t] = w[j, 1, 0, t]
+            out[base + s + t, base + s + t] = w[j, 1, 1, t]
+    return out
+
+
+def butterfly_to_dense(factors: Sequence[jax.Array]) -> np.ndarray:
+    """Dense ``B_m @ ... @ B_1`` (row-vector convention: y = W @ x)."""
+    mats = [_stage_dense(np.asarray(w)) for w in factors]
+    out = mats[0]
+    for m in mats[1:]:
+        out = m @ out
+    return out

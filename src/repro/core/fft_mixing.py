@@ -1,0 +1,109 @@
+"""FNet-style 2-D FFT attention replacement (paper Fig. 1c, benchmark AT-all).
+
+``mix(x) = Re( DFT_seq( DFT_hidden(x) ) )`` — token and feature mixing with no
+learned attention weights, O(N log N).  Executed through the multi-stage
+division planner so every stage is a batched small dense matmul (MXU) with
+twiddle layers in between; the fused two-stage Pallas kernel is used for the
+sequence transform when enabled.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stage_division as sd
+
+__all__ = ["fnet_mixing", "dft_real_stages", "fnet_mixing_reference"]
+
+
+def fnet_mixing_reference(x: jax.Array) -> jax.Array:
+    """Oracle: complex 2-D FFT over (seq, hidden), real part (FNet eq. 1)."""
+    return jnp.real(jnp.fft.fft(jnp.fft.fft(x.astype(jnp.complex64), axis=-1), axis=-2))
+
+
+def _dft_mats(n: int):
+    m = np.asarray(sd.dft_matrix(n))
+    return jnp.asarray(m.real.astype(np.float32)), jnp.asarray(m.imag.astype(np.float32))
+
+
+def _twiddle_mats(n1: int, n2: int):
+    t = np.asarray(sd.twiddle(n1, n2))
+    return jnp.asarray(t.real.astype(np.float32)), jnp.asarray(t.imag.astype(np.float32))
+
+
+def dft_real_stages(
+    xr: jax.Array, xi: jax.Array | None, axis: int, plan: Sequence[int]
+) -> tuple[jax.Array, jax.Array]:
+    """DFT along ``axis`` in real arithmetic via the stage plan.
+
+    Complex tensors are carried as (re, im) pairs because the TPU MXU (and
+    Pallas) are real-valued — this mirrors the paper's observation (§VI-D)
+    that complex FFT doubles the Flow traffic vs real BPMM: each stage here is
+    4 real matmuls (3 with Karatsuba, see kernels/fft2d.py).
+    """
+    xr = jnp.moveaxis(xr, axis, -1)
+    xi = None if xi is None else jnp.moveaxis(xi, axis, -1)
+    n = xr.shape[-1]
+    plan = tuple(plan)
+    assert int(np.prod(plan)) == n, (plan, n)
+
+    def one(xr, xi, n):
+        wr, wi = _dft_mats(n)
+        dtype = xr.dtype
+        wr, wi = wr.astype(dtype), wi.astype(dtype)
+        if xi is None:
+            return xr @ wr.T, xr @ wi.T
+        return xr @ wr.T - xi @ wi.T, xr @ wi.T + xi @ wr.T
+
+    def rec(xr, xi, plan):
+        n = xr.shape[-1]
+        if len(plan) == 1:
+            return one(xr, xi, n)
+        n1, n2 = plan[0], int(np.prod(plan[1:]))
+        s = xr.shape[:-1]
+        xr = xr.reshape(*s, n1, n2)
+        xi = None if xi is None else xi.reshape(*s, n1, n2)
+        # stage 1 along n1
+        ar, ai = rec(
+            jnp.swapaxes(xr, -1, -2), None if xi is None else jnp.swapaxes(xi, -1, -2), (n1,)
+        )
+        ar, ai = jnp.swapaxes(ar, -1, -2), jnp.swapaxes(ai, -1, -2)
+        # twiddle
+        tr, ti = _twiddle_mats(n1, n2)
+        tr, ti = tr.astype(ar.dtype), ti.astype(ar.dtype)
+        br = ar * tr - ai * ti
+        bi = ar * ti + ai * tr
+        # stage 2 along n2 (tail of the plan)
+        cr, ci = rec(br, bi, plan[1:])
+        # digit reversal
+        cr = jnp.swapaxes(cr, -1, -2).reshape(*s, n)
+        ci = jnp.swapaxes(ci, -1, -2).reshape(*s, n)
+        return cr, ci
+
+    yr, yi = rec(xr, xi, plan)
+    return jnp.moveaxis(yr, -1, axis), jnp.moveaxis(yi, -1, axis)
+
+
+def fnet_mixing(
+    x: jax.Array,
+    seq_plan: Sequence[int] | None = None,
+    hid_plan: Sequence[int] | None = None,
+    max_radix: int = sd.MAX_RADIX_COMPLEX,
+) -> jax.Array:
+    """2-D FFT mixing over the last two axes (..., seq, hidden), real output.
+
+    Pure-jnp staged implementation (the XLA baseline); the hillclimbed path
+    replaces the inner transforms with the fused Pallas kernel via
+    :mod:`repro.kernels.ops`.
+    """
+    seq, hid = x.shape[-2], x.shape[-1]
+    hid_plan = tuple(hid_plan) if hid_plan else sd.plan_stages(hid, max_radix)
+    seq_plan = tuple(seq_plan) if seq_plan else sd.plan_stages(seq, max_radix)
+    yr, yi = dft_real_stages(x, None, -1, hid_plan)
+    yr, _ = dft_real_stages(yr, yi, -2, seq_plan)
+    return yr

@@ -1,0 +1,200 @@
+"""Radix-grouped butterfly — the multilayer-dataflow form, TPU-native.
+
+The paper keeps all ``log N`` butterfly stages resident in the PE array so the
+intermediate vector never returns to DDR (§IV).  On TPU the equivalent
+orchestration is to *group* the stages into two block-diagonal super-stages
+that execute back-to-back on one VMEM-resident tile:
+
+    index i = hi * b + lo,   b = 2**p,  nb = N / b
+
+    stages 1..p      (strides < b)  mix `lo` within each `hi` block
+                      -> R: (nb, b, b)   block-diagonal over hi
+    stages p+1..m    (strides >= b) mix `hi` for each fixed `lo`
+                      -> L: (b, nb, nb)  block-diagonal over lo
+
+    y[hi, lo] = sum_hi' L[lo, hi, hi'] * ( sum_lo' R[hi', lo, lo'] * x[hi', lo'] )
+
+This is exactly the Monarch factorisation (Dao et al. 2022 — the paper's ref
+[7]); Monarch ⊇ butterfly products, so grouping is lossless
+(:func:`group_butterfly_factors` converts any radix-2 stack exactly).  Each
+super-stage is a batch of dense ``b x b`` / ``nb x nb`` matmuls — MXU work —
+and the paper's intra-array element swaps become free intra-block systolic
+movement.  Strides wider than the group (paper: wider than the PE array, which
+wrap back into the same PE) become the single axis flip between the two
+einsums, with no materialised transpose (the multi-line-SPM analogue).
+
+Learnable BPMM layers parameterise (R, L) directly: ``N*(b + N/b)`` params,
+minimised at ``b = sqrt(N)`` — same O(N^1.5) family as two-stage division;
+the faithful ``2 N log N`` radix-2 stack remains available for parity runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import butterfly as bfly
+
+__all__ = [
+    "MonarchParams",
+    "split_point",
+    "init_monarch",
+    "monarch_apply",
+    "group_butterfly_factors",
+    "monarch_to_dense",
+    "monarch_param_count",
+    "monarch_flops",
+]
+
+
+class MonarchParams(NamedTuple):
+    """R: (nb, b, b) block-diag over hi; L: (b, nb, nb) block-diag over lo."""
+
+    r: jax.Array
+    l: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.r.shape[0] * self.r.shape[1]
+
+    @property
+    def b(self) -> int:
+        return self.r.shape[1]
+
+
+def split_point(n: int, max_block: int = 512) -> int:
+    """Balanced split p for N = 2**m: b = 2**p ~= sqrt(N), capped by the VMEM
+    super-stage budget (paper's single-DFG limit)."""
+    m = bfly.num_stages(n)
+    p = (m + 1) // 2
+    while (1 << p) > max_block:
+        p -= 1
+    while n // (1 << p) > max_block:
+        p += 1
+    if (1 << p) > max_block:
+        raise ValueError(f"n={n} cannot be grouped into blocks <= {max_block}")
+    return p
+
+
+def monarch_param_count(n: int, b: int) -> int:
+    nb = n // b
+    return nb * b * b + b * nb * nb
+
+
+def monarch_flops(n: int, b: int, batch: int = 1) -> int:
+    """Multiply-add FLOPs (x2) of the two grouped stages per vector."""
+    nb = n // b
+    return batch * 2 * (nb * b * b + b * nb * nb)
+
+
+def init_monarch(key: jax.Array, n: int, b: int | None = None, dtype=jnp.float32) -> MonarchParams:
+    if b is None:
+        b = 1 << split_point(n)
+    nb = n // b
+    if nb * b != n:
+        raise ValueError(f"block size {b} must divide n={n}")
+    kr, kl = jax.random.split(key)
+    # variance-preserving: each stage contracts over b (resp. nb) inputs
+    r = jax.random.normal(kr, (nb, b, b), dtype) / math.sqrt(b)
+    l = jax.random.normal(kl, (b, nb, nb), dtype) / math.sqrt(nb)
+    return MonarchParams(r, l)
+
+
+def monarch_apply(params: MonarchParams, x: jax.Array) -> jax.Array:
+    """Grouped two-super-stage apply (pure-jnp; kernel version in
+    repro.kernels.monarch_bpmm).  x: (..., N)."""
+    nb, b, _ = params.r.shape
+    xr = x.reshape(*x.shape[:-1], nb, b)
+    # super-stage R: mix lo within each hi block
+    u = jnp.einsum("hij,...hj->...hi", params.r, xr)
+    # super-stage L: mix hi for each lo (axis flip fused into the einsum —
+    # the transpose-free multi-line-SPM analogue)
+    y = jnp.einsum("jhk,...kj->...hj", params.l, u)
+    return y.reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# Exact conversion: radix-2 stack -> grouped (R, L).  Used to port faithful
+# BPMM weights onto the fused kernel and in equivalence tests.
+# --------------------------------------------------------------------------
+
+
+def _butterfly_block(w: np.ndarray, j: int, size: int) -> np.ndarray:
+    """Dense (size, size) butterfly block for global block index j of a stage
+    with stride s = size // 2."""
+    s = size // 2
+    out = np.zeros((size, size), dtype=np.asarray(w).dtype)
+    for t in range(s):
+        out[t, t] = w[j, 0, 0, t]
+        out[t, s + t] = w[j, 0, 1, t]
+        out[s + t, t] = w[j, 1, 0, t]
+        out[s + t, s + t] = w[j, 1, 1, t]
+    return out
+
+
+def group_butterfly_factors(
+    factors: Sequence[jax.Array], p: int | None = None
+) -> MonarchParams:
+    """Exactly regroup radix-2 stages 1..p into R and p+1..m into L."""
+    factors = [np.asarray(f) for f in factors]
+    n = factors[0].shape[0] * 2 * factors[0].shape[3]
+    m = bfly.num_stages(n)
+    if p is None:
+        p = split_point(n)
+    b, nb = 1 << p, n >> p
+    dtype = factors[0].dtype
+
+    # R[hi] = S_p[hi] @ ... @ S_1[hi] : stages k<=p restricted to hi block
+    r = np.broadcast_to(np.eye(b, dtype=dtype), (nb, b, b)).copy()
+    for k in range(1, p + 1):
+        w = factors[k - 1]
+        size = 1 << k
+        per = b // size  # sub-blocks of this stage inside one hi block
+        for hi in range(nb):
+            s_mat = np.zeros((b, b), dtype=dtype)
+            for jj in range(per):
+                blk = _butterfly_block(w, hi * per + jj, size)
+                s_mat[jj * size : (jj + 1) * size, jj * size : (jj + 1) * size] = blk
+            r[hi] = s_mat @ r[hi]
+
+    # L[lo] = S'_m[lo] @ ... @ S'_{p+1}[lo] : stages k>p act in hi-space with
+    # weights indexed by t = t_hi * b + lo
+    l = np.broadcast_to(np.eye(nb, dtype=dtype), (b, nb, nb)).copy()
+    for k in range(p + 1, m + 1):
+        w = factors[k - 1]
+        size_hi = 1 << (k - p)  # block size in hi-space
+        s_hi = size_hi // 2
+        blocks_hi = nb // size_hi
+        for lo in range(b):
+            s_mat = np.zeros((nb, nb), dtype=dtype)
+            for j in range(blocks_hi):
+                base = j * size_hi
+                for t_hi in range(s_hi):
+                    t = t_hi * b + lo
+                    s_mat[base + t_hi, base + t_hi] = w[j, 0, 0, t]
+                    s_mat[base + t_hi, base + s_hi + t_hi] = w[j, 0, 1, t]
+                    s_mat[base + s_hi + t_hi, base + t_hi] = w[j, 1, 0, t]
+                    s_mat[base + s_hi + t_hi, base + s_hi + t_hi] = w[j, 1, 1, t]
+            l[lo] = s_mat @ l[lo]
+
+    return MonarchParams(jnp.asarray(r), jnp.asarray(l))
+
+
+def monarch_to_dense(params: MonarchParams) -> np.ndarray:
+    """Dense (N, N) materialisation, y = W @ x convention (tests only)."""
+    nb, b, _ = params.r.shape
+    n = nb * b
+    w = np.zeros((n, n), dtype=np.asarray(params.r).dtype)
+    r, l = np.asarray(params.r), np.asarray(params.l)
+    # y[hi, lo] = sum_{hi'} L[lo, hi, hi'] sum_{lo'} R[hi', lo, lo'] x[hi', lo']
+    for hi in range(nb):
+        for lo in range(b):
+            row = np.zeros((nb, b), dtype=w.dtype)
+            for hip in range(nb):
+                row[hip, :] += l[lo, hi, hip] * r[hip, lo, :]
+            w[hi * b + lo, :] = row.reshape(-1)
+    return w

@@ -1,0 +1,43 @@
+"""Weight-matrix slicing for unequal input/output hidden sizes (paper Fig. 10).
+
+A butterfly transform is square (power of two).  Real linear layers are not:
+``W`` is ``din x dout`` with arbitrary dims.  The paper slices ``W`` into
+square pieces, decomposes each piece as butterfly matrices, multiplies each
+piece by its input slice, and sums (din > dout) or concatenates (dout > din)
+the piece products.  We generalise to the full grid case: pad both dims up to
+multiples of a power-of-two piece size ``s``, giving a ``gin x gout`` grid of
+square pieces; outputs concatenate over ``gout`` and sum over ``gin``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+__all__ = ["SlicePlan", "plan_slicing"]
+
+
+class SlicePlan(NamedTuple):
+    din: int
+    dout: int
+    piece: int  # square piece size (power of two)
+    gin: int  # input slices  (padded_din  / piece)
+    gout: int  # output slices (padded_dout / piece)
+
+    @property
+    def din_pad(self) -> int:
+        return self.gin * self.piece
+
+    @property
+    def dout_pad(self) -> int:
+        return self.gout * self.piece
+
+
+def plan_slicing(din: int, dout: int, max_piece: int = 8192) -> SlicePlan:
+    """Choose the square piece size: the largest power of two <= min(din, dout)
+    (capped), so the smaller dim needs at most one slice of padding."""
+    s = 1 << int(math.floor(math.log2(min(din, dout))))
+    s = min(s, max_piece)
+    gin = -(-din // s)
+    gout = -(-dout // s)
+    return SlicePlan(din, dout, s, gin, gout)

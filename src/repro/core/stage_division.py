@@ -1,0 +1,164 @@
+"""Multi-stage division — the paper's Cooley–Tukey scalability method (§V-B).
+
+A transform too large for one DFG (paper: > 512 real / > 256 complex points;
+here: larger than one VMEM-resident super-stage) is factored ``N = r1 * r2 *
+...`` and executed as a chain of batched small transforms with twiddle layers
+in between (paper Fig. 9).  The paper's Fig. 14 finding — *balanced* divisions
+maximise utilisation — is encoded in :func:`plan_stages`, which factors N into
+the most balanced radix tuple subject to ``max_radix``.
+
+General mixed-radix identity used (decimation in time), for ``N = N1 * N2``,
+input index ``n = N2*n1 + n2``, output index ``k = k1 + N1*k2``::
+
+    A[k1, n2] = sum_n1 x[n1, n2] * w_N1^(n1 k1)        # stage 1, along axis 0
+    B[k1, n2] = A[k1, n2] * w_N^(n2 k1)                # twiddle (FFT only)
+    X[k1, k2] = sum_n2 B[k1, n2] * w_N2^(n2 k2)        # stage 2, along axis 1
+
+and the output lives at ``(k2, k1)`` after the final digit-reversal transpose.
+Stage 1 recurses when ``len(plan) > 2``.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "factorize",
+    "plan_stages",
+    "dft_matrix",
+    "twiddle",
+    "mixed_radix_dft",
+    "stage_flops",
+]
+
+# Paper §V-B: the largest single-DFG scale on the 16-PE array.  We keep the
+# same budgets — they happen to match comfortable VMEM tile sizes too.
+MAX_RADIX_REAL = 512
+MAX_RADIX_COMPLEX = 256
+
+
+def factorize(n: int) -> list[int]:
+    """Prime factorisation (ascending)."""
+    out, d = [], 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+@lru_cache(maxsize=None)
+def plan_stages(n: int, max_radix: int = MAX_RADIX_COMPLEX) -> tuple[int, ...]:
+    """Balanced radix plan: factors of ``n``, each <= max_radix, as equal as
+    possible (paper Fig. 14: 64*64 beats 16*256 for 4K points).
+
+    Greedy: repeatedly peel the radix closest to ``n ** (1/k)`` for the
+    smallest feasible stage count ``k``.
+    """
+    if n <= max_radix:
+        return (n,)
+    primes = factorize(n)
+    if max(primes) > max_radix:
+        raise ValueError(f"{n} has prime factor {max(primes)} > max_radix {max_radix}")
+
+    # smallest feasible stage count, with backtracking: divisor structure can
+    # make k stages infeasible even when max_radix**k >= n (e.g. 3640 @ 64)
+    k = 2
+    while max_radix**k < n:
+        k += 1
+    for kk in range(k, len(primes) + 1):
+        plan = _search(n, kk, max_radix)
+        if plan is not None:
+            return tuple(sorted(plan, reverse=True))
+    raise ValueError(f"no stage division found for {n} under max_radix {max_radix}")
+
+
+def _search(remaining: int, stages: int, max_radix: int) -> tuple[int, ...] | None:
+    """Balanced-first divisor search (backtracking)."""
+    if stages == 1:
+        return (remaining,) if remaining <= max_radix else None
+    target = remaining ** (1.0 / stages)
+    cands = [
+        d
+        for d in _divisors(remaining)
+        if 1 < d <= max_radix and remaining // d <= max_radix ** (stages - 1)
+    ]
+    for d in sorted(cands, key=lambda d: abs(d - target)):
+        tail = _search(remaining // d, stages - 1, max_radix)
+        if tail is not None:
+            return (d,) + tail
+    return None
+
+
+def _divisors(n: int) -> list[int]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append(d)
+            if d != n // d:
+                out.append(n // d)
+        d += 1
+    return sorted(out)
+
+
+def dft_matrix(n: int, dtype=np.complex64) -> np.ndarray:
+    """Dense DFT matrix ``Omega_N`` of Eq. (1).  Pure numpy so it stays a
+    compile-time constant under jit."""
+    idx = np.arange(n)
+    return np.exp(-2j * np.pi * np.outer(idx, idx) / n).astype(dtype)
+
+
+def twiddle(n1: int, n2: int, dtype=np.complex64) -> np.ndarray:
+    """Twiddle ``w_N^(k1 n2)`` of shape (n1, n2) — the element-wise layer of
+    paper Fig. 9 step 3.  Pure numpy (compile-time constant)."""
+    k1 = np.arange(n1)[:, None]
+    n2i = np.arange(n2)[None, :]
+    return np.exp(-2j * np.pi * k1 * n2i / (n1 * n2)).astype(dtype)
+
+
+def mixed_radix_dft(x: jnp.ndarray, plan: Sequence[int] | None = None) -> jnp.ndarray:
+    """DFT along the last axis via the multi-stage division plan.
+
+    Pure-jnp oracle (complex); the Pallas kernel in
+    :mod:`repro.kernels.fft2d` implements the fused two-stage version in real
+    arithmetic.  Matches ``jnp.fft.fft`` for any composite smooth N.
+    """
+    n = x.shape[-1]
+    if plan is None:
+        plan = plan_stages(n)
+    plan = tuple(plan)
+    assert int(np.prod(plan)) == n, (plan, n)
+    x = x.astype(jnp.complex64)
+    if len(plan) == 1:
+        return x @ dft_matrix(n).T
+
+    n1, n2 = plan[0], int(np.prod(plan[1:]))
+    xr = x.reshape(*x.shape[:-1], n1, n2)
+    # stage 1: DFT_n1 along the n1 axis (recursion bottoms out in a matmul)
+    a = jnp.swapaxes(mixed_radix_dft(jnp.swapaxes(xr, -1, -2), (n1,)), -1, -2)
+    # twiddle
+    a = a * twiddle(n1, n2)
+    # stage 2: DFT_n2 along the n2 axis (recurse with the tail plan)
+    b = mixed_radix_dft(a, plan[1:])
+    # digit reversal: output index k = k1 + n1 * k2  ->  lay out as (k2, k1)
+    return jnp.swapaxes(b, -1, -2).reshape(*x.shape[:-1], n)
+
+
+def stage_flops(n: int, plan: Sequence[int], complex_valued: bool = True) -> int:
+    """Model FLOPs of the staged transform: sum over stages of batched dense
+    small matmuls + twiddle layers.  Complex mul = 6 flops, add = 2."""
+    mul, add = (6, 2) if complex_valued else (2, 1)  # fused mul-add counted apart
+    total = 0
+    for r in plan:
+        per = (n // r) * (r * r * (mul + add))  # (n/r) transforms of r x r
+        total += per
+    total += (len(plan) - 1) * n * mul  # twiddle layers
+    return total

@@ -1,0 +1,144 @@
+"""Fused two-stage DFT kernel (Pallas, TPU target) — paper Fig. 9 on VMEM.
+
+One grid step executes the whole multi-stage division pipeline for a token
+tile with the working set VMEM-resident: reshape ``n = n1 * n2``, stage-1
+DFT_n1 (MXU matmul contracting the n1 axis), twiddle (VPU element-wise),
+stage-2 DFT_n2 (MXU matmul contracting the n2 axis), digit-reversal transpose
+in-register.  The two stages contract *different* axes of the same resident
+tile — the transpose-free multi-line-SPM trick (§V-C) expressed through
+dot_general dimension numbers instead of SRAM bank lines.
+
+Complex arithmetic is carried as (re, im) planes (TPU is real-valued);
+complex x complex matmuls use the 3-multiplication Karatsuba split, so a full
+complex stage costs 3 real MXU passes instead of 4 — this is where the
+paper's observation that FFT doubles Flow traffic vs real BPMM (§VI-D) turns
+into an actual FLOP saving on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import stage_division as sd
+
+__all__ = ["dft_two_stage", "pick_token_tile"]
+
+
+def pick_token_tile(n: int, complex_in: bool) -> int:
+    planes = 6 + (2 if complex_in else 1)
+    per_token = planes * n * 4
+    budget = 12 * 1024 * 1024
+    tile = budget // max(per_token, 1)
+    for cand in (256, 128, 64, 32, 16, 8):
+        if cand <= tile:
+            return cand
+    return 8
+
+
+def _cmatmul(ar, ai, wr, wi):
+    """(ar + i·ai) @ (wr + i·wi) with Karatsuba (3 real matmuls)."""
+    m1 = jnp.dot(ar, wr, preferred_element_type=jnp.float32)
+    m2 = jnp.dot(ai, wi, preferred_element_type=jnp.float32)
+    m3 = jnp.dot(ar + ai, wr + wi, preferred_element_type=jnp.float32)
+    return m1 - m2, m3 - m1 - m2
+
+
+def _kernel(
+    xr_ref, xi_ref, w1r_ref, w1i_ref, tr_ref, ti_ref, w2r_ref, w2i_ref,
+    yr_ref, yi_ref, *, n1: int, n2: int, complex_in: bool,
+):
+    tb = xr_ref.shape[0]
+    xr = xr_ref[...].astype(jnp.float32).reshape(tb, n1, n2)
+    w1r = w1r_ref[...].astype(jnp.float32)
+    w1i = w1i_ref[...].astype(jnp.float32)
+    # ---- stage 1: contract the n1 axis:  a[t, k1, m] = sum_n x[t, n, m] W1[n, k1]
+    xrt = jnp.swapaxes(xr, 1, 2).reshape(tb * n2, n1)
+    if complex_in:
+        xi = xi_ref[...].astype(jnp.float32).reshape(tb, n1, n2)
+        xit = jnp.swapaxes(xi, 1, 2).reshape(tb * n2, n1)
+        ar, ai = _cmatmul(xrt, xit, w1r, w1i)
+    else:
+        ar = jnp.dot(xrt, w1r, preferred_element_type=jnp.float32)
+        ai = jnp.dot(xrt, w1i, preferred_element_type=jnp.float32)
+    ar = jnp.swapaxes(ar.reshape(tb, n2, n1), 1, 2)  # (tb, k1, n2)
+    ai = jnp.swapaxes(ai.reshape(tb, n2, n1), 1, 2)
+    # ---- twiddle (element-wise, fused on the VMEM-resident tile)
+    tr = tr_ref[...].astype(jnp.float32)
+    ti = ti_ref[...].astype(jnp.float32)
+    br = ar * tr - ai * ti
+    bi = ar * ti + ai * tr
+    # ---- stage 2: contract the n2 axis:  c[t, k1, k2] = sum_m b[t, k1, m] W2[m, k2]
+    w2r = w2r_ref[...].astype(jnp.float32)
+    w2i = w2i_ref[...].astype(jnp.float32)
+    cr, ci = _cmatmul(br.reshape(tb * n1, n2), bi.reshape(tb * n1, n2), w2r, w2i)
+    cr = cr.reshape(tb, n1, n2)
+    ci = ci.reshape(tb, n1, n2)
+    # ---- digit reversal: k = k1 + n1*k2  ->  layout (k2, k1), in-register
+    yr_ref[...] = jnp.swapaxes(cr, 1, 2).reshape(tb, n1 * n2).astype(yr_ref.dtype)
+    yi_ref[...] = jnp.swapaxes(ci, 1, 2).reshape(tb, n1 * n2).astype(yi_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n1", "n2", "token_tile", "interpret")
+)
+def dft_two_stage(
+    xr: jax.Array,
+    xi: jax.Array | None,
+    *,
+    n1: int,
+    n2: int,
+    token_tile: int | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """DFT along the last axis of (T, n1*n2) -> (re, im), fused two stages."""
+    t, n = xr.shape
+    assert n == n1 * n2, (n, n1, n2)
+    complex_in = xi is not None
+    tb = token_tile or pick_token_tile(n, complex_in)
+    if t % tb:
+        raise ValueError(f"token count {t} not divisible by tile {tb}")
+
+    w1 = np.asarray(sd.dft_matrix(n1))  # applied as x @ W1 (symmetric)
+    w2 = np.asarray(sd.dft_matrix(n2))
+    tw = np.asarray(sd.twiddle(n1, n2))
+    consts = [
+        jnp.asarray(w1.real), jnp.asarray(w1.imag),
+        jnp.asarray(tw.real), jnp.asarray(tw.imag),
+        jnp.asarray(w2.real), jnp.asarray(w2.imag),
+    ]
+    if xi is None:
+        xi_in = jnp.zeros((1, 1), xr.dtype)  # placeholder, never read
+        xi_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    else:
+        xi_in = xi
+        xi_spec = pl.BlockSpec((tb, n), lambda i: (i, 0))
+
+    grid = (t // tb,)
+    const_specs = [
+        pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+        pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+        pl.BlockSpec((n1, n2), lambda i: (0, 0)),
+        pl.BlockSpec((n1, n2), lambda i: (0, 0)),
+        pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+        pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+    ]
+    yr, yi = pl.pallas_call(
+        functools.partial(_kernel, n1=n1, n2=n2, complex_in=complex_in),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0)), xi_spec, *const_specs],
+        out_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, n), xr.dtype),
+            jax.ShapeDtypeStruct((t, n), xr.dtype),
+        ],
+        interpret=interpret,
+    )(xr, xi_in, *consts)
+    return yr, yi

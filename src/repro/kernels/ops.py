@@ -1,0 +1,132 @@
+"""Jit'd dispatch wrappers: model-facing entry points for the Pallas kernels.
+
+On the CPU host (this container) kernels run in ``interpret=True`` mode; on a
+real TPU backend they compile through Mosaic.  The wrappers own padding,
+layout flattening, and the multi-stage recursion that chains kernel calls for
+transforms larger than one fused two-stage tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stage_division as sd
+from repro.kernels import fft2d, monarch_bpmm
+
+__all__ = ["monarch_linear", "dft_1d", "fnet_mixing_kernel"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def monarch_linear(params, spec, x: jax.Array) -> jax.Array:
+    """Fused-kernel execution of a (possibly sliced) monarch linear layer.
+
+    Same contract as ``repro.core.api._apply_monarch`` — used when
+    ``spec.impl == "monarch_kernel"``.
+    """
+    sp = spec.slices
+    r, l = params["r"], params["l"]
+    gout, gin, nb, b, _ = r.shape
+    lead = x.shape[:-1]
+    t = int(np.prod(lead)) if lead else 1
+    xf = _pad_axis(x.reshape(t, x.shape[-1]), -1, sp.din_pad)
+    xf = xf.reshape(t, gin, nb, b)
+
+    tile = monarch_bpmm.pick_token_tile(gin, nb, b)
+    tpad = -(-t // tile) * tile
+    xf = _pad_axis(xf, 0, tpad)
+    y = monarch_bpmm.monarch_bpmm(
+        xf, r.astype(x.dtype), l.astype(x.dtype), token_tile=tile, interpret=_interpret()
+    )
+    y = y[:t].reshape(t, sp.dout_pad)[:, : sp.dout]
+    return y.reshape(*lead, sp.dout)
+
+
+def dft_1d(
+    xr: jax.Array,
+    xi: jax.Array | None = None,
+    plan: tuple[int, ...] | None = None,
+    max_radix: int = sd.MAX_RADIX_COMPLEX,
+) -> tuple[jax.Array, jax.Array]:
+    """DFT along the last axis, chaining fused two-stage kernel calls per the
+    multi-stage division plan (paper §V-B: a 64K transform = two 256-point
+    kernel stages swapped through HBM — here the >2-stage tail recurses)."""
+    n = xr.shape[-1]
+    plan = tuple(plan) if plan else sd.plan_stages(n, max_radix)
+    assert int(np.prod(plan)) == n
+
+    lead = xr.shape[:-1]
+    t = int(np.prod(lead)) if lead else 1
+    xr2 = xr.reshape(t, n)
+    xi2 = None if xi is None else xi.reshape(t, n)
+
+    yr, yi = _dft_rec(xr2, xi2, plan)
+    return yr.reshape(*lead, n), yi.reshape(*lead, n)
+
+
+def _dft_rec(xr, xi, plan):
+    t, n = xr.shape
+    if len(plan) <= 2:
+        n1, n2 = (plan[0], 1) if len(plan) == 1 else plan
+        if n2 == 1:  # single dense stage
+            w = np.asarray(sd.dft_matrix(n))
+            wr, wi = jnp.asarray(w.real), jnp.asarray(w.imag)
+            if xi is None:
+                return xr @ wr, xr @ wi
+            return xr @ wr - xi @ wi, xr @ wi + xi @ wr
+        tile = fft2d.pick_token_tile(n, xi is not None)
+        tpad = -(-t // tile) * tile
+        xr_p = _pad_axis(xr, 0, tpad)
+        xi_p = None if xi is None else _pad_axis(xi, 0, tpad)
+        yr, yi = fft2d.dft_two_stage(
+            xr_p, xi_p, n1=n1, n2=n2, token_tile=tile, interpret=_interpret()
+        )
+        return yr[:t], yi[:t]
+
+    # outer stage n1 in XLA, inner (tail) stages through the fused kernel
+    n1, ntail = plan[0], n // plan[0]
+    xr_r = xr.reshape(t, n1, ntail)
+    xi_r = None if xi is None else xi.reshape(t, n1, ntail)
+    w = np.asarray(sd.dft_matrix(n1))
+    wr, wi = jnp.asarray(w.real), jnp.asarray(w.imag)
+    # contract n1:  a[t, k1, m] = sum_n x[t, n, m] W[n, k1]
+    if xi_r is None:
+        ar = jnp.einsum("tnm,nk->tkm", xr_r, wr)
+        ai = jnp.einsum("tnm,nk->tkm", xr_r, wi)
+    else:
+        ar = jnp.einsum("tnm,nk->tkm", xr_r, wr) - jnp.einsum("tnm,nk->tkm", xi_r, wi)
+        ai = jnp.einsum("tnm,nk->tkm", xr_r, wi) + jnp.einsum("tnm,nk->tkm", xi_r, wr)
+    tw = np.asarray(sd.twiddle(n1, ntail))
+    twr, twi = jnp.asarray(tw.real), jnp.asarray(tw.imag)
+    br = ar * twr - ai * twi
+    bi = ar * twi + ai * twr
+    cr, ci = _dft_rec(br.reshape(t * n1, ntail), bi.reshape(t * n1, ntail), plan[1:])
+    cr = jnp.swapaxes(cr.reshape(t, n1, ntail), 1, 2).reshape(t, n)
+    ci = jnp.swapaxes(ci.reshape(t, n1, ntail), 1, 2).reshape(t, n)
+    return cr, ci
+
+
+def fnet_mixing_kernel(x: jax.Array, max_radix: int = sd.MAX_RADIX_COMPLEX) -> jax.Array:
+    """Kernel-backed FNet mixing: Re(DFT_seq(DFT_hidden(x))) over the last two
+    axes — the AT-all replacement running through the fused pipeline."""
+    seq, hid = x.shape[-2], x.shape[-1]
+    yr, yi = dft_1d(x, None, sd.plan_stages(hid, max_radix))
+    yr2 = jnp.swapaxes(yr, -1, -2)
+    yi2 = jnp.swapaxes(yi, -1, -2)
+    zr, _ = dft_1d(yr2, yi2, sd.plan_stages(seq, max_radix))
+    return jnp.swapaxes(zr, -1, -2)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["monarch_bpmm_ref", "dft_two_stage_ref"]
+
+
+def monarch_bpmm_ref(x: jax.Array, r: jax.Array, l: jax.Array) -> jax.Array:
+    """x: (T, gin, nb, b); r: (gout, gin, nb, b, b); l: (gout, gin, b, nb, nb)
+    -> y: (T, gout, nb, b).  Sum over gin, fp32 accumulate."""
+    xf = x.astype(jnp.float32)
+    u = jnp.einsum("oghij,tghj->toghi", r.astype(jnp.float32), xf)
+    y = jnp.einsum("ogjhk,togkj->toghj", l.astype(jnp.float32), u)
+    return y.sum(axis=2).astype(x.dtype)
+
+
+def dft_two_stage_ref(
+    xr: jax.Array, xi: jax.Array | None
+) -> tuple[jax.Array, jax.Array]:
+    """Full DFT along the last axis via jnp.fft (complex64)."""
+    x = xr.astype(jnp.complex64)
+    if xi is not None:
+        x = x + 1j * xi.astype(jnp.complex64)
+    y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(xr.dtype), jnp.imag(y).astype(xr.dtype)

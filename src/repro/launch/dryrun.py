@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module must fit, and the
+cost/memory/collective numbers feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --multi-pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES, Shape, applicable, batch_specs
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import abstract_cache, cache_shardings
+from repro.launch.train import (
+    TrainHParams,
+    abstract_train_state,
+    make_train_step,
+    train_state_shardings,
+)
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def lower_cell(cfg: ModelConfig, shape: Shape, mesh, hp: TrainHParams | None = None):
+    """Lower one (arch x shape) on `mesh`; returns the jax Lowered object and
+    the analytic model-flops for the step."""
+    rt = M.resolve_runtime(cfg, mesh)
+    hp = hp or TrainHParams()
+    bspecs = batch_specs(cfg, shape)
+    b_shard = shd.data_shardings(bspecs, mesh)
+
+    if shape.kind == "train":
+        step, st_sh, b_sh = make_train_step(cfg, mesh, hp, batch_example=bspecs)
+        ab_state = abstract_train_state(cfg, hp)
+        lowered = step.lower(ab_state, bspecs)
+        tokens = shape.batch * shape.seq
+        mf = M.model_flops_per_token(cfg, shape.seq, mode="train") * tokens
+        return lowered, mf
+
+    pspecs = M.build_specs(cfg)
+    p_shard = shd.sharding_tree(pspecs, mesh, M.rules_for(cfg))
+    ab_params = M.abstract_params(cfg)
+
+    if shape.kind == "prefill":
+        logit_shard = shd.sharding_for((shape.batch, cfg.vocab), ("batch", None), mesh)
+        fn = jax.jit(
+            lambda params, b: tf.prefill(params, cfg, b, rt, cache_len=shape.seq),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logit_shard, cache_shardings(cfg, mesh, shape.batch, shape.seq)),
+        )
+        lowered = fn.lower(ab_params, bspecs)
+        tokens = shape.batch * shape.seq
+        mf = M.model_flops_per_token(cfg, shape.seq, mode="fwd") * tokens
+        return lowered, mf
+
+    # decode: one token against a seq_len-deep cache
+    c_shard = cache_shardings(cfg, mesh, shape.batch, shape.seq)
+    ab_caches = abstract_cache(cfg, shape.batch, shape.seq)
+    rep = NamedSharding(mesh, P())
+    logit_shard = shd.sharding_for((shape.batch, cfg.vocab), ("batch", None), mesh)
+    fn = jax.jit(
+        lambda params, caches, toks, pos: tf.decode_step(params, cfg, caches, toks, pos, rt),
+        in_shardings=(p_shard, c_shard, b_shard["tokens"], rep),
+        out_shardings=(logit_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    toks = bspecs["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = fn.lower(ab_params, ab_caches, toks, pos)
+    mf = M.decode_flops_per_token(cfg, shape.seq) * shape.batch
+    return lowered, mf
+
+
+def _probe_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
+    """k-period unrolled cost-probe variant of cfg."""
+    import dataclasses
+
+    period = len(cfg.period_slots)
+    kw = dict(
+        n_layers=k * period,
+        unroll_layers=True,
+        grad_accum=1,
+    )
+    if cfg.family == "encdec" and cfg.n_enc_layers:
+        kw["n_enc_layers"] = max(1, cfg.n_enc_layers * k * period // cfg.n_layers)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _probe_cost(cfg: ModelConfig, shape: Shape, mesh, k: int) -> dict:
+    lowered, _ = lower_cell(_probe_cfg(cfg, k), shape, mesh)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = analysis.collective_bytes(text)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["total"]),
+        "coll_by_kind": {kk: coll[kk] for kk in
+                         ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")},
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    reduced: bool = False,
+    cfg_override: ModelConfig | None = None,
+    lower_only: bool = False,
+    probes: bool = True,
+) -> dict:
+    cfg = cfg_override or registry.get(arch, reduced=reduced)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": M.count_params(cfg),
+    }
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.monotonic()
+    try:
+        # --- 1. the real (scanned) module: compile-proof + memory analysis
+        lowered, model_flops = lower_cell(cfg, shape, mesh)
+        t_lower = time.monotonic() - t0
+        if lower_only:
+            rec.update(status="lowered", t_lower_s=round(t_lower, 1), chips=chips)
+            return rec
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        full_coll = analysis.collective_bytes(compiled.as_text())
+
+        rl = None
+        p1 = p2 = None
+        if probes:
+            # --- 2. unrolled probes: per-period cost slope (XLA counts while
+            # bodies once — ModelConfig.unroll_layers doc)
+            p1 = _probe_cost(cfg, shape, mesh, 1)
+            p2 = _probe_cost(cfg, shape, mesh, 2)
+            n = cfg.n_periods
+            extrap = {
+                key: p1[key] + (n - 1) * (p2[key] - p1[key])
+                for key in ("flops", "bytes", "coll")
+            }
+            rl = analysis.Roofline(
+                flops=extrap["flops"],
+                hbm_bytes=extrap["bytes"],
+                coll_bytes=extrap["coll"],
+                chips=chips,
+                model_flops=model_flops / chips,
+            )
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 1),
+            t_compile_s=round(t_compile, 1),
+            chips=chips,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_est_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            collectives_full_module=dict(full_coll),
+            probe_1p=p1,
+            probe_2p=p2,
+            roofline=rl.row() if rl else None,
+        )
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to report
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = registry.ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out_f = open(args.out, "a") if args.out else None
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(
+                    arch, shape, mp, reduced=args.reduced,
+                    lower_only=args.lower_only, probes=not args.no_probes,
+                )
+                line = json.dumps(rec)
+                print(_summ0(rec), flush=True)
+                if out_f:
+                    out_f.write(line + "\n")
+                    out_f.flush()
+    if out_f:
+        out_f.close()
+
+
+def _summ0(rec: dict) -> str:
+    if rec["status"] == "ok" and rec.get("roofline"):
+        return _summ(rec)
+    if rec["status"] == "ok":
+        return (f"[ok] {rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} "
+                f"compile={rec['t_compile_s']:.0f}s "
+                f"mem/dev={rec['memory']['peak_est_bytes']/2**30:.2f}GiB (no probes)")
+    if rec["status"] == "lowered":
+        return f"[lowered] {rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} t={rec['t_lower_s']}s"
+    if rec["status"] == "skipped":
+        return f"[skip] {rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} {rec['reason']}"
+    return json.dumps(rec)[:800]
+
+
+def _summ(rec: dict) -> str:
+    r = rec["roofline"]
+    m = rec["memory"]
+    return (
+        f"[ok] {rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} "
+        f"compile={rec['t_compile_s']:.0f}s mem/dev={m['peak_est_bytes']/2**30:.2f}GiB "
+        f"t_comp={r['t_compute']*1e3:.2f}ms t_mem={r['t_memory']*1e3:.2f}ms "
+        f"t_coll={r['t_collective']*1e3:.2f}ms dom={r['dominant']} "
+        f"useful={r['useful_ratio']:.2f} roofline={r['roofline_fraction']:.2%}"
+    )
+
+
+if __name__ == "__main__":
+    main()

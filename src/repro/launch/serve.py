@@ -1,0 +1,109 @@
+"""Batched serving runtime: jit'd prefill + decode with sharded KV caches.
+
+`make_serve_fns` builds the two compiled entry points the dry-run exercises
+(`prefill_32k` lowers prefill; `decode_32k` / `long_500k` lower decode_step);
+`ServeLoop` is a minimal continuous-batching driver used by the example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+__all__ = ["make_serve_fns", "cache_shardings", "abstract_cache", "ServeLoop"]
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
+    return shd.sharding_tree(tf.cache_specs(cfg, batch, cache_len), mesh, M.rules_for(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    specs = tf.cache_specs(cfg, batch, cache_len)
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt),
+        specs,
+        is_leaf=lambda x: isinstance(x, shd.ParamSpec),
+    )
+
+
+def make_serve_fns(cfg: ModelConfig, mesh: Mesh, *, batch: int, cache_len: int):
+    """Returns (prefill_fn(params, batch_dict) -> (logits, caches),
+    decode_fn(params, caches, tokens, pos) -> (logits, caches))."""
+    rt = M.resolve_runtime(cfg, mesh)
+    pspecs = M.build_specs(cfg)
+    p_shard = shd.sharding_tree(pspecs, mesh, M.rules_for(cfg))
+    c_shard = cache_shardings(cfg, mesh, batch, cache_len)
+    tok_shard = NamedSharding(mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names)))
+    rep = NamedSharding(mesh, P())
+
+    prefill = jax.jit(
+        lambda params, b: tf.prefill(params, cfg, b, rt, cache_len=cache_len),
+        in_shardings=(p_shard, None),
+        out_shardings=(tok_shard, c_shard),
+        static_argnums=(),
+    )
+    decode = jax.jit(
+        lambda params, caches, tokens, pos: tf.decode_step(
+            params, cfg, caches, tokens, pos, rt
+        ),
+        in_shardings=(p_shard, c_shard, tok_shard, rep),
+        out_shardings=(tok_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    return prefill, decode
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeLoop:
+    """Minimal batched decode loop (static batch, greedy sampling).
+
+    Requests are padded into one batch, prefilled once, then decoded
+    step-by-step; finished requests exit with their generations.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, params, *, batch: int, cache_len: int):
+        self.cfg, self.mesh, self.params = cfg, mesh, params
+        self.batch, self.cache_len = batch, cache_len
+        self.prefill_fn, self.decode_fn = make_serve_fns(
+            cfg, mesh, batch=batch, cache_len=cache_len
+        )
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        assert len(requests) <= self.batch
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+        with self.mesh:
+            logits, caches = self.prefill_fn(self.params, {"tokens": jnp.asarray(toks)})
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            max_new = max(r.max_new for r in requests)
+            for j in range(max_new):
+                for i, r in enumerate(requests):
+                    if j < r.max_new:
+                        r.generated.append(int(nxt[i]))
+                if j == max_new - 1:
+                    break
+                logits, caches = self.decode_fn(
+                    self.params, caches, nxt[:, None], jnp.int32(plen + j)
+                )
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return requests

@@ -1,0 +1,151 @@
+"""Model configuration — one dataclass covers all ten assigned families.
+
+Every architecture is expressed as a periodic layer pattern (``period_slots``)
+so dense, MoE, SSM, hybrid and enc-dec stacks share one scan-based runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from repro.core.api import ButterflyPolicy
+
+__all__ = ["ModelConfig", "Slot"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    """One layer slot inside the repeating period."""
+
+    mixer: Literal["attn", "mamba", "fft"]  # token mixing sublayer
+    ffn: Literal["dense", "moe", "none"] = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_period: int = 1  # MoE FFN every `moe_period` layers (jamba: 2)
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_group: int = 512  # group-local dispatch size (GShard-style)
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    attn_period: int = 0  # hybrid: one attn layer per `attn_period` (jamba: 8)
+    # encoder-decoder (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 0  # stub-frontend sequence length (whisper: 1500 frames)
+    # vlm (internvl2)
+    n_img_tokens: int = 0  # stub patch embeddings prepended to the text
+    # non-causal encoder-style stack (fabnet / vanilla benchmarks)
+    causal: bool = True
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "swiglu"  # swiglu | gelu
+    # the paper's technique
+    butterfly: ButterflyPolicy = ButterflyPolicy()
+    # execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    attn_chunk: int = 2048
+    norm_eps: float = 1e-5
+    grad_accum: int = 1  # microbatches per train step
+    # cost-probe mode: python-unrolled periods instead of lax.scan.  XLA's
+    # cost_analysis counts while-loop bodies ONCE (verified), so the dry-run
+    # extrapolates per-period costs from small unrolled probes while the real
+    # (scanned) module provides the compile/memory proof.
+    unroll_layers: bool = False
+    # ---- performance levers (EXPERIMENTS.md §Perf) ----
+    # pure_dp: no tensor parallelism — batch shards over the model axis too
+    # (right answer for small models where TP collectives dwarf compute)
+    pure_dp: bool = False
+    # boundary_mode: "sp" shards layer-boundary activations over the model
+    # axis (Megatron sequence parallelism); "replicated" keeps them local so
+    # weight-grad contractions never cross the model axis (classic Megatron —
+    # kills the giant f32 dW all-reduces XLA schedules under SP)
+    boundary_mode: str = "sp"
+    # f32 softmax in attention scores (baseline) vs bf16 (halves the
+    # attention-score HBM traffic, the dominant memory term at 32k)
+    attn_f32_softmax: bool = True
+    # cast f32 master params to the compute dtype *before* the FSDP
+    # all-gathers (sharded-local cast), so parameter collectives move bf16:
+    # halves the dominant collective term of every FSDP train cell
+    cast_params_once: bool = False
+
+    # ---------------- derived ----------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def period_slots(self) -> tuple[Slot, ...]:
+        """The repeating layer pattern; n_layers must divide evenly."""
+        if self.family == "ssm":
+            return (Slot("mamba", "dense"),)
+        if self.family == "hybrid":
+            period = self.attn_period or 8
+            slots = []
+            for i in range(period):
+                mixer = "attn" if i == 0 else "mamba"
+                ffn = (
+                    "moe"
+                    if self.n_experts and (i % self.moe_period == self.moe_period - 1)
+                    else "dense"
+                )
+                slots.append(Slot(mixer, ffn))
+            return tuple(slots)
+        mixer = "fft" if self.butterfly.fft_attention and not self.causal else "attn"
+        if self.n_experts and self.moe_period == 1:
+            return (Slot(mixer, "moe"),)
+        if self.n_experts:
+            slots = [
+                Slot(mixer, "moe" if i % self.moe_period == self.moe_period - 1 else "dense")
+                for i in range(self.moe_period)
+            ]
+            return tuple(slots)
+        return (Slot(mixer, "dense"),)
+
+    @property
+    def n_periods(self) -> int:
+        n = len(self.period_slots)
+        assert self.n_layers % n == 0, (self.n_layers, n)
+        return self.n_layers // n
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def validate(self) -> None:
+        assert self.d_model > 0 and self.n_layers > 0 and self.vocab > 0
+        if any(s.mixer == "attn" for s in self.period_slots):
+            assert self.n_heads > 0 and self.head_dim > 0
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        if any(s.mixer == "mamba" for s in self.period_slots):
+            assert self.ssm_state > 0 and self.d_inner % self.ssm_head_dim == 0
+        _ = self.n_periods

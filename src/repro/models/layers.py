@@ -1,0 +1,185 @@
+"""Shared layers: norms, RoPE, chunked-causal flash attention, decode attention.
+
+The train/prefill attention is *prefix-chunked*: queries are processed in
+static chunks, each attending exactly its causal KV prefix (plus a masked
+diagonal block).  This keeps compiled FLOPs within ~(1 + 1/n_chunks) of the
+causal optimum — important because the roofline terms are read off the
+compiled HLO — and bounds transient score memory to (chunk x prefix).
+Sliding windows (mixtral) drop whole out-of-window chunks statically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import constrain
+
+__all__ = [
+    "Runtime",
+    "rms_norm",
+    "layer_norm",
+    "apply_rope",
+    "flash_attention",
+    "decode_attention",
+    "silu",
+    "gelu",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Per-run execution context: mesh + resolved parallelism modes."""
+
+    mesh: Mesh | None = None
+    attn_mode: str = "tp"  # tp (head-sharded) | cp (sequence-sharded)
+    moe_mode: str = "ep"  # ep | tp
+    interpret: bool = True  # Pallas kernels in interpret mode (CPU host)
+    rules: dict | None = None  # sharding-rule override (pure_dp lever)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + w.astype(x.dtype))
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * (1.0 + w.astype(x.dtype)) + b.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 1e4
+) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)
+    if cos.ndim == 2:  # (S, half) -> broadcast batch/heads
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+def _q_axes(rt: Runtime, chunk_len: int, heads: int):
+    tp = 1
+    if rt.mesh is not None and "model" in rt.mesh.axis_names:
+        tp = dict(zip(rt.mesh.axis_names, rt.mesh.devices.shape))["model"]
+    if rt.attn_mode == "tp" and heads % max(tp, 1) == 0:
+        return ("batch", None, "tp", None)
+    if chunk_len % max(tp, 1) == 0:
+        return ("batch", "seq", None, None)
+    return ("batch", None, None, None)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk: int = 2048,
+    rt: Runtime = Runtime(),
+    f32_softmax: bool = True,
+) -> jax.Array:
+    """Prefix-chunked attention.  q: (B, S, H, hd); k, v: (B, S, KV, hd)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = math.gcd(s, chunk)
+    n_chunks = s // chunk
+
+    q = constrain(q, _q_axes(rt, s, h), rt.mesh, rt.rules)
+    # KV must stay seq-local: a seq-sharded KV would force the SPMD partitioner
+    # into full-replication copies at every chunk slice.  KV heads shard over
+    # `model` when divisible, otherwise replicate (GQA KV replication).
+    k = constrain(k, ("batch", None, "tp", None), rt.mesh, rt.rules)
+    v = constrain(v, ("batch", None, "tp", None), rt.mesh, rt.rules)
+    qr = q.reshape(b, s, kvh, g, hd)
+    outs = []
+    for i in range(n_chunks):  # static unroll: exact per-chunk causal prefixes
+        q_i = jax.lax.slice_in_dim(qr, i * chunk, (i + 1) * chunk, axis=1)
+        end = (i + 1) * chunk if causal else k.shape[1]
+        start = 0
+        if window is not None and causal:
+            # earliest key needed by the FIRST query row of this chunk
+            start = max(0, i * chunk - window + 1)
+            start = (start // chunk) * chunk  # align to chunk (conservative)
+        k_i = jax.lax.slice_in_dim(k, start, end, axis=1)
+        v_i = jax.lax.slice_in_dim(v, start, end, axis=1)
+        scores = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q_i, k_i, preferred_element_type=jnp.float32
+        ) * scale
+        if not f32_softmax:  # §Perf lever: halve the score HBM traffic
+            scores = scores.astype(q.dtype)
+        neg = jnp.asarray(-1e30 if f32_softmax else -3e38, scores.dtype)
+        if causal or window is not None:
+            qpos = i * chunk + jnp.arange(chunk)
+            kpos = start + jnp.arange(end - start)
+            mask = jnp.ones((chunk, end - start), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(mask[None, None, None], scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out_i = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_i)
+        outs.append(out_i.reshape(b, chunk, h, hd))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array | None = None,
+) -> jax.Array:
+    """One-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, H, hd); caches: (B, S, KV, hd).  Scores stay tiny, so plain
+    einsum + softmax — XLA inserts the cross-shard max/sum reductions when
+    the cache's S axis is sharded (flash-decode style combine).
+    """
+    b, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if cur_len is not None:
+        mask = jnp.arange(k_cache.shape[1]) < cur_len
+        scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
+    return out.reshape(b, h, hd)

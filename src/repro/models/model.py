@@ -1,0 +1,119 @@
+"""Model registry + runtime resolution + analytic FLOP/param accounting."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import api
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.layers import Runtime
+
+__all__ = [
+    "resolve_runtime",
+    "build_specs",
+    "init_params",
+    "abstract_params",
+    "param_shardings",
+    "count_params",
+    "model_flops_per_token",
+]
+
+
+def rules_for(cfg: ModelConfig) -> dict | None:
+    return shd.RULES_PURE_DP if cfg.pure_dp else None
+
+
+def resolve_runtime(cfg: ModelConfig, mesh: Mesh | None) -> Runtime:
+    """Pick attention/MoE parallelism from divisibility (DESIGN.md §5)."""
+    tp = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    attn_mode = "tp" if (cfg.n_heads == 0 or cfg.n_heads % max(tp, 1) == 0) else "cp"
+    moe_mode = "ep" if (cfg.n_experts == 0 or cfg.n_experts % max(tp, 1) == 0) else "tp"
+    return Runtime(mesh=mesh, attn_mode=attn_mode, moe_mode=moe_mode,
+                   rules=rules_for(cfg))
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    cfg.validate()
+    return tf.model_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return shd.init_tree(build_specs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return shd.abstract_tree(build_specs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return shd.sharding_tree(build_specs(cfg), mesh, rules_for(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = build_specs(cfg)
+    return sum(
+        math.prod(s.shape)
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, shd.ParamSpec))
+    )
+
+
+def _active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE counts top_k of n_experts)."""
+    total = count_params(cfg)
+    if not cfg.n_experts:
+        return total
+    specs = build_specs(cfg)
+    expert_leaves = 0
+    for j, slot in enumerate(cfg.period_slots):
+        sl = specs["layers"][f"slot{j:02d}"]
+        if "moe" in sl:
+            for name in ("w1", "w2", "w3"):
+                if name in sl["moe"]:
+                    sub = sl["moe"][name]
+                    leaves = jax.tree.leaves(
+                        sub, is_leaf=lambda x: isinstance(x, shd.ParamSpec)
+                    )
+                    expert_leaves += sum(math.prod(s.shape) for s in leaves)
+    active_frac = cfg.top_k / max(cfg.n_experts, 1)
+    return int(total - expert_leaves * (1 - active_frac))
+
+
+def model_flops_per_token(cfg: ModelConfig, seq_len: int, mode: str = "train") -> float:
+    """MODEL_FLOPS: 6·N_active per token (train) or 2·N_active (fwd) plus the
+    exact attention term (4·S·d per layer halved for causal).  This is the
+    'useful FLOPs' numerator of the roofline table."""
+    n_active = _active_params(cfg)
+    # embedding + head are matmul-active; embeddings gather is not a matmul
+    n_active -= cfg.vocab * cfg.d_model  # the gather table
+    mult = 6 if mode == "train" else 2
+    per_tok = mult * n_active
+    # attention score+value flops: 2 * 2 * S_kv_avg * (n_heads*head_dim)
+    n_attn_layers = sum(1 for s in cfg.period_slots for _ in [0] if s.mixer == "attn")
+    n_attn_layers = n_attn_layers * cfg.n_periods
+    if n_attn_layers and cfg.n_heads:
+        s_kv = seq_len / 2 if cfg.causal else seq_len
+        if cfg.sliding_window:
+            s_kv = min(s_kv, cfg.sliding_window)
+        attn = 2 * 2 * s_kv * cfg.n_heads * cfg.head_dim * n_attn_layers
+        per_tok += (3 if mode == "train" else 1) * attn
+    return per_tok
+
+
+def decode_flops_per_token(cfg: ModelConfig, cache_len: int) -> float:
+    """MODEL_FLOPS for one decode step per sequence (fwd only, full KV read)."""
+    n_active = _active_params(cfg) - cfg.vocab * cfg.d_model
+    per_tok = 2 * n_active
+    n_attn_layers = sum(1 for s in cfg.period_slots if s.mixer == "attn") * cfg.n_periods
+    if n_attn_layers and cfg.n_heads:
+        s_kv = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        per_tok += 2 * 2 * s_kv * cfg.n_heads * cfg.head_dim * n_attn_layers
+    return per_tok

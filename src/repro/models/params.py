@@ -1,0 +1,69 @@
+"""ParamSpec builders for (butterfly-able) linear layers.
+
+Single source of truth for shape + init + sharding of every linear site, so
+the paper's technique is a pure config swap: the spec tree changes shape but
+the call site (`apply_linear_p`) stays identical.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.core import api, butterfly as bfly
+from repro.distributed.sharding import ParamSpec
+
+__all__ = ["linear_specs", "apply_linear_p"]
+
+
+def linear_specs(
+    lspec: api.LinearSpec,
+    axes: tuple[str | None, str | None] = ("fsdp", "tp"),
+    scale: float | None = None,
+) -> dict:
+    """ParamSpec tree for one linear site under the configured impl."""
+    out: dict = {}
+    if lspec.impl == "dense":
+        out["w"] = ParamSpec((lspec.din, lspec.dout), axes, scale=scale)
+    elif lspec.impl in ("monarch", "monarch_kernel"):
+        sp = lspec.slices
+        b = lspec.block
+        nb = sp.piece // b
+        gin_scale = 1.0 / math.sqrt(sp.gin)
+        out["r"] = ParamSpec(
+            (sp.gout, sp.gin, nb, b, b),
+            (None, None, "tp", None, "fsdp"),
+            scale=1.0 / math.sqrt(b),
+        )
+        out["l"] = ParamSpec(
+            (sp.gout, sp.gin, b, nb, nb),
+            (None, None, "tp", "fsdp", None),
+            scale=gin_scale / math.sqrt(nb),
+        )
+    elif lspec.impl == "radix2":
+        sp = lspec.slices
+        shapes = bfly.stage_shapes(sp.piece)
+        st_scale = math.sqrt(0.5) * sp.gin ** (-0.5 / len(shapes))
+        for i, shape in enumerate(shapes):
+            out[f"s{i:02d}"] = ParamSpec(
+                (sp.gout, sp.gin, *shape),
+                (None, None, "tp", None, None, "fsdp"),
+                scale=st_scale,
+            )
+    else:
+        raise ValueError(lspec.impl)
+    if lspec.use_bias:
+        out["b"] = ParamSpec((lspec.dout,), (None,), init="zeros")
+    return out
+
+
+def apply_linear_p(params: dict, lspec: api.LinearSpec, x: jax.Array) -> jax.Array:
+    """Adapter from the spec-tree param layout to core.api.apply_linear."""
+    if lspec.impl == "radix2":
+        n = bfly.num_stages(lspec.slices.piece)
+        p = {"stages": [params[f"s{i:02d}"] for i in range(n)]}
+        if "b" in params:
+            p["b"] = params["b"]
+        return api.apply_linear(p, lspec, x)
+    return api.apply_linear(params, lspec, x)

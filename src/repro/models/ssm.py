@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked matmul formulation: within each length-Q chunk the output is a masked
+(CBᵀ ⊙ decay) matmul (MXU-friendly quadratic-in-Q work); across chunks a
+short `lax.scan` carries the (H, N, P) state recurrence.  Decode is the O(1)
+single-step recurrence on the cached state.  The short causal conv1d is
+expressed as k shifted adds (train) / a (k-1)-deep cached window (decode).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.distributed.sharding import ParamSpec
+from repro.models import params as pp
+from repro.models.config import ModelConfig
+from repro.models.layers import Runtime, rms_norm, silu
+
+__all__ = [
+    "mamba_specs",
+    "apply_mamba",
+    "mamba_decode",
+    "ssd_reference",
+]
+
+
+def _proj_dims(cfg: ModelConfig) -> tuple[int, int]:
+    """in_proj: D -> [z (d_inner), xBC (d_inner + 2*G*N), dt (H)]."""
+    d_xbc = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return cfg.d_inner + d_xbc + cfg.ssm_heads, d_xbc
+
+
+def mamba_specs(cfg: ModelConfig, n_periods: int) -> dict:
+    d_all, d_xbc = _proj_dims(cfg)
+    in_spec = api.LinearSpec(cfg.d_model, d_all, cfg.butterfly.for_site("qkv"))
+    out_spec = api.LinearSpec(cfg.d_inner, cfg.d_model, cfg.butterfly.for_site("out"))
+
+    def stack(tree):
+        return {
+            k: ParamSpec((n_periods, *s.shape), (None,) + s.axes, s.init, s.scale)
+            for k, s in tree.items()
+        }
+
+    return {
+        "in_proj": stack(pp.linear_specs(in_spec)),
+        "out_proj": stack(pp.linear_specs(out_spec, axes=("tp", "fsdp"))),
+        "conv_w": ParamSpec((n_periods, cfg.ssm_conv, d_xbc), (None, None, "tp"), scale=0.5),
+        "conv_b": ParamSpec((n_periods, d_xbc), (None, "tp"), init="zeros"),
+        "a_log": ParamSpec((n_periods, cfg.ssm_heads), (None, None), init="zeros"),
+        "dt_bias": ParamSpec((n_periods, cfg.ssm_heads), (None, None), init="zeros"),
+        "d_skip": ParamSpec((n_periods, cfg.ssm_heads), (None, None), init="ones"),
+        "norm_w": ParamSpec((n_periods, cfg.d_inner), (None, None), init="zeros"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_i, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_i]
+    xbc = zxbcdt[..., d_i : d_i + d_i + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d over (B, L, C) via k shifted adds."""
+    k = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return silu(out + b)
+
+
+def _ssd_chunked(cfg: ModelConfig, x, dt, a, bmat, cmat, init_state=None):
+    """SSD scan.  x: (B,L,H,P); dt: (B,L,H) f32; a: (H,) f32 negative;
+    bmat/cmat: (B,L,G,N).  Returns (y (B,L,H,P), final_state (B,H,N,P) f32)."""
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    q = min(cfg.ssm_chunk, l)
+    if l % q:
+        q = math.gcd(l, q)
+    nc = l // q
+
+    da = dt * a  # (B, L, H) log-decay per step (negative)
+    cs = jnp.cumsum(da.reshape(b, nc, q, h), axis=2)  # inclusive cum log-decay
+    csr = cs.reshape(b, nc, q, g, rep)
+
+    xc = x.reshape(b, nc, q, g, rep, p)
+    bc = bmat.reshape(b, nc, q, g, n)
+    cc = cmat.reshape(b, nc, q, g, n)
+    dt_c = dt.reshape(b, nc, q, g, rep)
+
+    # ---- intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cs_i - cs_j) dt_j x_j
+    cb = jnp.einsum("bcigN,bcjgN->bcgij", cc, bc, preferred_element_type=jnp.float32)
+    ldecay = csr[:, :, :, :, :, None] - jnp.moveaxis(csr, 2, -1)[:, :, None]
+    mask = jnp.tril(jnp.ones((q, q), bool))  # i >= j
+    lmat = jnp.where(mask[None, None, :, None, None, :], jnp.exp(ldecay), 0.0)
+    m = jnp.moveaxis(cb, 2, 3)[:, :, :, :, None, :] * lmat  # (b,nc,i,g,rep,j)
+    m = m * jnp.moveaxis(dt_c, 2, -1)[:, :, None]  # * dt_j
+    y_intra = jnp.einsum("bcigrj,bcjgrp->bcigrp", m.astype(x.dtype), xc)
+
+    # ---- chunk states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    sdecay = jnp.exp(cs[:, :, -1:, :] - cs).reshape(b, nc, q, g, rep)
+    wx = xc * (sdecay * dt_c)[..., None].astype(x.dtype)
+    s_chunk = jnp.einsum("bcjgN,bcjgrp->bcgrNp", bc, wx)
+
+    # ---- inter-chunk recurrence (short scan over chunks)
+    tot = jnp.exp(cs[:, :, -1, :]).reshape(b, nc, g, rep)
+
+    def step(s_prev, inp):
+        s_c, t_c = inp
+        new = s_prev * t_c[..., None, None] + s_c.astype(jnp.float32)
+        return new, s_prev
+
+    init = (
+        jnp.zeros((b, g, rep, n, p), jnp.float32)
+        if init_state is None
+        else init_state.reshape(b, g, rep, n, p).astype(jnp.float32)
+    )
+    s_fin, s_prevs = jax.lax.scan(
+        step, init, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(tot, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (b,nc,g,rep,N,p)
+
+    # ---- inter-chunk contribution: y_i += exp(cs_i) C_i . S_prev
+    y_inter = jnp.einsum(
+        "bcigN,bcgrNp->bcigrp", cc, s_prevs.astype(x.dtype)
+    ) * jnp.exp(csr)[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, s_fin.reshape(b, h, n, p)
+
+
+def _pre_ssd(mparams, cfg, x):
+    in_spec = api.LinearSpec(cfg.d_model, _proj_dims(cfg)[0], cfg.butterfly.for_site("qkv"))
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = pp.apply_linear_p(mparams["in_proj"], in_spec, x)
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(
+        xbc_raw, mparams["conv_w"].astype(x.dtype), mparams["conv_b"].astype(x.dtype)
+    )
+    xs = xbc[..., : cfg.d_inner]
+    bmat = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(*x.shape[:2], g, n)
+    cmat = xbc[..., cfg.d_inner + g * n :].reshape(*x.shape[:2], g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + mparams["dt_bias"])
+    a = -jnp.exp(mparams["a_log"].astype(jnp.float32))
+    return z, xbc_raw, xs, bmat, cmat, dt, a
+
+
+def _post_ssd(mparams, cfg, x, y, xh, z):
+    out_spec = api.LinearSpec(cfg.d_inner, cfg.d_model, cfg.butterfly.for_site("out"))
+    y = y + xh * mparams["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], cfg.d_inner)
+    y = rms_norm(y * silu(z), mparams["norm_w"], cfg.norm_eps)
+    return pp.apply_linear_p(mparams["out_proj"], out_spec, y)
+
+
+def apply_mamba(
+    mparams: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime, *, return_cache=False
+):
+    """Full-sequence mamba2 block.  x: (B, L, D).
+    With return_cache: (out, {conv (B,k-1,C), state (B,H,N,P)})."""
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_raw, xs, bmat, cmat, dt, a = _pre_ssd(mparams, cfg, x)
+    xh = xs.reshape(*x.shape[:2], h, p)
+    y, state = _ssd_chunked(cfg, xh, dt, a, bmat, cmat)
+    out = _post_ssd(mparams, cfg, x, y, xh, z)
+    if return_cache:
+        conv_cache = xbc_raw[:, -(cfg.ssm_conv - 1) :, :]
+        return out, {"conv": conv_cache, "state": state}
+    return out
+
+
+def mamba_decode(mparams: dict, cfg: ModelConfig, x: jax.Array, cache: dict, rt: Runtime):
+    """Single-token step.  x: (B, 1, D); cache: {conv (B,k-1,C), state (B,H,N,P)}."""
+    in_spec = api.LinearSpec(cfg.d_model, _proj_dims(cfg)[0], cfg.butterfly.for_site("qkv"))
+    out_spec = api.LinearSpec(cfg.d_inner, cfg.d_model, cfg.butterfly.for_site("out"))
+    g, n, h, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = pp.apply_linear_p(mparams["in_proj"], in_spec, x)
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)  # (B,1,*)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xbc_raw], axis=1)  # (B,k,C)
+    w = mparams["conv_w"].astype(x.dtype)
+    conv_out = silu(
+        jnp.einsum("bkc,kc->bc", window, w)[:, None] + mparams["conv_b"].astype(x.dtype)
+    )  # (B,1,C)
+    new_conv = window[:, 1:]
+
+    xs = conv_out[..., : cfg.d_inner]
+    bmat = conv_out[:, 0, cfg.d_inner : cfg.d_inner + g * n].reshape(-1, g, n)
+    cmat = conv_out[:, 0, cfg.d_inner + g * n :].reshape(-1, g, n)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + mparams["dt_bias"])  # (B,H)
+    a = -jnp.exp(mparams["a_log"].astype(jnp.float32))
+
+    xh = xs[:, 0].reshape(-1, h, p).astype(jnp.float32)  # (B,H,P)
+    state = cache["state"].astype(jnp.float32)  # (B,H,N,P)
+    rep = h // g
+    bm = jnp.repeat(bmat, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    cm = jnp.repeat(cmat, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dtv * a)  # (B,H)
+    new_state = state * decay[..., None, None] + jnp.einsum(
+        "bhN,bhp->bhNp", bm * dtv[..., None], xh
+    )
+    y = jnp.einsum("bhN,bhNp->bhp", cm, new_state) + xh * mparams["d_skip"][:, None]
+    y = y.reshape(-1, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * silu(z), mparams["norm_w"], cfg.norm_eps)
+    out = pp.apply_linear_p(mparams["out_proj"], out_spec, y)
+    return out, {"conv": new_conv, "state": new_state}
+
+
+def ssd_reference(x, dt, a, bmat, cmat, init_state=None):
+    """Naive sequential SSD recurrence (oracle for tests).
+
+    x: (B,L,H,P); dt: (B,L,H); a: (H,); bmat/cmat: (B,L,G,N).
+    S_t = exp(dt_t a) S_{t-1} + dt_t B_t x_t^T ;  y_t = C_t . S_t
+    """
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    bm = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)  # (B,L,H,N)
+    cm = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(s, inp):
+        xt, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * a)  # (B,H)
+        s = s * decay[..., None, None] + jnp.einsum("bhN,bhp->bhNp", b_t * dt_t[..., None], xt)
+        y = jnp.einsum("bhN,bhNp->bhp", c_t, s)
+        return s, y
+
+    init = (
+        jnp.zeros((b, h, n, p), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    s_fin, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            jnp.moveaxis(xf, 1, 0),
+            jnp.moveaxis(dtf, 1, 0),
+            jnp.moveaxis(bm, 1, 0),
+            jnp.moveaxis(cm, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_fin

@@ -1,0 +1,559 @@
+"""Periodic-pattern transformer runtime: dense / MoE / SSM / hybrid / enc-dec.
+
+One scan-over-periods executes every architecture: a period is a static tuple
+of layer slots (attn|mamba|fft mixer x dense|moe|none FFN), parameters are
+stacked over periods, and caches mirror the slot structure.  The paper's
+technique enters exclusively through the linear-layer specs (BPMM sites) and
+the `fft` mixer slot (AT-all replacement), so dense baselines and butterfly
+variants share every line of runtime code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core.fft_mixing import fnet_mixing
+from repro.distributed.sharding import ParamSpec, constrain
+from repro.models import params as pp
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig, Slot
+from repro.models.layers import (
+    Runtime,
+    apply_rope,
+    decode_attention,
+    flash_attention,
+    gelu,
+    layer_norm,
+    rms_norm,
+    silu,
+)
+
+Params = dict[str, Any]
+
+# --------------------------------------------------------------------------
+# Param specs
+# --------------------------------------------------------------------------
+
+
+def _norm_specs(cfg: ModelConfig, n_periods: int) -> dict:
+    out = {"w": ParamSpec((n_periods, cfg.d_model), (None, None), init="zeros")}
+    if cfg.norm == "layernorm":
+        out["b"] = ParamSpec((n_periods, cfg.d_model), (None, None), init="zeros")
+    return out
+
+
+def _stack(tree: dict, n: int) -> dict:
+    return {
+        k: ParamSpec((n, *s.shape), (None,) + s.axes, s.init, s.scale)
+        for k, s in tree.items()
+    }
+
+
+def attn_specs(cfg: ModelConfig, n_periods: int) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    bias = cfg.qkv_bias
+    sq = api.LinearSpec(d, h * hd, cfg.butterfly.for_site("qkv"), use_bias=bias)
+    sk = api.LinearSpec(d, kv * hd, cfg.butterfly.for_site("qkv"), use_bias=bias)
+    so = api.LinearSpec(h * hd, d, cfg.butterfly.for_site("out"))
+    out = {
+        "wq": _stack(pp.linear_specs(sq), n_periods),
+        "wk": _stack(pp.linear_specs(sk), n_periods),
+        "wv": _stack(pp.linear_specs(sk), n_periods),
+        "wo": _stack(pp.linear_specs(so, axes=("tp", "fsdp")), n_periods),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((n_periods, hd), (None, None), init="zeros")
+        out["k_norm"] = ParamSpec((n_periods, hd), (None, None), init="zeros")
+    return out
+
+
+def ffn_specs(cfg: ModelConfig, n_periods: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    s1 = api.LinearSpec(d, f, cfg.butterfly.for_site("ffn"))
+    s2 = api.LinearSpec(f, d, cfg.butterfly.for_site("ffn"))
+    out = {
+        "w1": _stack(pp.linear_specs(s1), n_periods),
+        "w2": _stack(pp.linear_specs(s2, axes=("tp", "fsdp")), n_periods),
+    }
+    if cfg.act == "swiglu":
+        out["w3"] = _stack(pp.linear_specs(s1), n_periods)
+    return out
+
+
+def slot_specs(cfg: ModelConfig, slot: Slot, n_periods: int, cross: bool = False) -> dict:
+    out: dict = {"mixer_norm": _norm_specs(cfg, n_periods)}
+    if slot.mixer == "attn":
+        out["attn"] = attn_specs(cfg, n_periods)
+    elif slot.mixer == "mamba":
+        out["mamba"] = ssm_mod.mamba_specs(cfg, n_periods)
+    if cross:
+        out["cross_norm"] = _norm_specs(cfg, n_periods)
+        out["cross"] = attn_specs(cfg, n_periods)
+    if slot.ffn != "none":
+        out["ffn_norm"] = _norm_specs(cfg, n_periods)
+        if slot.ffn == "moe":
+            rt_mode = "ep"  # spec sharding falls back automatically if E % tp != 0
+            out["moe"] = moe_mod.moe_specs(cfg, n_periods, rt_mode)
+        else:
+            out["ffn"] = ffn_specs(cfg, n_periods)
+    return out
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    specs: dict = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("fsdp", "tp"), scale=1.0),
+        "head": ParamSpec((cfg.d_model, cfg.vocab), ("fsdp", "tp")),
+        "final_norm": _norm_specs(cfg, 1),
+        "layers": {
+            f"slot{j:02d}": slot_specs(cfg, s, cfg.n_periods)
+            for j, s in enumerate(cfg.period_slots)
+        },
+    }
+    if cfg.family == "encdec":
+        enc_slot = Slot("fft" if cfg.butterfly.fft_attention else "attn", "dense")
+        specs["encoder"] = {
+            "layers": {
+                "slot00": slot_specs(cfg, enc_slot, cfg.n_enc_layers)
+            },
+            "final_norm": _norm_specs(cfg, 1),
+        }
+        # decoder slots get cross-attention
+        specs["layers"] = {
+            f"slot{j:02d}": slot_specs(cfg, s, cfg.n_periods, cross=True)
+            for j, s in enumerate(cfg.period_slots)
+        }
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Apply
+# --------------------------------------------------------------------------
+
+
+def _norm(nparams: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, nparams["w"], nparams["b"], cfg.norm_eps)
+    return rms_norm(x, nparams["w"], cfg.norm_eps)
+
+
+def _proj(aparams, cfg, x, name, heads):
+    site = {"wq": "qkv", "wk": "qkv", "wv": "qkv", "wo": "out"}[name]
+    bias = cfg.qkv_bias and name != "wo"
+    if name == "wo":
+        spec = api.LinearSpec(cfg.n_heads * cfg.head_dim, cfg.d_model, cfg.butterfly.for_site(site))
+    else:
+        spec = api.LinearSpec(cfg.d_model, heads * cfg.head_dim, cfg.butterfly.for_site(site), use_bias=bias)
+    return pp.apply_linear_p(aparams[name], spec, x)
+
+
+def apply_attention(
+    aparams: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    rt: Runtime,
+    *,
+    causal: bool,
+    positions: jax.Array,
+    mode: str,  # train | encode | prefill | decode
+    cache: dict | None = None,
+    pos: jax.Array | None = None,
+    kv_source: jax.Array | None = None,
+    is_cross: bool = False,
+    use_rope: bool = True,
+):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = _proj(aparams, cfg, x, "wq", h).reshape(b, s, h, hd)
+    if is_cross and mode == "decode":
+        k_new = v_new = None  # cross-attention KV lives in the cache
+    else:
+        src = kv_source if is_cross else x
+        k_new = _proj(aparams, cfg, src, "wk", kv).reshape(b, src.shape[1], kv, hd)
+        v_new = _proj(aparams, cfg, src, "wv", kv).reshape(b, src.shape[1], kv, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, aparams["q_norm"], cfg.norm_eps)
+        if k_new is not None:
+            k_new = rms_norm(k_new, aparams["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if k_new is not None and not is_cross:
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and pos is not None
+        if not is_cross:  # self-attention: append the token's kv at pos
+            cache_len = cache["k"].shape[1]
+            wpos = pos % cache_len if cfg.sliding_window else pos
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), wpos, axis=1
+            )
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), wpos, axis=1
+            )
+            new_cache = {"k": kc, "v": vc}
+            cur = None if cfg.sliding_window else jnp.minimum(pos + 1, cache_len)
+            out = decode_attention(q[:, 0], kc, vc, cur)
+        else:  # cross-attention: static KV from the encoder pass
+            new_cache = cache
+            out = decode_attention(q[:, 0], cache["k"], cache["v"], None)
+        out = out[:, None]
+    else:
+        win = cfg.sliding_window if causal else None
+        out = flash_attention(
+            q, k_new, v_new, causal=causal and not is_cross,
+            window=win, chunk=cfg.attn_chunk, rt=rt,
+            f32_softmax=cfg.attn_f32_softmax,
+        )
+        if mode == "prefill":
+            kc, vc = k_new, v_new
+            win = cfg.sliding_window
+            if not is_cross and win and kc.shape[1] > win:
+                # keep only the ring window — otherwise the layer scan stacks
+                # the full-seq KV for every layer before the final slice
+                # (found via the 2-pod mixtral prefill: 120 GiB of temps)
+                kc, vc = kc[:, -win:], vc[:, -win:]
+            new_cache = {"k": kc, "v": vc}
+
+    out = _proj(aparams, cfg, out.reshape(b, s, h * hd), "wo", h)
+    return out, new_cache
+
+
+def apply_ffn(fparams: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    s1 = api.LinearSpec(cfg.d_model, cfg.d_ff, cfg.butterfly.for_site("ffn"))
+    s2 = api.LinearSpec(cfg.d_ff, cfg.d_model, cfg.butterfly.for_site("ffn"))
+    h = pp.apply_linear_p(fparams["w1"], s1, x)
+    if cfg.act == "swiglu":
+        h = silu(h) * pp.apply_linear_p(fparams["w3"], s1, x)
+    else:
+        h = gelu(h)
+    return pp.apply_linear_p(fparams["w2"], s2, h)
+
+
+def apply_slot(
+    slot: Slot,
+    sparams: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    rt: Runtime,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache: dict | None = None,
+    pos: jax.Array | None = None,
+    enc_out: jax.Array | None = None,
+    causal: bool = True,
+):
+    """One layer: pre-norm mixer + (optional cross-attn) + pre-norm FFN."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    hmix = _norm(sparams["mixer_norm"], cfg, x)
+    if slot.mixer == "attn":
+        mix, c = apply_attention(
+            sparams["attn"], cfg, hmix, rt, causal=causal, positions=positions,
+            mode=mode, cache=None if cache is None else cache.get("attn"), pos=pos,
+        )
+        if c is not None:
+            new_cache["attn"] = c
+    elif slot.mixer == "mamba":
+        if mode == "decode":
+            mix, c = ssm_mod.mamba_decode(sparams["mamba"], cfg, hmix, cache["mamba"], rt)
+            new_cache["mamba"] = c
+        elif mode == "prefill":
+            mix, c = ssm_mod.apply_mamba(sparams["mamba"], cfg, hmix, rt, return_cache=True)
+            new_cache["mamba"] = c
+        else:
+            mix = ssm_mod.apply_mamba(sparams["mamba"], cfg, hmix, rt)
+    elif slot.mixer == "fft":
+        mix = fnet_mixing(hmix)  # AT-all replacement: parameter-free token mixing
+    else:
+        raise ValueError(slot.mixer)
+    x = x + mix
+
+    if "cross" in sparams and (enc_out is not None or mode == "decode"):
+        hx = _norm(sparams["cross_norm"], cfg, x)
+        cmix, cc = apply_attention(
+            sparams["cross"], cfg, hx, rt, causal=False, positions=positions,
+            mode=mode, cache=None if cache is None else cache.get("cross"), pos=pos,
+            kv_source=enc_out, is_cross=True, use_rope=False,
+        )
+        if cc is not None:
+            new_cache["cross"] = cc
+        x = x + cmix
+
+    if slot.ffn != "none":
+        hffn = _norm(sparams["ffn_norm"], cfg, x)
+        if slot.ffn == "moe":
+            y, aux = moe_mod.apply_moe(
+                sparams["moe"], cfg, hffn, rt, dropless=(mode != "train")
+            )
+        else:
+            y = apply_ffn(sparams["ffn"], cfg, hffn)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _boundary(x, rt, cfg=None):
+    s = x.shape[1]
+    tp = 1
+    if rt.mesh is not None and "model" in rt.mesh.axis_names:
+        tp = dict(zip(rt.mesh.axis_names, rt.mesh.devices.shape))["model"]
+    sp = cfg is None or cfg.boundary_mode == "sp"
+    axes = ("batch", "seq" if sp and s % max(tp, 1) == 0 and s > 1 else None, None)
+    return constrain(x, axes, rt.mesh, rt.rules)
+
+
+def run_stack(
+    layer_params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    rt: Runtime,
+    *,
+    slots: tuple[Slot, ...],
+    mode: str,
+    positions: jax.Array,
+    caches: dict | None = None,  # stacked (n_periods, ...) per slot
+    pos: jax.Array | None = None,
+    enc_out: jax.Array | None = None,
+    causal: bool = True,
+):
+    """Scan the periodic layer pattern.  Returns (x, new_caches, aux_sum)."""
+
+    def body(carry, per):
+        x, aux = carry
+        p_params, p_cache = per
+        new_cache = {}
+        for j, slot in enumerate(slots):
+            key = f"slot{j:02d}"
+            x = _boundary(x, rt, cfg)
+            x, c, a = apply_slot(
+                slot, p_params[key], cfg, x, rt, mode=mode, positions=positions,
+                cache=None if p_cache is None else p_cache[key], pos=pos,
+                enc_out=enc_out, causal=causal,
+            )
+            new_cache[key] = c
+            aux = aux + a
+        return (x, aux), new_cache
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll_layers:  # cost-probe mode: see ModelConfig.unroll_layers
+        n = jax.tree.leaves(layer_params)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        outs = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], layer_params)
+            c_i = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            carry, nc = body(carry, (p_i, c_i))
+            outs.append(nc)
+        (x, aux) = carry
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs) if outs else {}
+        return x, new_caches, aux
+
+    if caches is None:
+        (x, aux), new_caches = jax.lax.scan(
+            lambda c, p: body(c, (p, None)), (x, jnp.zeros((), jnp.float32)), layer_params
+        )
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (layer_params, caches)
+        )
+    return x, new_caches, aux
+
+
+# --------------------------------------------------------------------------
+# Top level: embed -> stack -> head
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array, rt: Runtime):
+    # cast-then-gather: the distributed gather (and its psum) moves bf16, not
+    # the f32 master copy
+    table = params["embed"].astype(cfg.dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def run_encoder(params: Params, cfg: ModelConfig, frames: jax.Array, rt: Runtime):
+    """Stub-frontend encoder (whisper): frames are precomputed embeddings."""
+    x = frames.astype(cfg.dtype)
+    enc_slot = Slot("fft" if cfg.butterfly.fft_attention else "attn", "dense")
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = run_stack(
+        params["encoder"]["layers"], cfg, x, rt, slots=(enc_slot,),
+        mode="encode", positions=positions, causal=False,
+    )
+    nf = jax.tree.map(lambda a: a[0], params["encoder"]["final_norm"])
+    return _norm(nf, cfg, x)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    rt: Runtime,
+    *,
+    mode: str = "train",
+):
+    """Returns (logits, aux).  batch: tokens (B,S) [+ img_embeds | frames]."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, rt)
+    if cfg.n_img_tokens and "img_embeds" in batch:
+        x = jnp.concatenate([batch["img_embeds"].astype(x.dtype), x], axis=1)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = run_encoder(params, cfg, batch["frames"], rt)
+    positions = jnp.arange(x.shape[1])
+    x = _boundary(x, rt, cfg)
+    x, _, aux = run_stack(
+        params["layers"], cfg, x, rt, slots=cfg.period_slots, mode=mode,
+        positions=positions, enc_out=enc_out, causal=cfg.causal,
+    )
+    nf = jax.tree.map(lambda a: a[0], params["final_norm"])
+    x = _norm(nf, cfg, x)
+    if cfg.n_img_tokens and "img_embeds" in batch:
+        x = x[:, batch["img_embeds"].shape[1] :]
+    logits = x @ params["head"].astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, rt: Runtime):
+    """Cross entropy without materialising f32 full-vocab tensors.
+
+    Logits stay in the activation dtype; the exp-sum accumulates in f32
+    *inside* the reduction (fused convert), and the label logit is gathered
+    per-token before upcasting — the backward pass then scatters a bf16 (not
+    f32) cotangent.  This halves+ the dominant memory-roofline term of every
+    train cell (found via the qwen3 dry-run probe: three 2.3 GiB f32 copies).
+    """
+    logits, aux = forward(params, cfg, batch, rt, mode="train")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - lmax  # activation dtype
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1, dtype=jnp.float32)
+    lse = jnp.log(sumexp) + lmax[..., 0].astype(jnp.float32)
+    ll = jnp.take_along_axis(shifted, jnp.maximum(labels, 0)[..., None], axis=-1)
+    ll = ll[..., 0].astype(jnp.float32) + lmax[..., 0].astype(jnp.float32)
+    nll = (lse - ll) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / ntok
+    zloss = 1e-4 * ((lse * mask) ** 2).sum() / ntok
+    total = loss + zloss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "zloss": zloss, "aux": aux, "ntok": ntok}
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, batch: dict, rt: Runtime, cache_len: int
+):
+    """Run the prompt, return (last-token logits, caches padded to cache_len)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, rt)
+    if cfg.n_img_tokens and "img_embeds" in batch:
+        x = jnp.concatenate([batch["img_embeds"].astype(x.dtype), x], axis=1)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = run_encoder(params, cfg, batch["frames"], rt)
+    positions = jnp.arange(x.shape[1])
+    x = _boundary(x, rt, cfg)
+    x, caches, _ = run_stack(
+        params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="prefill",
+        positions=positions, enc_out=enc_out, causal=cfg.causal,
+    )
+    nf = jax.tree.map(lambda a: a[0], params["final_norm"])
+    x = _norm(nf, cfg, x)
+    logits = x[:, -1] @ params["head"].astype(x.dtype)
+    caches = _pad_kv_caches(caches, cfg, cache_len)
+    return logits, caches
+
+
+def _pad_kv_caches(caches, cfg: ModelConfig, cache_len: int):
+    def fix(slot_cache):
+        out = {}
+        for name, c in slot_cache.items():
+            if name in ("attn",) and c:
+                k, v = c["k"], c["v"]
+                tgt = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+                if k.shape[2] < tgt:
+                    padw = [(0, 0), (0, 0), (0, tgt - k.shape[2]), (0, 0), (0, 0)]
+                    k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+                elif k.shape[2] > tgt:
+                    k, v = k[:, :, -tgt:], v[:, :, -tgt:]
+                out[name] = {"k": k, "v": v}
+            else:
+                out[name] = c
+        return out
+
+    return {key: fix(slot) for key, slot in caches.items()}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """ParamSpec tree for the decode caches (dry-run stand-ins + shardings).
+
+    Mirrors exactly the structure `run_stack(mode="prefill")` emits, stacked
+    over periods.  Attention KV caches shard (batch -> data, seq -> model);
+    mamba states shard heads over model when divisible.
+    """
+    n = cfg.n_periods
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    klen = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    out: dict = {}
+    for j, slot in enumerate(cfg.period_slots):
+        sc: dict = {}
+        if slot.mixer == "attn":
+            kvspec = ParamSpec(
+                (n, batch, klen, kv, hd), (None, "batch", "seq", "tp", None)
+            )
+            sc["attn"] = {"k": kvspec, "v": kvspec}
+        elif slot.mixer == "mamba":
+            d_xbc = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            sc["mamba"] = {
+                "conv": ParamSpec(
+                    (n, batch, cfg.ssm_conv - 1, d_xbc), (None, "batch", None, "tp")
+                ),
+                "state": ParamSpec(
+                    (n, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                    (None, "batch", "tp", None, None),
+                ),
+            }
+        if cfg.family == "encdec":
+            ckv = ParamSpec(
+                (n, batch, cfg.enc_seq, kv, hd), (None, "batch", "seq", "tp", None)
+            )
+            sc["cross"] = {"k": ckv, "v": ckv}
+        out[f"slot{j:02d}"] = sc
+    return out
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    caches: dict,
+    tokens: jax.Array,
+    pos: jax.Array,
+    rt: Runtime,
+):
+    """One token for the whole batch.  tokens: (B, 1); pos: scalar int32."""
+    x = embed_tokens(params, cfg, tokens, rt)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    x, new_caches, _ = run_stack(
+        params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="decode",
+        positions=positions, caches=caches, pos=pos, causal=cfg.causal,
+    )
+    nf = jax.tree.map(lambda a: a[0], params["final_norm"])
+    x = _norm(nf, cfg, x)
+    logits = x[:, 0] @ params["head"].astype(x.dtype)
+    return logits, new_caches

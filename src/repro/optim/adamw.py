@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping and optional bf16 moments (for >300B
+models the optimizer state halves; stochastic-rounding-free bf16 moments are
+accurate enough at our betas)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # float32 | bfloat16
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, opt_state, params, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = opt_state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32) * scale
+        mu_f = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        step = (mu_f / c1) / (jnp.sqrt(nu_f / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu_f.astype(mdt), nu_f.astype(mdt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    flat_p = jax.tree.leaves(params)
+    news = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [x[0] for x in news])
+    new_mu = jax.tree.unflatten(treedef, [x[1] for x in news])
+    new_nu = jax.tree.unflatten(treedef, [x[2] for x in news])
+    return (
+        new_params,
+        {"mu": new_mu, "nu": new_nu, "count": count},
+        {"grad_norm": gnorm, "clip_scale": scale},
+    )

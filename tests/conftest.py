@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run owns the 512-device override).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

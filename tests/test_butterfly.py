@@ -1,0 +1,98 @@
+"""Core butterfly math: FFT equivalence, grouping exactness, param counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import butterfly as bf, monarch as mo, stage_division as sd
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 64, 128])
+def test_fft_factors_equal_dft(n):
+    """B_m ... B_1 P == DFT_N (paper Eq. 4)."""
+    x = np.random.randn(3, n).astype(np.float32) + 1j * np.random.randn(3, n).astype(np.float32)
+    perm = bf.bit_reversal_permutation(n)
+    fac = bf.fft_butterfly_factors(n)
+    y = np.asarray(bf.apply_butterfly(fac, jnp.asarray(x[:, perm].astype(np.complex64))))
+    ref = np.fft.fft(x, axis=-1)
+    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("n", [8, 32, 64])
+def test_staged_apply_matches_dense(n):
+    fac = bf.init_butterfly(jax.random.PRNGKey(n), n)
+    w = bf.butterfly_to_dense(fac)
+    x = np.random.randn(5, n).astype(np.float32)
+    y1 = np.asarray(bf.apply_butterfly(fac, jnp.asarray(x)))
+    np.testing.assert_allclose(y1, x @ w.T, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [16, 32, 64, 256])
+def test_monarch_grouping_exact(n):
+    """Grouping radix-2 stages into (R, L) is lossless (Monarch ⊇ butterfly)."""
+    fac = bf.init_butterfly(jax.random.PRNGKey(n), n)
+    mp = mo.group_butterfly_factors(fac)
+    x = np.random.randn(4, n).astype(np.float32)
+    y1 = np.asarray(bf.apply_butterfly(fac, jnp.asarray(x)))
+    y2 = np.asarray(mo.monarch_apply(mp, jnp.asarray(x)))
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4 * np.abs(y1).max())
+
+
+def test_monarch_grouped_fft():
+    n = 64
+    fac = bf.fft_butterfly_factors(n)
+    mp = mo.group_butterfly_factors(fac)
+    x = np.random.randn(2, n).astype(np.complex64)
+    perm = bf.bit_reversal_permutation(n)
+    y = np.asarray(mo.monarch_apply(mp, jnp.asarray(x[:, perm])))
+    ref = np.fft.fft(x, axis=-1)
+    np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3 * np.abs(ref).max())
+
+
+def test_param_counts():
+    assert bf.butterfly_param_count(1024) == 2 * 1024 * 10
+    assert mo.monarch_param_count(1024, 32) == 1024 * (32 + 32)
+    # sparsity: butterfly 2N logN << N^2
+    assert bf.butterfly_param_count(4096) < 4096**2 // 80
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=2, max_value=7),
+    batch=st.integers(min_value=1, max_value=4),
+)
+def test_property_grouping_any_split(logn, batch):
+    """For every legal split point p, grouping is exact (hypothesis)."""
+    n = 1 << logn
+    fac = bf.init_butterfly(jax.random.PRNGKey(logn * 13 + batch), n)
+    x = np.random.RandomState(0).randn(batch, n).astype(np.float32)
+    y_ref = np.asarray(bf.apply_butterfly(fac, jnp.asarray(x)))
+    for p in range(1, logn):
+        mp = mo.group_butterfly_factors(fac, p=p)
+        y = np.asarray(mo.monarch_apply(mp, jnp.asarray(x)))
+        np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4 * np.abs(y_ref).max() + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=4096))
+def test_property_stage_plans(n):
+    """Plans multiply back to n, respect max_radix, and are balanced."""
+    primes = sd.factorize(n)
+    if max(primes) > 64:
+        return  # un-plannable under this radix budget
+    plan = sd.plan_stages(n, 64)
+    assert int(np.prod(plan)) == n
+    assert all(r <= 64 for r in plan)
+    if len(plan) > 1:  # balance: max/min ratio bounded (paper Fig. 14)
+        assert max(plan) <= 64 and min(plan) >= 2
+
+
+@pytest.mark.parametrize("n", [6, 12, 64, 96, 768, 4096])
+def test_mixed_radix_dft(n):
+    x = np.random.randn(2, n).astype(np.float32)
+    plan = sd.plan_stages(n, 64)
+    y = np.asarray(sd.mixed_radix_dft(jnp.asarray(x), plan))
+    ref = np.fft.fft(x, axis=-1)
+    np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3 * np.abs(ref).max())

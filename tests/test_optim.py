@@ -1,0 +1,91 @@
+"""Optimizer + schedule + gradient compression math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import global_norm
+from repro.optim.compression import (
+    dequantize_int8,
+    ef_compress_tree,
+    quantize_int8,
+)
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(weight_decay=0.0)
+    opt = adamw_init(params, cfg)
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(g, opt, params, 0.05, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_clip_norm_applied():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(clip_norm=1.0)
+    opt = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, stats = adamw_update(g, opt, params, 1e-3, cfg)
+    assert float(stats["grad_norm"]) > 100
+    assert float(stats["clip_scale"]) < 0.01
+
+
+def test_bf16_moments():
+    params = {"w": jnp.ones(8)}
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    opt = adamw_init(params, cfg)
+    assert opt["mu"]["w"].dtype == jnp.bfloat16
+    p2, opt2, _ = adamw_update({"w": jnp.ones(8)}, opt, params, 1e-2, cfg)
+    assert opt2["nu"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(p2["w"], np.float32)).all()
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.int32(s), peak_lr=1.0, warmup=10, total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0  # warmup rises
+    assert abs(lrs[10] - 1.0) < 0.05  # peak at end of warmup
+    assert lrs[-1] < 0.2  # decays toward the floor
+    assert lrs[-1] >= 0.1 * 0.99  # but not below floor*peak
+
+
+# ------------------------- compression -------------------------
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6  # half-ULP rounding
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of EF-compressed grads converges to the sum of true grads."""
+    rng = np.random.RandomState(0)
+    grads = [
+        {"a": jnp.asarray(rng.randn(64).astype(np.float32)),
+         "b": jnp.asarray(rng.randn(8, 8).astype(np.float32) * 0.01)}
+        for _ in range(50)
+    ]
+    err = jax.tree.map(jnp.zeros_like, grads[0])
+    sent_sum = jax.tree.map(jnp.zeros_like, grads[0])
+    true_sum = jax.tree.map(jnp.zeros_like, grads[0])
+    for g in grads:
+        q, s, err = ef_compress_tree(g, err)
+        deq = jax.tree.map(dequantize_int8, q, s)
+        sent_sum = jax.tree.map(jnp.add, sent_sum, deq)
+        true_sum = jax.tree.map(jnp.add, true_sum, g)
+    # residual error is bounded by one quantisation step, not 50 of them
+    for k in ("a", "b"):
+        resid = np.abs(np.asarray(sent_sum[k] - true_sum[k]))
+        onestep = np.abs(np.asarray(err[k]))
+        assert resid.max() <= onestep.max() + 1e-5
+
+
+def test_global_norm():
+    t = {"a": jnp.ones(4), "b": jnp.ones((2, 2)) * 2}
+    assert abs(float(global_norm(t)) - np.sqrt(4 + 16)) < 1e-5
