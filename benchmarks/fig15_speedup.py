@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import butterfly as bf, monarch as mo, stage_division as sd
+from repro.core.attention import AttentionSpec, attention_flops, attention_hbm_bytes
 from benchmarks.common import analytic, emit, modeled, sds
 
 CASES = [
@@ -50,7 +51,17 @@ def rows():
             q = sds((b, s, h, hd))
             m_dense = modeled(f"fig15/{name}/dense", dense_attention, q, q, q)
             m_fused = _fft_analytic(f"fig15/{name}/butterfly-fused", b, s, d)
+            # the softmax path itself under the streaming-dataflow form:
+            # fused Pallas flash attention (scores VMEM-resident)
+            m_flash = analytic(
+                f"fig15/{name}/attn-flash-fused",
+                attention_flops(b, s, s, h, hd, causal=False),
+                attention_hbm_bytes(
+                    AttentionSpec(impl="flash_kernel"), b, s, s, h, h, hd, causal=False
+                ),
+            )
         else:
+            m_flash = None
             x = sds((b * s, d))
             w = sds((d, 3 * d))
             m_dense = modeled(f"fig15/{name}/dense", lambda x, w: x @ w, x, w)
@@ -63,6 +74,11 @@ def rows():
         speed = m_dense.t / m_fused.t
         out.append((m_dense.name, m_dense.us, f"bound={m_dense.bound}"))
         out.append((m_fused.name, m_fused.us, f"speedup_vs_dense={speed:.2f}x"))
+        if m_flash is not None:
+            out.append((
+                m_flash.name, m_flash.us,
+                f"speedup_vs_dense={m_dense.t / m_flash.t:.2f}x",
+            ))
     return out
 
 

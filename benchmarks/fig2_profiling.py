@@ -6,17 +6,31 @@ the FLOP reduction.  TPU analogue: the staged butterfly's arithmetic
 intensity collapses vs the dense kernels, flipping them from compute-bound to
 memory-bound at the HBM roofline — same diagnosis, different memory system.
 
+The attention softmax stage itself is profiled under both execution forms of
+``AttentionSpec`` (select with ``--attn``):
+
+* ``xla_chunked``  — prefix-chunked XLA attention, HLO-modeled (the score
+  matrix round-trips HBM: the Fig. 2 pathology)
+* ``flash_kernel`` — fused Pallas online-softmax kernel, analytic accounting
+  (XLA reports the custom call at ~zero cost): one HBM read of Q/K/V, one
+  write of O, scores VMEM-resident
+
 derived column: arithmetic intensity (flops/byte) and bound.
 """
 
 from __future__ import annotations
 
+import argparse
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import butterfly as bf
+from repro.core.attention import AttentionSpec, attention_flops, attention_hbm_bytes
 from repro.core.fft_mixing import fnet_mixing
-from benchmarks.common import emit, modeled, sds
+from repro.models.layers import chunked_attention
+from benchmarks.common import analytic, emit, modeled, sds
 
 # ViT-Base: 197 tokens x 768; BERT-Large-ish: 512..4096 x 1024 (paper scales)
 CASES = [
@@ -41,29 +55,55 @@ def staged_bpmm(factors, x):
     return bf.apply_butterfly(factors, x)
 
 
-def rows():
+def _attention_rows(name: str, b: int, s: int, h: int, hd: int, impls: list[str]):
+    """The softmax stage under each configured execution form."""
+    out = []
+    q = sds((b, s, h, hd))
+    if "xla_chunked" in impls:
+        fn = functools.partial(chunked_attention, causal=False, chunk=min(2048, s))
+        out.append(modeled(f"fig2/{name}/attn-xla_chunked", fn, q, q, q))
+    if "flash_kernel" in impls:
+        spec = AttentionSpec(impl="flash_kernel")
+        out.append(analytic(
+            f"fig2/{name}/attn-flash_kernel",
+            attention_flops(b, s, s, h, hd, causal=False),
+            attention_hbm_bytes(spec, b, s, s, h, h, hd, causal=False),
+        ))
+    return out
+
+
+def rows(impls: list[str]):
     out = []
     for name, b, s, d in CASES:
         h, hd = d // 64, 64
         x = sds((b, s, d))
         w = sds((d, 3 * d))
         q = sds((b, s, h, hd))
-        m_qkv = modeled(f"fig2/{name}/dense-to_qkv", dense_to_qkv, x, w)
-        m_att = modeled(f"fig2/{name}/dense-attention", dense_attention, q, q, q)
+        ms = [
+            modeled(f"fig2/{name}/dense-to_qkv", dense_to_qkv, x, w),
+            modeled(f"fig2/{name}/dense-attention", dense_attention, q, q, q),
+        ]
+        ms += _attention_rows(name, b, s, h, hd, impls)
         # butterfly: staged radix-2 BPMM on the qkv projection (3 x d->d)
         n2 = 1 << (d - 1).bit_length()
         factors = [sds(sh) for sh in [(n2 >> k, 2, 2, 1 << (k - 1)) for k in range(1, n2.bit_length())]]
         xp = sds((b * s, n2))
-        m_bp = modeled(f"fig2/{name}/bpmm-staged", lambda *a: staged_bpmm(list(a[1:]), a[0]), xp, *factors)
+        ms.append(modeled(f"fig2/{name}/bpmm-staged", lambda *a: staged_bpmm(list(a[1:]), a[0]), xp, *factors))
         # fft attention replacement (AT-all)
-        m_fft = modeled(f"fig2/{name}/fft-at-all", lambda xx: fnet_mixing(xx), x)
-        for m in (m_qkv, m_att, m_bp, m_fft):
+        ms.append(modeled(f"fig2/{name}/fft-at-all", lambda xx: fnet_mixing(xx), x))
+        for m in ms:
             out.append((m.name, m.us, f"intensity={m.intensity:.1f} bound={m.bound}"))
     return out
 
 
 def main():
-    emit(rows())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--attn", default="both",
+                    choices=["xla_chunked", "flash_kernel", "both"],
+                    help="which attention execution form(s) to profile")
+    args = ap.parse_args()
+    impls = ["xla_chunked", "flash_kernel"] if args.attn == "both" else [args.attn]
+    emit(rows(impls))
 
 
 if __name__ == "__main__":

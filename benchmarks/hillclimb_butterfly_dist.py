@@ -49,7 +49,9 @@ def main():
         )
         rows.append((name, analysis.roofline(co, mesh.devices.size, 0.0)))
 
-    shard_grad = jax.shard_map(
+    from repro.distributed.sharding import shard_map
+
+    shard_grad = shard_map(
         grad_fn,
         mesh=mesh,
         in_specs=(P(), P(("data", "model"))),

@@ -1,10 +1,12 @@
-"""Architecture registry: ``get("<arch>[+variant]", reduced=...)``.
+"""Architecture registry: ``get("<arch>[+variant...]", reduced=...)``.
 
-Variants apply the paper's technique to any architecture as a config suffix:
+Variants apply the paper's technique to any architecture as config suffixes
+(stackable, e.g. ``yi-6b+bpmm+flash``):
     +bpmm      Monarch-grouped BPMM on qkv/out/ffn (the multilayer-dataflow form)
     +bpmm-r2   faithful radix-2 staged BPMM (the §Perf baseline form)
     +bpmm-k    fused Pallas-kernel BPMM
     +fft       2D-FFT attention replacement (non-causal stacks only)
+    +flash     fused Pallas flash-attention kernel on the softmax path
 """
 
 from __future__ import annotations
@@ -12,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.api import ButterflyPolicy
+from repro.core.attention import AttentionSpec
 from repro.models.config import ModelConfig
 
 from repro.configs import (
@@ -66,20 +69,30 @@ _VARIANTS = {
     "fft": dict(impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=False),
 }
 
+_ATTN_VARIANTS = {
+    "flash": AttentionSpec(impl="flash_kernel"),
+}
+
 
 def names() -> list[str]:
     return list(_MODULES)
 
 
 def get(name: str, reduced: bool = False) -> ModelConfig:
-    base, _, variant = name.partition("+")
+    base, *variants = name.split("+")
     if base not in _MODULES:
         raise KeyError(f"unknown arch {base!r}; known: {sorted(_MODULES)}")
     mod = _MODULES[base]
     cfg: ModelConfig = mod.REDUCED if reduced else mod.FULL
-    if variant:
+    for variant in variants:
+        if variant in _ATTN_VARIANTS:
+            cfg = dataclasses.replace(
+                cfg, name=f"{cfg.name}+{variant}", attention=_ATTN_VARIANTS[variant]
+            )
+            continue
         if variant not in _VARIANTS:
-            raise KeyError(f"unknown variant {variant!r}; known: {sorted(_VARIANTS)}")
+            known = sorted(_VARIANTS) + sorted(_ATTN_VARIANTS)
+            raise KeyError(f"unknown variant {variant!r}; known: {known}")
         kw = dict(_VARIANTS[variant])
         if variant == "fft" and cfg.causal:
             raise ValueError(f"{base} is causal; the FFT (FNet) mixer is encoder-only")

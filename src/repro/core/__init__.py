@@ -9,4 +9,9 @@ from repro.core.api import (  # noqa: F401
     linear_flops,
     linear_param_count,
 )
+from repro.core.attention import (  # noqa: F401
+    AttentionSpec,
+    attention_flops,
+    attention_hbm_bytes,
+)
 from repro.core.fft_mixing import fnet_mixing, fnet_mixing_reference  # noqa: F401

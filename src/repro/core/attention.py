@@ -1,0 +1,111 @@
+"""Pluggable attention execution: ``AttentionSpec`` + analytic accounting.
+
+Mirror of :class:`repro.core.api.LinearSpec` for the softmax path.  The paper's
+diagnosis (Fig. 2) is that the attention AT-all is memory-bound on
+block-oriented backends because the score matrix makes a full HBM round trip;
+the multilayer-dataflow fix (§IV, §V-A) keeps the score tile VMEM-resident and
+streams token tiles — {Load | Cal | Store} — with exactly one HBM read/write
+per tile.  ``AttentionSpec.impl`` selects which execution form runs the
+attention stage of every model in the zoo:
+
+* ``xla_chunked``  — prefix-chunked XLA einsum attention (reference form;
+  materialises per-chunk score matrices in HBM — the Fig. 2 pathology)
+* ``flash_kernel`` — fused Pallas online-softmax kernel
+  (:mod:`repro.kernels.flash_attention`): scores never leave VMEM
+
+The spec also carries the kernel tile geometry and powers the analytic
+FLOP/HBM-byte accounting used by the dry-run roofline and the Fig. 2/15
+benchmarks (Pallas custom-calls report ~zero cost through XLA's
+``cost_analysis``, so the fused form is accounted here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "AttentionSpec",
+    "attention_flops",
+    "attention_hbm_bytes",
+]
+
+IMPLS = ("xla_chunked", "flash_kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Where the attention softmax path executes and with what tiling.
+
+    ``chunk`` / ``f32_softmax`` apply to the ``xla_chunked`` form;
+    ``q_tile`` / ``kv_tile`` are the Pallas grid tile sizes of the
+    ``flash_kernel`` form (rows of Q and KV resident in VMEM per grid step).
+    """
+
+    impl: str = "xla_chunked"  # xla_chunked | flash_kernel
+    chunk: int = 2048
+    q_tile: int = 128
+    kv_tile: int = 128
+    f32_softmax: bool = True
+
+    def __post_init__(self) -> None:
+        if self.impl not in IMPLS:
+            raise ValueError(f"unknown attention impl {self.impl!r}; known: {IMPLS}")
+
+    @property
+    def fused(self) -> bool:
+        return self.impl == "flash_kernel"
+
+
+def attention_flops(
+    batch: int,
+    s_q: int,
+    s_kv: int,
+    heads: int,
+    head_dim: int,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> float:
+    """Model FLOPs of the softmax stage (QK^T + PV), impl-independent."""
+    kv_avg = s_kv / 2 if (causal and s_q == s_kv) else s_kv
+    if window is not None:
+        kv_avg = min(kv_avg, window)
+    return 2.0 * 2.0 * batch * s_q * kv_avg * heads * head_dim
+
+
+def attention_hbm_bytes(
+    spec: AttentionSpec,
+    batch: int,
+    s_q: int,
+    s_kv: int,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    dtype_bytes: int = 2,
+) -> float:
+    """HBM traffic of the softmax stage under the given execution form.
+
+    ``flash_kernel``: one read of Q and one write of O; the score tile never
+    leaves VMEM.  K/V are *re-streamed* from HBM once per (gqa group x q-tile)
+    grid row — liveness masking skips blocks above the causal diagonal /
+    outside the window, so each pass reads only the visible prefix.
+
+    ``xla_chunked``: K/V read once, but the full score matrix round-trips HBM
+    (write + softmax read, probs write + einsum read: 4 passes over the
+    visible (S_q x S_kv) block, in f32 when ``f32_softmax``).
+    """
+    qo_io = dtype_bytes * batch * s_q * heads * head_dim * 2  # Q read + O write
+    kv_vis = s_kv / 2 if (causal and s_q == s_kv) else s_kv
+    if window is not None:
+        kv_vis = min(kv_vis, window)
+    if spec.fused:
+        g = max(heads // max(kv_heads, 1), 1)
+        kv_passes = g * max(-(-s_q // spec.q_tile), 1)
+        kv_io = dtype_bytes * batch * kv_heads * head_dim * 2 * kv_passes * kv_vis
+        return float(qo_io + kv_io)
+    kv_io = dtype_bytes * batch * s_kv * kv_heads * head_dim * 2  # K + V once
+    score_bytes = 4 if spec.f32_softmax else dtype_bytes
+    return float(qo_io + kv_io + 4 * score_bytes * batch * heads * s_q * kv_vis)

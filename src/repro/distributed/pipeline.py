@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 __all__ = ["gpipe"]
 
 
@@ -54,7 +56,7 @@ def gpipe(
         # replicate the result: only the last stage holds nonzero values
         return jax.lax.psum(stacked, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -1,0 +1,251 @@
+"""Fused flash-attention kernels (Pallas, TPU target) — online softmax on
+VMEM-resident score tiles.
+
+This is the paper's §IV orchestration applied to the attention AT-all itself:
+the (q_tile x kv_tile) score block is computed, masked, softmax-normalised and
+contracted against V entirely in VMEM — the score matrix never touches HBM,
+vs one full round trip (write + softmax read + probs write + einsum read) for
+the block-oriented XLA form (Fig. 2's memory-bound pathology).  Token tiles
+stream through the grid exactly like :mod:`repro.kernels.monarch_bpmm`: one
+HBM read of Q/K/V and one HBM write of O per tile, with the TPU DMA engine
+double-buffering the next tile against MXU compute ({Load | Cal | Store}).
+
+Prefill kernel
+    grid = (batch x kv_heads, gqa_group, q_tiles, kv_tiles).  The kv axis is
+    the innermost (sequential on TPU) dimension; running max / sum-exp / out
+    accumulators live in VMEM scratch and carry across kv steps (the online
+    softmax).  Causal and sliding-window blocks that are statically dead for
+    a (q_tile, kv_tile) pair are skipped via ``pl.when``.
+
+Decode kernel
+    flash-decode: grid = (batch x kv_heads, kv_tiles) over the cache, same
+    VMEM partial-max/sum combine across kv tiles; the query block is the GQA
+    group of head vectors for one token.  Cache-length masking arrives as an
+    additive bias row computed by the ops wrapper (keeps scalars out of the
+    kernel; works identically under interpret mode).
+
+Layouts (pre-padded by :mod:`repro.kernels.ops`):
+    prefill  q: (BK, G, Sq, D)   k, v: (BK, Skv, D)   y: (BK, G, Sq, D)
+    decode   q: (BK, Gp, D)      k, v: (BK, Skv, D)   bias: (1, Skv)
+    with BK = batch * kv_heads, G the GQA group, D the padded head dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mha_prefill", "mha_decode", "pick_tiles", "NEG_INF"]
+
+NEG_INF = -1e30  # finite stand-in: exp(NEG_INF - m) underflows but never NaNs
+_LANES = 128  # running-stat scratch is lane-replicated for TPU tiling
+
+
+def pick_tiles(s_q: int, s_kv: int, q_tile: int, kv_tile: int) -> tuple[int, int]:
+    """Clamp the spec's tile sizes to the (hardware-aligned) problem size."""
+    tq = min(q_tile, -(-s_q // 8) * 8)
+    tk = min(kv_tile, -(-s_kv // _LANES) * _LANES)
+    return max(tq, 8), max(tk, _LANES)
+
+
+def _prefill_kernel(
+    q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int | None, s_q: int, s_kv: int,
+    q_tile: int, kv_tile: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # static-per-block liveness: skip kv blocks entirely above the causal
+    # diagonal or entirely left of the sliding window
+    live = j * kv_tile < s_kv
+    if causal:
+        live &= j * kv_tile <= i * q_tile + q_tile - 1
+    if window is not None:
+        live &= j * kv_tile + kv_tile - 1 > i * q_tile - window
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (tq, d)
+        k = k_ref[0].astype(jnp.float32)  # (tk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (tq, tk)
+
+        qpos = i * q_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = j * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < s_kv  # padded keys
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (tq, LANES), lane-replicated
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)  # broadcasts back to (tq, LANES)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        # explicit re-mask: when a row is still fully masked m_new == NEG_INF
+        # and exp(s - m_new) would be 1, not 0
+        p = jnp.where(mask, jnp.exp(s - m_new[:, :1]), 0.0)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        y_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "causal", "window", "s_q", "s_kv", "q_tile", "kv_tile", "interpret",
+    ),
+)
+def mha_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    s_q: int,
+    s_kv: int,
+    q_tile: int,
+    kv_tile: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (BK, G, Sq_pad, D) -> y same shape; k, v: (BK, Skv_pad, D).
+
+    ``s_q`` / ``s_kv`` are the true (pre-padding) lengths; padded key columns
+    are masked inside the kernel, padded query rows are sliced off by the ops
+    wrapper."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bk, g, sq_pad, d = q.shape
+    skv_pad = k.shape[1]
+    if sq_pad % q_tile or skv_pad % kv_tile:
+        raise ValueError(f"padded seqs {(sq_pad, skv_pad)} vs tiles {(q_tile, kv_tile)}")
+
+    grid = (bk, g, sq_pad // q_tile, skv_pad // kv_tile)
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_kernel, scale=scale, causal=causal, window=window,
+            s_q=s_q, s_kv=s_kv, q_tile=q_tile, kv_tile=kv_tile,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, j: (b, g, i, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, j: (b, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, _LANES), jnp.float32),
+            pltpu.VMEM((q_tile, _LANES), jnp.float32),
+            pltpu.VMEM((q_tile, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, bias_ref, y_ref, m_ref, l_ref, acc_ref,
+    *, scale: float,
+):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (gp, d)
+    k = k_ref[0].astype(jnp.float32)  # (tk, d)
+    v = v_ref[0].astype(jnp.float32)
+    bias = bias_ref[0].astype(jnp.float32)  # (tk,): 0 | NEG_INF
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) + bias[None, :]  # (gp, tk)
+    valid = bias[None, :] > 0.5 * NEG_INF
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+    p = jnp.where(valid, jnp.exp(s - m_new[:, :1]), 0.0)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        y_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "kv_tile", "interpret")
+)
+def mha_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bias: jax.Array,
+    *,
+    scale: float,
+    kv_tile: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode: q (BK, Gp, D); k, v (BK, Skv_pad, D); bias (1, Skv_pad)
+    additive mask row (0 for live keys, NEG_INF for padded / beyond cur_len).
+    Returns (BK, Gp, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bk, gp, d = q.shape
+    skv_pad = k.shape[1]
+    if skv_pad % kv_tile:
+        raise ValueError(f"padded cache {skv_pad} vs kv tile {kv_tile}")
+
+    grid = (bk, skv_pad // kv_tile)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, gp, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, gp, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((gp, _LANES), jnp.float32),
+            pltpu.VMEM((gp, _LANES), jnp.float32),
+            pltpu.VMEM((gp, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

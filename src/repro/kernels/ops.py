@@ -9,15 +9,23 @@ transforms larger than one fused two-stage tile.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stage_division as sd
-from repro.kernels import fft2d, monarch_bpmm
+from repro.core.attention import AttentionSpec
+from repro.kernels import fft2d, flash_attention as fa, monarch_bpmm
 
-__all__ = ["monarch_linear", "dft_1d", "fnet_mixing_kernel"]
+__all__ = [
+    "monarch_linear",
+    "dft_1d",
+    "fnet_mixing_kernel",
+    "flash_attention",
+    "flash_decode",
+]
 
 
 def _interpret() -> bool:
@@ -119,6 +127,133 @@ def _dft_rec(xr, xi, plan):
     cr = jnp.swapaxes(cr.reshape(t, n1, ntail), 1, 2).reshape(t, n)
     ci = jnp.swapaxes(ci.reshape(t, n1, ntail), 1, 2).reshape(t, n)
     return cr, ci
+
+
+# --------------------------------------------------------------------------
+# Fused flash attention (AttentionSpec.impl == "flash_kernel")
+# --------------------------------------------------------------------------
+
+_LANES = 128
+
+
+def _round_up(n: int, to: int) -> int:
+    return -(-n // to) * to
+
+
+def _flash_prefill_raw(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool, window: int | None, q_tile: int, kv_tile: int,
+) -> jax.Array:
+    """Layout + padding around the Pallas prefill kernel.
+
+    q: (B, S, H, hd); k, v: (B, Skv, KV, hd) -> (B, S, H, hd).  Head dim pads
+    to the 128-lane boundary, sequences pad to the tile grid; padded keys are
+    masked inside the kernel, padded query rows are sliced off here."""
+    b, s, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    tq, tk = fa.pick_tiles(s, skv, q_tile, kv_tile)
+    sq_pad, skv_pad = _round_up(s, tq), _round_up(skv, tk)
+    d = _round_up(hd, _LANES)
+
+    qt = q.reshape(b, s, kvh, g, hd).transpose(0, 2, 3, 1, 4).reshape(b * kvh, g, s, hd)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - s), (0, d - hd)))
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    kt = jnp.pad(kt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
+    vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
+
+    y = fa.mha_prefill(
+        qt, kt, vt, scale=1.0 / math.sqrt(hd), causal=causal, window=window,
+        s_q=s, s_kv=skv, q_tile=tq, kv_tile=tk, interpret=_interpret(),
+    )
+    y = y[:, :, :s, :hd].reshape(b, kvh, g, s, hd)
+    return y.transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd)
+
+
+# The kernel has no Pallas backward; training falls back to differentiating
+# the chunked XLA form (recompute — cheap next to the fwd save of score
+# traffic, and transient score memory stays bounded to (chunk x prefix),
+# unlike the naive full-score oracle).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_prefill(q, k, v, causal, window, q_tile, kv_tile):
+    return _flash_prefill_raw(q, k, v, causal, window, q_tile, kv_tile)
+
+
+def _flash_prefill_fwd(q, k, v, causal, window, q_tile, kv_tile):
+    return _flash_prefill_raw(q, k, v, causal, window, q_tile, kv_tile), (q, k, v)
+
+
+def _flash_prefill_bwd(causal, window, q_tile, kv_tile, res, g):
+    # local import: avoids a module-load cycle (models.layers imports this
+    # module lazily from inside run_attention)
+    from repro.models.layers import chunked_attention
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: chunked_attention(q, k, v, causal=causal, window=window),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_prefill.defvjp(_flash_prefill_fwd, _flash_prefill_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    spec: AttentionSpec | None = None,
+) -> jax.Array:
+    """Fused online-softmax attention.  Same contract as
+    ``repro.models.layers.chunked_attention`` (q: (B, S, H, hd); k, v:
+    (B, Skv, KV, hd)) — used when ``AttentionSpec.impl == "flash_kernel"``."""
+    spec = spec or AttentionSpec(impl="flash_kernel")
+    return _flash_prefill(q, k, v, causal, window, spec.q_tile, spec.kv_tile)
+
+
+def flash_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array | None = None,
+    *,
+    spec: AttentionSpec | None = None,
+) -> jax.Array:
+    """Flash-decode over a KV cache: partial max/sum-exp combine across kv
+    tiles in VMEM.  q: (B, H, hd); caches: (B, S, KV, hd) -> (B, H, hd).
+    ``cur_len`` (traced scalar ok) masks cache rows not yet written."""
+    spec = spec or AttentionSpec(impl="flash_kernel")
+    b, h, hd = q.shape
+    skv, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    _, tk = fa.pick_tiles(1, skv, spec.q_tile, spec.kv_tile)
+    skv_pad = _round_up(skv, tk)
+    d = _round_up(hd, _LANES)
+    gp = _round_up(g, 8)
+
+    qt = jnp.pad(q.reshape(b, kvh, g, hd), ((0, 0), (0, 0), (0, gp - g), (0, d - hd)))
+    qt = qt.reshape(b * kvh, gp, d)
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    kt = jnp.pad(kt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
+    vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
+
+    kpos = jnp.arange(skv_pad)
+    valid = kpos < skv
+    if cur_len is not None:
+        valid &= kpos < cur_len
+    bias = jnp.where(valid, 0.0, fa.NEG_INF).astype(jnp.float32)[None]
+
+    y = fa.mha_decode(
+        qt, kt, vt, bias, scale=1.0 / math.sqrt(hd), kv_tile=tk,
+        interpret=_interpret(),
+    )
+    return y.reshape(b, kvh, gp, d)[:, :, :g, :hd].reshape(b, h, hd)
 
 
 def fnet_mixing_kernel(x: jax.Array, max_radix: int = sd.MAX_RADIX_COMPLEX) -> jax.Array:

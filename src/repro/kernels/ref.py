@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["monarch_bpmm_ref", "dft_two_stage_ref"]
+__all__ = ["monarch_bpmm_ref", "dft_two_stage_ref", "mha_reference", "mha_decode_reference"]
 
 
 def monarch_bpmm_ref(x: jax.Array, r: jax.Array, l: jax.Array) -> jax.Array:
@@ -15,6 +15,55 @@ def monarch_bpmm_ref(x: jax.Array, r: jax.Array, l: jax.Array) -> jax.Array:
     u = jnp.einsum("oghij,tghj->toghi", r.astype(jnp.float32), xf)
     y = jnp.einsum("ogjhk,togkj->toghj", l.astype(jnp.float32), u)
     return y.sum(axis=2).astype(x.dtype)
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Naive full-score softmax attention (f32).  q: (B, S, H, hd);
+    k, v: (B, Skv, KV, hd) with GQA broadcast; returns (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def mha_decode_reference(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array | None = None,
+) -> jax.Array:
+    """One-token oracle.  q: (B, H, hd); caches: (B, S, KV, hd)."""
+    b, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    qr = q.reshape(b, kvh, h // kvh, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if cur_len is not None:
+        mask = jnp.arange(k_cache.shape[1]) < cur_len
+        scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
 
 
 def dft_two_stage_ref(

@@ -15,6 +15,7 @@ Usage::
 """
 
 import argparse
+import dataclasses
 import json
 import time
 import traceback
@@ -23,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
+from repro.core import attention as attn
 from repro.configs.shapes import SHAPES, Shape, applicable, batch_specs
 from repro.launch import analysis
 from repro.launch.mesh import make_production_mesh
@@ -123,6 +125,37 @@ def _probe_cost(cfg: ModelConfig, shape: Shape, mesh, k: int) -> dict:
     }
 
 
+def _attention_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
+    """Analytic fwd FLOP/HBM-byte accounting for the attention softmax stage
+    under both execution forms.  The fused Pallas kernel is invisible to XLA's
+    ``cost_analysis`` (a near-zero-cost custom call), so the dry-run roofline
+    models it from :mod:`repro.core.attention` instead."""
+    n_attn = sum(1 for s in cfg.period_slots if s.mixer == "attn") * cfg.n_periods
+    if not n_attn or not cfg.n_heads:
+        return None
+    if shape.kind == "decode":
+        s_q, s_kv, causal = 1, shape.seq, False
+        if cfg.sliding_window:
+            s_kv = min(s_kv, cfg.sliding_window)
+    else:
+        s_q = s_kv = shape.seq
+        causal = cfg.causal
+    win = cfg.sliding_window if causal else None
+    args = (shape.batch, s_q, s_kv, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    flops = n_attn * attn.attention_flops(
+        shape.batch, s_q, s_kv, cfg.n_heads, cfg.head_dim, causal=causal, window=win
+    )
+    spec = cfg.attention_spec
+    out = {"flops": flops, "n_attn_layers": n_attn}
+    for impl in attn.IMPLS:
+        out[impl] = {
+            "hbm_bytes": n_attn * attn.attention_hbm_bytes(
+                dataclasses.replace(spec, impl=impl), *args, causal=causal, window=win
+            )
+        }
+    return out
+
+
 def run_cell(
     arch: str,
     shape_name: str,
@@ -131,8 +164,13 @@ def run_cell(
     cfg_override: ModelConfig | None = None,
     lower_only: bool = False,
     probes: bool = True,
+    attn_impl: str | None = None,
 ) -> dict:
     cfg = cfg_override or registry.get(arch, reduced=reduced)
+    if attn_impl is not None:
+        cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention, impl=attn_impl)
+        )
     shape = SHAPES[shape_name]
     rec: dict = {
         "arch": arch,
@@ -178,6 +216,18 @@ def run_cell(
                 chips=chips,
                 model_flops=model_flops / chips,
             )
+        # attention-stage accounting: the probes lower the XLA chunked form
+        # (the kernel is single-device); when flash_kernel is configured the
+        # roofline swaps the chunked stage's score traffic for the fused
+        # kernel's streaming traffic (per-device share)
+        stage = _attention_stage(cfg, shape)
+        if stage and rl and cfg.attention.fused:
+            delta = (
+                stage["flash_kernel"]["hbm_bytes"]
+                - stage["xla_chunked"]["hbm_bytes"]
+            ) / chips
+            rl = dataclasses.replace(rl, hbm_bytes=max(rl.hbm_bytes + delta, 0.0))
+        rec["attention_stage_fwd"] = stage
         rec.update(
             status="ok",
             t_lower_s=round(t_lower, 1),
@@ -214,6 +264,8 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--lower-only", action="store_true")
     ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--attn", default=None, choices=["xla_chunked", "flash_kernel"],
+                    help="override the attention execution form for every cell")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -228,6 +280,7 @@ def main():
                 rec = run_cell(
                     arch, shape, mp, reduced=args.reduced,
                     lower_only=args.lower_only, probes=not args.no_probes,
+                    attn_impl=args.attn,
                 )
                 line = json.dumps(rec)
                 print(_summ0(rec), flush=True)

@@ -5,21 +5,26 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_local_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, names):
+    """jax.make_mesh across jax versions: `axis_types=Auto` where the kwarg
+    exists (>= 0.5), plain call where it doesn't (0.4.x defaults to auto)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        return jax.make_mesh(shape, names, axis_types=(at.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever this host has (CPU smoke runs: 1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((n, 1), ("data", "model"))

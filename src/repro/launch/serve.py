@@ -37,9 +37,22 @@ def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
     )
 
 
-def make_serve_fns(cfg: ModelConfig, mesh: Mesh, *, batch: int, cache_len: int):
+def make_serve_fns(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    batch: int,
+    cache_len: int,
+    attn_impl: str | None = None,
+):
     """Returns (prefill_fn(params, batch_dict) -> (logits, caches),
-    decode_fn(params, caches, tokens, pos) -> (logits, caches))."""
+    decode_fn(params, caches, tokens, pos) -> (logits, caches)).
+
+    ``attn_impl`` overrides the config's attention execution form for this
+    serving instance (e.g. "flash_kernel" on a single-chip deployment)."""
+    if attn_impl is not None:
+        spec = dataclasses.replace(cfg.attention, impl=attn_impl)
+        cfg = dataclasses.replace(cfg, attention=spec)
     rt = M.resolve_runtime(cfg, mesh)
     pspecs = M.build_specs(cfg)
     p_shard = shd.sharding_tree(pspecs, mesh, M.rules_for(cfg))
@@ -79,7 +92,14 @@ class ServeLoop:
     step-by-step; finished requests exit with their generations.
     """
 
-    def __init__(self, cfg: ModelConfig, mesh: Mesh, params, *, batch: int, cache_len: int):
+    def __init__(
+        self, cfg: ModelConfig, mesh: Mesh, params, *,
+        batch: int, cache_len: int, attn_impl: str | None = None,
+    ):
+        if attn_impl is not None:
+            cfg = dataclasses.replace(
+                cfg, attention=dataclasses.replace(cfg.attention, impl=attn_impl)
+            )
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.batch, self.cache_len = batch, cache_len
         self.prefill_fn, self.decode_fn = make_serve_fns(

@@ -10,6 +10,7 @@ import dataclasses
 from typing import Literal
 
 from repro.core.api import ButterflyPolicy
+from repro.core.attention import AttentionSpec
 
 __all__ = ["ModelConfig", "Slot"]
 
@@ -65,6 +66,10 @@ class ModelConfig:
     act: str = "swiglu"  # swiglu | gelu
     # the paper's technique
     butterfly: ButterflyPolicy = ButterflyPolicy()
+    # attention execution form (impl + kernel tile geometry); the legacy
+    # `attn_chunk` / `attn_f32_softmax` perf levers below override the spec's
+    # chunk/f32 fields — see `attention_spec`
+    attention: AttentionSpec = AttentionSpec()
     # execution
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
@@ -95,6 +100,15 @@ class ModelConfig:
     cast_params_once: bool = False
 
     # ---------------- derived ----------------
+    @property
+    def attention_spec(self) -> AttentionSpec:
+        """The effective AttentionSpec: impl + tiles from `attention`,
+        chunk/f32 from the per-config perf levers (single source of truth for
+        the hillclimb sweeps that toggle them)."""
+        return dataclasses.replace(
+            self.attention, chunk=self.attn_chunk, f32_softmax=self.attn_f32_softmax
+        )
+
     @property
     def d_inner(self) -> int:
         return self.ssm_expand * self.d_model

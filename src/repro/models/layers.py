@@ -1,11 +1,20 @@
-"""Shared layers: norms, RoPE, chunked-causal flash attention, decode attention.
+"""Shared layers: norms, RoPE, attention execution forms + spec dispatch.
 
-The train/prefill attention is *prefix-chunked*: queries are processed in
-static chunks, each attending exactly its causal KV prefix (plus a masked
-diagonal block).  This keeps compiled FLOPs within ~(1 + 1/n_chunks) of the
-causal optimum — important because the roofline terms are read off the
-compiled HLO — and bounds transient score memory to (chunk x prefix).
-Sliding windows (mixtral) drop whole out-of-window chunks statically.
+Two attention execution forms live behind :class:`repro.core.attention.
+AttentionSpec` (selected per model via ``ModelConfig.attention``):
+
+* ``xla_chunked`` — :func:`chunked_attention` here: queries are processed in
+  static *prefix chunks*, each attending exactly its causal KV prefix (plus a
+  masked diagonal block).  This keeps compiled FLOPs within ~(1 + 1/n_chunks)
+  of the causal optimum — important because the roofline terms are read off
+  the compiled HLO — and bounds transient score memory to (chunk x prefix).
+  Sliding windows (mixtral) drop whole out-of-window chunks statically.
+  Score matrices still round-trip HBM: this is the paper's Fig. 2 baseline.
+* ``flash_kernel`` — the fused Pallas online-softmax kernel
+  (:mod:`repro.kernels.flash_attention`): score tiles stay VMEM-resident.
+
+:func:`run_attention` / :func:`run_decode_attention` are the dispatchers the
+model runtime calls.
 """
 
 from __future__ import annotations
@@ -17,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.core.attention import AttentionSpec
 from repro.distributed.sharding import constrain
 
 __all__ = [
@@ -24,8 +34,10 @@ __all__ = [
     "rms_norm",
     "layer_norm",
     "apply_rope",
-    "flash_attention",
+    "chunked_attention",
     "decode_attention",
+    "run_attention",
+    "run_decode_attention",
     "silu",
     "gelu",
 ]
@@ -97,7 +109,7 @@ def _q_axes(rt: Runtime, chunk_len: int, heads: int):
     return ("batch", None, None, None)
 
 
-def flash_attention(
+def chunked_attention(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
@@ -108,15 +120,19 @@ def flash_attention(
     rt: Runtime = Runtime(),
     f32_softmax: bool = True,
 ) -> jax.Array:
-    """Prefix-chunked attention.  q: (B, S, H, hd); k, v: (B, S, KV, hd)."""
+    """Prefix-chunked attention (the ``xla_chunked`` reference form).
+    q: (B, S, H, hd); k, v: (B, S, KV, hd)."""
     b, s, h, hd = q.shape
     kvh = k.shape[2]
     g = h // kvh
     scale = 1.0 / math.sqrt(hd)
     chunk = min(chunk, s)
-    if s % chunk:
-        chunk = math.gcd(s, chunk)
-    n_chunks = s // chunk
+    # non-divisible S (prime lengths included): pad up to a chunk multiple and
+    # mask the tail — NOT gcd(s, chunk), which degenerates to chunk=1 and
+    # statically unrolls s chunks
+    s_pad = -(-s // chunk) * chunk
+    n_chunks = s_pad // chunk
+    padded = s_pad != s
 
     q = constrain(q, _q_axes(rt, s, h), rt.mesh, rt.rules)
     # KV must stay seq-local: a seq-sharded KV would force the SPMD partitioner
@@ -124,7 +140,12 @@ def flash_attention(
     # `model` when divisible, otherwise replicate (GQA KV replication).
     k = constrain(k, ("batch", None, "tp", None), rt.mesh, rt.rules)
     v = constrain(v, ("batch", None, "tp", None), rt.mesh, rt.rules)
-    qr = q.reshape(b, s, kvh, g, hd)
+    if padded:
+        pad = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        q = jnp.pad(q, pad)
+        if causal:  # self-attention: prefix slicing needs the padded length
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    qr = q.reshape(b, s_pad, kvh, g, hd)
     outs = []
     for i in range(n_chunks):  # static unroll: exact per-chunk causal prefixes
         q_i = jax.lax.slice_in_dim(qr, i * chunk, (i + 1) * chunk, axis=1)
@@ -148,13 +169,16 @@ def flash_attention(
             mask = jnp.ones((chunk, end - start), bool)
             if causal:
                 mask &= qpos[:, None] >= kpos[None, :]
+                if padded:
+                    mask &= kpos[None, :] < s  # padded tail keys
             if window is not None:
                 mask &= kpos[None, :] > qpos[:, None] - window
             scores = jnp.where(mask[None, None, None], scores, neg)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         out_i = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_i)
         outs.append(out_i.reshape(b, chunk, h, hd))
-    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out[:, :s] if padded else out
 
 
 def decode_attention(
@@ -183,3 +207,48 @@ def decode_attention(
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
     return out.reshape(b, h, hd)
+
+
+def _fused_ok(rt: Runtime) -> bool:
+    # pallas_call is a per-device kernel: under a >1-chip mesh the SPMD
+    # partitioner cannot split it, so the spec falls back to the XLA form
+    # (which the partitioner shards freely) instead of erroring.
+    return rt.mesh is None or rt.mesh.devices.size <= 1
+
+
+def run_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    spec: AttentionSpec = AttentionSpec(),
+    causal: bool = True,
+    window: int | None = None,
+    rt: Runtime = Runtime(),
+) -> jax.Array:
+    """Execute train/prefill attention under the configured spec."""
+    if spec.fused and _fused_ok(rt):
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.flash_attention(q, k, v, causal=causal, window=window, spec=spec)
+    return chunked_attention(
+        q, k, v, causal=causal, window=window, chunk=spec.chunk, rt=rt,
+        f32_softmax=spec.f32_softmax,
+    )
+
+
+def run_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array | None = None,
+    *,
+    spec: AttentionSpec = AttentionSpec(),
+    rt: Runtime = Runtime(),
+) -> jax.Array:
+    """Execute one-token cache attention under the configured spec."""
+    if spec.fused and _fused_ok(rt):
+        from repro.kernels import ops
+
+        return ops.flash_decode(q, k_cache, v_cache, cur_len, spec=spec)
+    return decode_attention(q, k_cache, v_cache, cur_len)

@@ -26,11 +26,11 @@ from repro.models.config import ModelConfig, Slot
 from repro.models.layers import (
     Runtime,
     apply_rope,
-    decode_attention,
-    flash_attention,
     gelu,
     layer_norm,
     rms_norm,
+    run_attention,
+    run_decode_attention,
     silu,
 )
 
@@ -201,17 +201,18 @@ def apply_attention(
             )
             new_cache = {"k": kc, "v": vc}
             cur = None if cfg.sliding_window else jnp.minimum(pos + 1, cache_len)
-            out = decode_attention(q[:, 0], kc, vc, cur)
+            out = run_decode_attention(q[:, 0], kc, vc, cur, spec=cfg.attention_spec, rt=rt)
         else:  # cross-attention: static KV from the encoder pass
             new_cache = cache
-            out = decode_attention(q[:, 0], cache["k"], cache["v"], None)
+            out = run_decode_attention(
+                q[:, 0], cache["k"], cache["v"], None, spec=cfg.attention_spec, rt=rt
+            )
         out = out[:, None]
     else:
         win = cfg.sliding_window if causal else None
-        out = flash_attention(
-            q, k_new, v_new, causal=causal and not is_cross,
-            window=win, chunk=cfg.attn_chunk, rt=rt,
-            f32_softmax=cfg.attn_f32_softmax,
+        out = run_attention(
+            q, k_new, v_new, spec=cfg.attention_spec,
+            causal=causal and not is_cross, window=win, rt=rt,
         )
         if mode == "prefill":
             kc, vc = k_new, v_new

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade to skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import butterfly as bf, monarch as mo, stage_division as sd

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_mesh
 
 
 def _state(seed=0):
@@ -72,8 +73,7 @@ def test_elastic_reshard_across_mesh_shapes(tmp_path):
     mgr = CheckpointManager(str(tmp_path), async_save=False)
     st = _state()
     mgr.save(2, st, blocking=True)
-    mesh_b = jax.make_mesh((1, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = make_mesh((1, 1), ("data", "model"))
     shardings = jax.tree.map(lambda a: NamedSharding(mesh_b, P()), st)
     step, got = mgr.restore_latest(jax.tree.map(np.asarray, st), shardings)
     assert step == 2

@@ -11,12 +11,13 @@ import numpy as np
 import pytest
 
 from repro.distributed.sharding import ParamSpec, spec_for
+from repro.launch.mesh import make_mesh
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return make_mesh(shape, names)
 
 
 def test_spec_for_divisibility_fallback():
@@ -39,7 +40,9 @@ def _run_subprocess(body: str, ndev: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: the fake-device flag only applies to the host platform, and
+    # letting jax probe a TPU backend here hangs for minutes in CI containers
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=600
     )
@@ -51,14 +54,13 @@ def test_spec_for_fallbacks_multidevice():
     out = _run_subprocess("""
         import jax
         from repro.distributed.sharding import spec_for
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         # 56 % 4 == 0 -> sharded; 54 % 4 != 0 -> replicated fallback
         print(spec_for((56, 10), ("tp", None), mesh))
         print(spec_for((54, 10), ("tp", None), mesh))
         # batch spreads over (pod, data) only when both divide
-        mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
         print(spec_for((8, 16), ("batch", None), mesh3))
         print(spec_for((2, 16), ("batch", None), mesh3))
         print(spec_for((1, 16), ("batch", None), mesh3))
@@ -77,11 +79,11 @@ def test_train_step_runs_sharded():
         import dataclasses, jax, jax.numpy as jnp, numpy as np
         from repro.configs import registry
         from repro.data.pipeline import DataConfig, global_batch
+        from repro.launch.mesh import make_mesh
         from repro.launch.train import TrainHParams, make_train_step, init_train_state, train_state_shardings
         cfg = dataclasses.replace(registry.get("qwen3-0.6b", reduced=True),
                                   n_heads=4, n_kv_heads=4, attn_chunk=16)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         hp = TrainHParams(peak_lr=1e-3, warmup=1, total_steps=4)
         step, st_sh, _ = make_train_step(cfg, mesh, hp)
         with mesh:
@@ -105,8 +107,9 @@ def test_gpipe_pipeline_parallelism():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import gpipe
+        from repro.launch.mesh import make_mesh
         S, M, mb, d = 8, 16, 4, 16
-        mesh = jax.make_mesh((S,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((S,), ("pipe",))
         keys = jax.random.split(jax.random.PRNGKey(0), S)
         params = {"w": jnp.stack([jax.random.normal(k, (d, d)) / np.sqrt(d) for k in keys]),
                   "b": jnp.zeros((S, d))}
@@ -131,16 +134,17 @@ def test_wire_compression_shard_map():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.sharding import shard_map
+        from repro.launch.mesh import make_mesh
         from repro.optim.compression import psum_compressed
-        mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("pod", "data"))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 64))  # per-pod grads
         err = jnp.zeros((4, 64))
         def f(g, e):
             mean, new_e = psum_compressed({"g": g[0]}, {"g": e[0]}, "pod")
             return mean["g"], new_e["g"][None]
-        fn = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                           out_specs=(P(), P("pod")), axis_names={"pod"})
+        fn = shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                       out_specs=(P(), P("pod")), axis_names={"pod"})
         with mesh:
             mean, new_err = fn(g, err)
         ref = g.mean(0)

@@ -13,7 +13,7 @@ from repro.configs import registry
 from repro.data.pipeline import DataConfig
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import TrainHParams, train_loop
-from repro.models.layers import Runtime, flash_attention
+from repro.models.layers import Runtime, chunked_attention
 
 RT = Runtime(mesh=None)
 
@@ -45,7 +45,7 @@ def test_training_reduces_loss_fabnet():
     assert hist[-1] < hist[0] - 0.3, (hist[0], hist[-1])
 
 
-def test_flash_attention_matches_naive():
+def test_chunked_attention_matches_naive():
     """Chunked-prefix attention == naive masked softmax attention."""
     b, s, h, kv, hd = 2, 32, 4, 2, 16
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -68,7 +68,7 @@ def test_flash_attention_matches_naive():
         return jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(b, s, h, hd)
 
     for causal, window, chunk in [(True, None, 8), (False, None, 16), (True, 8, 8), (True, 12, 4)]:
-        out = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk, rt=RT)
+        out = chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk, rt=RT)
         ref = naive(q, k, v, causal, window)
         err = float(jnp.max(jnp.abs(out - ref)))
         assert err < 1e-4, (causal, window, chunk, err)
@@ -82,8 +82,8 @@ def test_swa_window_rounding_is_conservative():
     k = jax.random.normal(ks[1], (b, s, h, hd))
     v = jax.random.normal(ks[2], (b, s, h, hd))
     # window == s: must equal plain causal regardless of chunking
-    a = flash_attention(q, k, v, causal=True, window=s, chunk=8, rt=RT)
-    c = flash_attention(q, k, v, causal=True, window=None, chunk=8, rt=RT)
+    a = chunked_attention(q, k, v, causal=True, window=s, chunk=8, rt=RT)
+    c = chunked_attention(q, k, v, causal=True, window=None, chunk=8, rt=RT)
     np.testing.assert_allclose(
         np.asarray(a, np.float32), np.asarray(c, np.float32), rtol=1e-5, atol=1e-5
     )
