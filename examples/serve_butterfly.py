@@ -1,5 +1,6 @@
-"""Batched serving of a butterfly-sparse model: prefill + decode with KV
-caches through the ServeLoop driver.
+"""Continuous-batching serving of a butterfly-sparse model: more requests
+than slots stream through the ragged engine — short requests retire and hand
+their slot to the queue mid-stream.
 
     PYTHONPATH=src python examples/serve_butterfly.py
 """
@@ -19,11 +20,19 @@ cfg = dataclasses.replace(cfg, dtype="float32")
 mesh = make_local_mesh()
 params = M.init_params(cfg, jax.random.PRNGKey(0))
 
-loop = ServeLoop(cfg, mesh, params, batch=4, cache_len=64)
+# 6 mixed-length requests through 2 slots: the engine admits, evicts, and
+# re-admits without ever stalling a live slot on the longest request
+loop = ServeLoop(cfg, mesh, params, batch=2, cache_len=32)
 requests = [
-    Request(uid=i, prompt=np.arange(3 + i, dtype=np.int32) % cfg.vocab, max_new=8)
-    for i in range(4)
+    Request(
+        uid=i,
+        prompt=np.arange(3 + 2 * i, dtype=np.int32) % cfg.vocab,
+        max_new=2 + i % 4,
+    )
+    for i in range(6)
 ]
 done = loop.run(requests)
 for r in done:
-    print(f"request {r.uid}: prompt={list(r.prompt)} -> generated={r.generated}")
+    print(f"request {r.uid}: prompt_len={len(r.prompt)} -> generated={r.generated}")
+print(f"engine: {loop.stats['prefill_calls']} prefills, "
+      f"{loop.stats['decode_steps']} ragged decode steps")

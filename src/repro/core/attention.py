@@ -27,6 +27,8 @@ __all__ = [
     "AttentionSpec",
     "attention_flops",
     "attention_hbm_bytes",
+    "ragged_attention_flops",
+    "ragged_attention_hbm_bytes",
 ]
 
 IMPLS = ("xla_chunked", "flash_kernel")
@@ -109,3 +111,48 @@ def attention_hbm_bytes(
     kv_io = dtype_bytes * batch * s_kv * kv_heads * head_dim * 2  # K + V once
     score_bytes = 4 if spec.f32_softmax else dtype_bytes
     return float(qo_io + kv_io + 4 * score_bytes * batch * heads * s_q * kv_vis)
+
+
+# --------------------------------------------------------------------------
+# Ragged (continuous-batching) accounting: per-row live KV
+# --------------------------------------------------------------------------
+
+
+def ragged_attention_flops(
+    s_q: int,
+    cur_lens,
+    heads: int,
+    head_dim: int,
+) -> float:
+    """Softmax-stage FLOPs of a ragged batch: each row attends exactly its
+    own live KV prefix (``cur_lens``, one length per request) — the batch
+    total is the sum, i.e. batch x *average* live KV per row.  ``s_q`` is 1
+    for a decode step, the bucketed prompt length for a ragged prefill."""
+    total = 0.0
+    for cl in cur_lens:
+        total += attention_flops(1, s_q, int(cl), heads, head_dim, causal=False)
+    return total
+
+
+def ragged_attention_hbm_bytes(
+    spec: AttentionSpec,
+    s_q: int,
+    cur_lens,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    *,
+    dtype_bytes: int = 2,
+) -> float:
+    """HBM traffic of the softmax stage over a ragged batch: the per-row sum
+    of :func:`attention_hbm_bytes` at that row's live KV length.  This is the
+    *useful* traffic — the continuous-batching engine's decode still streams
+    the padded cache, so (sum cur_lens) / (batch x cache_len) is exactly the
+    cache-utilization ratio the serve_throughput benchmark reports."""
+    total = 0.0
+    for cl in cur_lens:
+        total += attention_hbm_bytes(
+            spec, 1, s_q, int(cl), heads, kv_heads, head_dim,
+            causal=False, dtype_bytes=dtype_bytes,
+        )
+    return total

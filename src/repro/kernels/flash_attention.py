@@ -20,13 +20,14 @@ Prefill kernel
 Decode kernel
     flash-decode: grid = (batch x kv_heads, kv_tiles) over the cache, same
     VMEM partial-max/sum combine across kv tiles; the query block is the GQA
-    group of head vectors for one token.  Cache-length masking arrives as an
-    additive bias row computed by the ops wrapper (keeps scalars out of the
-    kernel; works identically under interpret mode).
+    group of head vectors for one token.  Cache-length masking arrives as a
+    *per-row* additive bias (keeps scalars out of the kernel; works
+    identically under interpret mode) — ragged batches hand every request its
+    own live-KV validity row.
 
 Layouts (pre-padded by :mod:`repro.kernels.ops`):
     prefill  q: (BK, G, Sq, D)   k, v: (BK, Skv, D)   y: (BK, G, Sq, D)
-    decode   q: (BK, Gp, D)      k, v: (BK, Skv, D)   bias: (1, Skv)
+    decode   q: (BK, Gp, D)      k, v: (BK, Skv, D)   bias: (BK, Skv)
     with BK = batch * kv_heads, G the GQA group, D the padded head dim.
 """
 
@@ -220,8 +221,9 @@ def mha_decode(
     kv_tile: int,
     interpret: bool = False,
 ) -> jax.Array:
-    """Flash-decode: q (BK, Gp, D); k, v (BK, Skv_pad, D); bias (1, Skv_pad)
-    additive mask row (0 for live keys, NEG_INF for padded / beyond cur_len).
+    """Flash-decode: q (BK, Gp, D); k, v (BK, Skv_pad, D); bias (BK, Skv_pad)
+    per-row additive mask (0 for live keys, NEG_INF for padded / beyond the
+    row's cur_len — ragged batches mask each request independently).
     Returns (BK, Gp, D)."""
     from jax.experimental.pallas import tpu as pltpu
 
@@ -229,6 +231,8 @@ def mha_decode(
     skv_pad = k.shape[1]
     if skv_pad % kv_tile:
         raise ValueError(f"padded cache {skv_pad} vs kv tile {kv_tile}")
+    if bias.shape != (bk, skv_pad):
+        raise ValueError(f"bias {bias.shape} vs expected {(bk, skv_pad)}")
 
     grid = (bk, skv_pad // kv_tile)
     return pl.pallas_call(
@@ -238,7 +242,7 @@ def mha_decode(
             pl.BlockSpec((1, gp, d), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, kv_tile, d), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, kv_tile, d), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, kv_tile), lambda b, j: (0, j)),
+            pl.BlockSpec((1, kv_tile), lambda b, j: (b, j)),
         ],
         out_specs=pl.BlockSpec((1, gp, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),

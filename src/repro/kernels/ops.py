@@ -226,7 +226,9 @@ def flash_decode(
 ) -> jax.Array:
     """Flash-decode over a KV cache: partial max/sum-exp combine across kv
     tiles in VMEM.  q: (B, H, hd); caches: (B, S, KV, hd) -> (B, H, hd).
-    ``cur_len`` (traced scalar ok) masks cache rows not yet written."""
+    ``cur_len`` masks cache rows not yet written: a traced scalar applies one
+    length to the whole batch, a (B,) vector gives every request its own live
+    length (ragged continuous batching)."""
     spec = spec or AttentionSpec(impl="flash_kernel")
     b, h, hd = q.shape
     skv, kvh = k_cache.shape[1], k_cache.shape[2]
@@ -244,10 +246,15 @@ def flash_decode(
     vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
 
     kpos = jnp.arange(skv_pad)
-    valid = kpos < skv
+    valid = (kpos < skv)[None, :]  # (1, Skv_pad)
     if cur_len is not None:
-        valid &= kpos < cur_len
-    bias = jnp.where(valid, 0.0, fa.NEG_INF).astype(jnp.float32)[None]
+        cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)  # scalar | (B, 1)
+        valid = valid & (kpos[None, :] < cl)
+    bias = jnp.where(valid, 0.0, fa.NEG_INF).astype(jnp.float32)
+    # one validity row per (batch, kv_head) grid row
+    bias = jnp.broadcast_to(bias[:, None, :], (b, kvh, skv_pad)).reshape(
+        b * kvh, skv_pad
+    )
 
     y = fa.mha_decode(
         qt, kt, vt, bias, scale=1.0 / math.sqrt(hd), kv_tile=tk,

@@ -52,15 +52,17 @@ def mha_decode_reference(
     v_cache: jax.Array,
     cur_len: jax.Array | None = None,
 ) -> jax.Array:
-    """One-token oracle.  q: (B, H, hd); caches: (B, S, KV, hd)."""
+    """One-token oracle.  q: (B, H, hd); caches: (B, S, KV, hd);
+    ``cur_len`` scalar or per-row (B,) live lengths."""
     b, h, hd = q.shape
     kvh = k_cache.shape[2]
     qr = q.reshape(b, kvh, h // kvh, hd).astype(jnp.float32)
     scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32))
     scores = scores / jnp.sqrt(jnp.float32(hd))
     if cur_len is not None:
-        mask = jnp.arange(k_cache.shape[1]) < cur_len
-        scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+        cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)
+        mask = jnp.arange(k_cache.shape[1])[None, :] < cl
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
     return out.reshape(b, h, hd).astype(q.dtype)

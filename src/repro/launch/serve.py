@@ -1,15 +1,24 @@
-"""Batched serving runtime: jit'd prefill + decode with sharded KV caches.
+"""Ragged continuous-batching serve runtime: jit'd prefill + decode with
+sharded KV caches.
 
 `make_serve_fns` builds the two compiled entry points the dry-run exercises
 (`prefill_32k` lowers prefill; `decode_32k` / `long_500k` lower decode_step);
-`ServeLoop` is a minimal continuous-batching driver used by the example.
+with ``ragged=True`` the prefill takes per-request prompt lengths and the
+decode takes a (B,) position vector instead of a batch-wide scalar.
+
+`ServeLoop` is the continuous-batching engine: requests stream through a
+fixed set of batch *slots* — each admission runs a bucketed batch-1 prefill
+(right-padded, masked by true length) and inserts the resulting caches into
+the shared KV cache at the slot index; every decode step advances all live
+slots with per-request positions and live-KV masks, so short requests retire
+and hand their slot to the queue without stalling on the longest request
+(the request-level analogue of the paper's §V-A {Load | Cal | Store}
+streaming: admission/eviction keeps the decode array saturated).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,7 +29,7 @@ from repro.models import model as M
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 
-__all__ = ["make_serve_fns", "cache_shardings", "abstract_cache", "ServeLoop"]
+__all__ = ["make_serve_fns", "cache_shardings", "abstract_cache", "Request", "ServeLoop"]
 
 
 def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
@@ -44,9 +53,14 @@ def make_serve_fns(
     batch: int,
     cache_len: int,
     attn_impl: str | None = None,
+    ragged: bool = False,
 ):
-    """Returns (prefill_fn(params, batch_dict) -> (logits, caches),
-    decode_fn(params, caches, tokens, pos) -> (logits, caches)).
+    """Returns (prefill_fn, decode_fn).
+
+    ``ragged=False`` (static batch): prefill_fn(params, batch_dict) and
+    decode_fn(params, caches, tokens, pos-scalar).  ``ragged=True``:
+    prefill_fn(params, batch_dict, lengths (B,)) gathers each row's last real
+    token and decode_fn takes pos as a (B,) per-request position vector.
 
     ``attn_impl`` overrides the config's attention execution form for this
     serving instance (e.g. "flash_kernel" on a single-chip deployment)."""
@@ -60,17 +74,27 @@ def make_serve_fns(
     tok_shard = NamedSharding(mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names)))
     rep = NamedSharding(mesh, P())
 
-    prefill = jax.jit(
-        lambda params, b: tf.prefill(params, cfg, b, rt, cache_len=cache_len),
-        in_shardings=(p_shard, None),
-        out_shardings=(tok_shard, c_shard),
-        static_argnums=(),
-    )
+    if ragged:
+        prefill = jax.jit(
+            lambda params, b, lengths: tf.prefill(
+                params, cfg, b, rt, cache_len=cache_len, lengths=lengths
+            ),
+            in_shardings=(p_shard, None, rep),
+            out_shardings=(tok_shard, c_shard),
+        )
+        pos_shard = rep  # (B,) per-request positions, replicated
+    else:
+        prefill = jax.jit(
+            lambda params, b: tf.prefill(params, cfg, b, rt, cache_len=cache_len),
+            in_shardings=(p_shard, None),
+            out_shardings=(tok_shard, c_shard),
+        )
+        pos_shard = rep
     decode = jax.jit(
         lambda params, caches, tokens, pos: tf.decode_step(
             params, cfg, caches, tokens, pos, rt
         ),
-        in_shardings=(p_shard, c_shard, tok_shard, rep),
+        in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
         out_shardings=(tok_shard, c_shard),
         donate_argnums=(1,),
     )
@@ -83,47 +107,178 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new: int
     generated: list[int] = dataclasses.field(default_factory=list)
+    extras: dict = dataclasses.field(default_factory=dict)  # e.g. encdec frames
+
+
+def _next_bucket(n: int, cap: int, floor: int = 8) -> int:
+    """Smallest power-of-two >= n (>= floor), capped at ``cap`` but never
+    below n — bounds the number of compiled prefill shapes."""
+    b = floor
+    while b < n:
+        b *= 2
+    return max(n, min(b, cap))
 
 
 class ServeLoop:
-    """Minimal batched decode loop (static batch, greedy sampling).
+    """Continuous-batching decode loop (slot admit/evict, greedy sampling).
 
-    Requests are padded into one batch, prefilled once, then decoded
-    step-by-step; finished requests exit with their generations.
+    Per-slot host state mirrors the device-side (B,)-vector threading:
+    ``pos[b]`` is request b's next write position (== tokens seen so far),
+    fed to ``decode_step`` so RoPE angles, cache writes and live-KV masks are
+    all per-request.  Prompts are *right*-padded into prefill buckets — real
+    tokens at positions 0..L-1, so positions and causal masks are exact and
+    pad keys are never attended (masked by the decode ``cur_len`` and
+    overwritten in place by the first decode steps).
+
+    ``static_batching=True`` degrades admission to wave scheduling (admit
+    only when every slot is free) — the old-ServeLoop baseline the
+    serve_throughput benchmark compares against; the decode path itself stays
+    ragged-correct.
     """
 
     def __init__(
         self, cfg: ModelConfig, mesh: Mesh, params, *,
         batch: int, cache_len: int, attn_impl: str | None = None,
+        static_batching: bool = False,
     ):
         if attn_impl is not None:
             cfg = dataclasses.replace(
                 cfg, attention=dataclasses.replace(cfg.attention, impl=attn_impl)
             )
+        if cfg.sliding_window and cache_len < cfg.sliding_window:
+            raise ValueError(
+                f"cache_len {cache_len} < sliding_window {cfg.sliding_window}: "
+                "the ring modulus must equal the window for prefill/decode "
+                "phase alignment"
+            )
+        stateful = [s.mixer for s in cfg.period_slots if s.mixer != "attn"]
+        if stateful:
+            raise ValueError(
+                f"{cfg.name}: ragged serving requires attention-only stacks — "
+                f"{stateful} mixers integrate right-pad tokens into their "
+                "state during bucketed prefill (no per-row mask can undo it)"
+            )
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.batch, self.cache_len = batch, cache_len
-        self.prefill_fn, self.decode_fn = make_serve_fns(
-            cfg, mesh, batch=batch, cache_len=cache_len
+        self.static_batching = static_batching
+        # batch-1 ragged prefill (jit retraces per bucket shape; caches insert
+        # at a traced slot index so one compile covers every slot) + batch-wide
+        # ragged decode, both through the sharded serve entry points
+        self.prefill_fn, _ = make_serve_fns(
+            cfg, mesh, batch=1, cache_len=cache_len, ragged=True
+        )
+        _, self.decode_fn = make_serve_fns(
+            cfg, mesh, batch=batch, cache_len=cache_len, ragged=True
+        )
+        self._insert = jax.jit(
+            lambda caches, wave, slot: jax.tree.map(
+                lambda c, w: jax.lax.dynamic_update_slice_in_dim(
+                    c, w.astype(c.dtype), slot, axis=1
+                ),
+                caches,
+                wave,
+            ),
+            donate_argnums=(0,),
+        )
+        self.stats: dict[str, int] = {}
+
+    # -- per-slot prefill -------------------------------------------------
+
+    def _prefill_one(self, r: Request):
+        """Prefill one request (batch=1, right-padded to a bucket); returns
+        (first generated token, batch-1 cache tree)."""
+        ln = len(r.prompt)
+        bucket = _next_bucket(ln, self.cache_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :ln] = r.prompt
+        b = {"tokens": jnp.asarray(toks)}
+        for key, val in r.extras.items():
+            b[key] = jnp.asarray(val)[None]
+        logits, wave = self.prefill_fn(self.params, b, jnp.asarray([ln], jnp.int32))
+        self.stats["prefill_calls"] = self.stats.get("prefill_calls", 0) + 1
+        return int(jnp.argmax(logits[0])), wave
+
+    def _zero_caches(self):
+        specs = tf.cache_specs(self.cfg, self.batch, self.cache_len)
+        dt = jnp.dtype(self.cfg.dtype)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, dt),
+            specs,
+            is_leaf=lambda x: isinstance(x, shd.ParamSpec),
         )
 
+    # -- engine loop ------------------------------------------------------
+
     def run(self, requests: list[Request]) -> list[Request]:
-        assert len(requests) <= self.batch
-        plen = max(len(r.prompt) for r in requests)
-        toks = np.zeros((self.batch, plen), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
-        with self.mesh:
-            logits, caches = self.prefill_fn(self.params, {"tokens": jnp.asarray(toks)})
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            max_new = max(r.max_new for r in requests)
-            for j in range(max_new):
-                for i, r in enumerate(requests):
-                    if j < r.max_new:
-                        r.generated.append(int(nxt[i]))
-                if j == max_new - 1:
-                    break
-                logits, caches = self.decode_fn(
-                    self.params, caches, nxt[:, None], jnp.int32(plen + j)
+        """Serve every request to completion; returns them in input order.
+
+        Admission fills free slots from the queue (per-slot prefill + cache
+        insert), then one ragged decode step advances all live slots;
+        finished requests retire immediately and free their slot for the
+        next admission — decode never stalls on the longest request.
+        """
+        for r in requests:
+            if len(r.prompt) < 1:
+                raise ValueError(f"request {r.uid}: prompt must be non-empty")
+            if len(r.prompt) > self.cache_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt {len(r.prompt)} > cache_len {self.cache_len}"
                 )
-                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            if r.max_new < 1:
+                raise ValueError(f"request {r.uid}: max_new must be >= 1")
+            # without a ring, decode writes positions L .. L+max_new-2 straight
+            # into the cache — past cache_len they would silently clamp
+            need = len(r.prompt) + r.max_new - 1
+            if not self.cfg.sliding_window and need > self.cache_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt+max_new needs {need} cache rows "
+                    f"> cache_len {self.cache_len}"
+                )
+            r.generated.clear()
+        queue = list(requests)
+        qi = 0
+        active: list[Request | None] = [None] * self.batch
+        pos = np.zeros(self.batch, np.int32)  # next write position per slot
+        nxt = np.zeros(self.batch, np.int32)  # last sampled token per slot
+        self.stats = {"prefill_calls": 0, "decode_steps": 0}
+        with self.mesh:
+            caches = self._zero_caches()
+            while qi < len(queue) or any(r is not None for r in active):
+                # admit: fill free slots (waves only, under static batching)
+                may_admit = not self.static_batching or all(
+                    r is None for r in active
+                )
+                if may_admit:
+                    for slot in range(self.batch):
+                        if qi >= len(queue):
+                            break
+                        if active[slot] is not None:
+                            continue
+                        r = queue[qi]
+                        qi += 1
+                        tok, wave = self._prefill_one(r)
+                        r.generated.append(tok)
+                        if r.max_new <= 1:
+                            continue  # done at prefill; slot stays free
+                        caches = self._insert(caches, wave, jnp.int32(slot))
+                        active[slot] = r
+                        pos[slot] = len(r.prompt)
+                        nxt[slot] = tok
+                if not any(r is not None for r in active):
+                    continue
+                # one ragged decode step for the whole batch
+                logits, caches = self.decode_fn(
+                    self.params, caches, jnp.asarray(nxt[:, None]), jnp.asarray(pos)
+                )
+                self.stats["decode_steps"] += 1
+                toks = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+                for slot in range(self.batch):
+                    r = active[slot]
+                    if r is None:
+                        continue
+                    r.generated.append(int(toks[slot]))
+                    pos[slot] += 1
+                    nxt[slot] = toks[slot]
+                    if len(r.generated) >= r.max_new:
+                        active[slot] = None  # evict: slot frees for the queue
         return requests

@@ -189,7 +189,9 @@ def decode_attention(
 ) -> jax.Array:
     """One-token attention over a (possibly sequence-sharded) KV cache.
 
-    q: (B, H, hd); caches: (B, S, KV, hd).  Scores stay tiny, so plain
+    q: (B, H, hd); caches: (B, S, KV, hd).  ``cur_len`` masks unwritten cache
+    rows: a scalar applies one live length batch-wide, a (B,) vector masks
+    per request (ragged continuous batching).  Scores stay tiny, so plain
     einsum + softmax — XLA inserts the cross-shard max/sum reductions when
     the cache's S axis is sharded (flash-decode style combine).
     """
@@ -202,8 +204,9 @@ def decode_attention(
         "bkgd,bskd->bkgs", qr, k_cache, preferred_element_type=jnp.float32
     ) * scale
     if cur_len is not None:
-        mask = jnp.arange(k_cache.shape[1]) < cur_len
-        scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+        cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)  # scalar | (B, 1)
+        mask = jnp.arange(k_cache.shape[1])[None, :] < cl  # (1|B, S)
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
     return out.reshape(b, h, hd)
@@ -246,7 +249,10 @@ def run_decode_attention(
     spec: AttentionSpec = AttentionSpec(),
     rt: Runtime = Runtime(),
 ) -> jax.Array:
-    """Execute one-token cache attention under the configured spec."""
+    """Execute one-token cache attention under the configured spec.
+
+    ``cur_len``: None (whole cache live), scalar (batch-wide live length), or
+    (B,) per-request live lengths (ragged continuous batching)."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 

@@ -152,6 +152,23 @@ def _proj(aparams, cfg, x, name, heads):
     return pp.apply_linear_p(aparams[name], spec, x)
 
 
+def _ring_place(c: jax.Array, lengths: jax.Array, klen: int) -> jax.Array:
+    """Reorder a full-length KV tensor into ring order: slot ``t`` holds the
+    newest key whose absolute position ≡ t (mod klen) below the row's length.
+
+    c: (B, S, KV, hd) -> (B, klen, KV, hd).  A later decode write at
+    ``pos % klen`` then lands exactly on the oldest in-window key — for any
+    prompt length, not just multiples of the window.  Rows with
+    ``lengths[b] < klen`` leave slots >= lengths[b] as clamped duplicates;
+    the decode-side ``cur_len`` mask never reads them.
+    """
+    t = jnp.arange(klen)
+    last = lengths.astype(jnp.int32)[:, None] - 1  # (B, 1)
+    p = last - ((last - t[None, :]) % klen)
+    p = jnp.clip(p, 0, c.shape[1] - 1)
+    return jnp.take_along_axis(c, p[:, :, None, None], axis=1)
+
+
 def apply_attention(
     aparams: dict,
     cfg: ModelConfig,
@@ -166,6 +183,7 @@ def apply_attention(
     kv_source: jax.Array | None = None,
     is_cross: bool = False,
     use_rope: bool = True,
+    lengths: jax.Array | None = None,  # (B,) true prompt lengths (ragged prefill)
 ):
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -193,14 +211,21 @@ def apply_attention(
         if not is_cross:  # self-attention: append the token's kv at pos
             cache_len = cache["k"].shape[1]
             wpos = pos % cache_len if cfg.sliding_window else pos
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k_new.astype(cache["k"].dtype), wpos, axis=1
-            )
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v_new.astype(cache["v"].dtype), wpos, axis=1
-            )
+            kn = k_new.astype(cache["k"].dtype)
+            vn = v_new.astype(cache["v"].dtype)
+            if jnp.ndim(pos) == 0:  # batch-wide position (static batch)
+                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], kn, wpos, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], vn, wpos, axis=1)
+            else:  # ragged: every request writes at its own position
+                upd = jax.vmap(
+                    lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+                )
+                kc, vc = upd(cache["k"], kn, wpos), upd(cache["v"], vn, wpos)
             new_cache = {"k": kc, "v": vc}
-            cur = None if cfg.sliding_window else jnp.minimum(pos + 1, cache_len)
+            # live-KV mask (scalar or (B,)): rows beyond min(pos+1, klen) are
+            # unwritten — for a sliding-window ring cache their zero-init keys
+            # would otherwise score e^0 in the softmax
+            cur = jnp.minimum(pos + 1, cache_len)
             out = run_decode_attention(q[:, 0], kc, vc, cur, spec=cfg.attention_spec, rt=rt)
         else:  # cross-attention: static KV from the encoder pass
             new_cache = cache
@@ -220,8 +245,15 @@ def apply_attention(
             if not is_cross and win and kc.shape[1] > win:
                 # keep only the ring window — otherwise the layer scan stacks
                 # the full-seq KV for every layer before the final slice
-                # (found via the 2-pod mixtral prefill: 120 GiB of temps)
-                kc, vc = kc[:, -win:], vc[:, -win:]
+                # (found via the 2-pod mixtral prefill: 120 GiB of temps).
+                # Ring (mod-window) order, per-row length: the decode write at
+                # pos % klen stays phase-aligned for any prompt length
+                ln = (
+                    lengths
+                    if lengths is not None
+                    else jnp.full((b,), kc.shape[1], jnp.int32)
+                )
+                kc, vc = _ring_place(kc, ln, win), _ring_place(vc, ln, win)
             new_cache = {"k": kc, "v": vc}
 
     out = _proj(aparams, cfg, out.reshape(b, s, h * hd), "wo", h)
@@ -252,6 +284,7 @@ def apply_slot(
     pos: jax.Array | None = None,
     enc_out: jax.Array | None = None,
     causal: bool = True,
+    lengths: jax.Array | None = None,
 ):
     """One layer: pre-norm mixer + (optional cross-attn) + pre-norm FFN."""
     aux = jnp.zeros((), jnp.float32)
@@ -261,6 +294,7 @@ def apply_slot(
         mix, c = apply_attention(
             sparams["attn"], cfg, hmix, rt, causal=causal, positions=positions,
             mode=mode, cache=None if cache is None else cache.get("attn"), pos=pos,
+            lengths=lengths,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -325,6 +359,7 @@ def run_stack(
     pos: jax.Array | None = None,
     enc_out: jax.Array | None = None,
     causal: bool = True,
+    lengths: jax.Array | None = None,  # (B,) ragged prompt lengths (prefill)
 ):
     """Scan the periodic layer pattern.  Returns (x, new_caches, aux_sum)."""
 
@@ -338,7 +373,7 @@ def run_stack(
             x, c, a = apply_slot(
                 slot, p_params[key], cfg, x, rt, mode=mode, positions=positions,
                 cache=None if p_cache is None else p_cache[key], pos=pos,
-                enc_out=enc_out, causal=causal,
+                enc_out=enc_out, causal=causal, lengths=lengths,
             )
             new_cache[key] = c
             aux = aux + a
@@ -458,12 +493,30 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: dict, rt: Runtime):
 
 
 def prefill(
-    params: Params, cfg: ModelConfig, batch: dict, rt: Runtime, cache_len: int
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    rt: Runtime,
+    cache_len: int,
+    *,
+    lengths: jax.Array | None = None,
 ):
-    """Run the prompt, return (last-token logits, caches padded to cache_len)."""
+    """Run the prompt, return (last-token logits, caches padded to cache_len).
+
+    ``lengths`` (B,) enables the ragged form: tokens are *right*-padded (real
+    tokens at 0..L-1, so RoPE positions and the causal mask are exact — pad
+    tokens sit strictly in the future of every real token and are never
+    attended), the returned logits are gathered at each row's own last real
+    token, and sliding-window caches are ring-placed per row.  Pad-token KV
+    written beyond a row's length is left in the cache; the decode-side
+    per-row ``cur_len`` mask (min(pos+1, klen)) never reads it and the first
+    decode steps overwrite it in place.  Stateful (mamba) mixers integrate the
+    whole padded sequence, so ragged lengths require attention-only stacks.
+    """
     tokens = batch["tokens"]
     x = embed_tokens(params, cfg, tokens, rt)
     if cfg.n_img_tokens and "img_embeds" in batch:
+        assert lengths is None, "ragged prefill does not support image prefixes"
         x = jnp.concatenate([batch["img_embeds"].astype(x.dtype), x], axis=1)
     enc_out = None
     if cfg.family == "encdec":
@@ -472,11 +525,16 @@ def prefill(
     x = _boundary(x, rt, cfg)
     x, caches, _ = run_stack(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="prefill",
-        positions=positions, enc_out=enc_out, causal=cfg.causal,
+        positions=positions, enc_out=enc_out, causal=cfg.causal, lengths=lengths,
     )
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)
-    logits = x[:, -1] @ params["head"].astype(x.dtype)
+    if lengths is None:
+        last = x[:, -1]
+    else:  # per-request last real token
+        idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = last @ params["head"].astype(x.dtype)
     caches = _pad_kv_caches(caches, cfg, cache_len)
     return logits, caches
 
@@ -547,9 +605,15 @@ def decode_step(
     pos: jax.Array,
     rt: Runtime,
 ):
-    """One token for the whole batch.  tokens: (B, 1); pos: scalar int32."""
+    """One token for the whole batch.  tokens: (B, 1); pos: scalar int32
+    (static batch) or (B,) int32 per-request positions (ragged batch —
+    RoPE angles, cache write slots, and live-KV masks all go per row)."""
     x = embed_tokens(params, cfg, tokens, rt)
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    else:
+        positions = pos[:, None]
     x, new_caches, _ = run_stack(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="decode",
         positions=positions, caches=caches, pos=pos, causal=cfg.causal,

@@ -126,6 +126,51 @@ def test_decode_cur_len_masks_cache_tail(impl):
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=ATOL, rtol=1e-4)
 
 
+@pytest.mark.parametrize("impl", ["xla_chunked", "flash_kernel"])
+def test_decode_per_row_cur_len(impl):
+    """Ragged batches: every request masks the cache at its OWN live length.
+
+    Regression for the (1, Skv) broadcast bias: one cur_len row shared by the
+    whole batch silently mis-masked every other request."""
+    b, h, kvh, hd, cache = 3, 4, 2, 16, 160
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, cache, kvh, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, cache, kvh, hd), jnp.float32)
+    cur = jnp.array([5, 97, 160], jnp.int32)  # heterogeneous live lengths
+    spec = AttentionSpec(impl=impl)
+    y = run_decode_attention(q, kc, vc, cur, spec=spec, rt=RT)
+    for i in range(b):
+        c = int(cur[i])
+        y_i = ref.mha_decode_reference(q[i : i + 1], kc[i : i + 1, :c], vc[i : i + 1, :c])
+        np.testing.assert_allclose(
+            np.asarray(y[i : i + 1]), np.asarray(y_i), atol=ATOL, rtol=1e-4,
+            err_msg=f"row {i} (cur_len {c})",
+        )
+    # per-row ref with the vector mask agrees too
+    y_ref = ref.mha_decode_reference(q, kc, vc, cur)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=ATOL, rtol=1e-4)
+
+
+def test_ragged_accounting_reduces_to_uniform():
+    """Ragged FLOP/byte accounting == per-row sum; uniform rows == batched."""
+    from repro.core.attention import (
+        attention_flops,
+        ragged_attention_flops,
+        ragged_attention_hbm_bytes,
+    )
+
+    spec = AttentionSpec(impl="xla_chunked")
+    h, kvh, hd = 16, 8, 64
+    lens = [128, 512, 1024, 32]
+    fl = ragged_attention_flops(1, lens, h, hd)
+    assert fl == sum(attention_flops(1, 1, l, h, hd, causal=False) for l in lens)
+    uniform = [256] * 4
+    assert ragged_attention_hbm_bytes(spec, 1, uniform, h, kvh, hd) == (
+        attention_hbm_bytes(spec, 4, 1, 256, h, kvh, hd, causal=False)
+    )
+
+
 def test_flash_kernel_is_differentiable():
     """Training through the fused form falls back to the XLA VJP."""
     q, k, v = _qkv(1, 16, 2, 2, 8, key=9)
