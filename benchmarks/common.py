@@ -13,6 +13,8 @@ are accounted analytically (reads + writes + model flops) — flagged in the
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Callable
 
 import jax
@@ -75,3 +77,20 @@ def emit(rows: list[tuple[str, float, str]]):
     """Print the `name,us_per_call,derived` CSV contract."""
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+
+def write_bench_json(path: str, section: str, rows: list[dict]) -> None:
+    """Merge ``rows`` under ``section`` into the machine-readable perf file
+    (``BENCH_attention.json``): each benchmark owns one section, re-runs
+    replace it, other sections survive — the cross-PR perf trajectory."""
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data[section] = rows
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")

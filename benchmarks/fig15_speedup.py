@@ -7,17 +7,29 @@ and (b) fused/orchestrated — analytic kernel accounting.  The speedup
 dense/fused mirrors the paper's tensor-core-vs-dataflow rows; staged/fused
 mirrors its cuda-core (butterfly on GPU) rows.
 
+``--attn flash`` adds the fused flash-attention softmax path rows;
+``--pattern butterfly|strided|global_window`` additionally prices the
+*block-sparse* flash kernel (the §III attention-map sparsity: the grid
+iterates only live kv tiles, so both FLOPs and kv re-streaming scale by the
+block map's density).  Every row also lands in the machine-readable
+``BENCH_attention.json`` (``--json`` to relocate) so the perf trajectory is
+tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.fig15_speedup --attn flash --pattern butterfly
+
 derived: speedups.
 """
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import butterfly as bf, monarch as mo, stage_division as sd
+from repro.core import monarch as mo, stage_division as sd
 from repro.core.attention import AttentionSpec, attention_flops, attention_hbm_bytes
-from benchmarks.common import analytic, emit, modeled, sds
+from benchmarks.common import analytic, emit, modeled, sds, write_bench_json
 
 CASES = [
     ("vit-at-all", 128, 256, 768),
@@ -43,25 +55,42 @@ def _fft_analytic(name, b, s, d):
     return analytic(name, flops, io)
 
 
-def rows():
+def _flash_analytic(name, b, s, h, hd, pattern="dense", pattern_arg=None):
+    spec = AttentionSpec(
+        impl="flash_kernel", pattern=pattern, pattern_arg=pattern_arg
+    )
+    return analytic(
+        name,
+        attention_flops(
+            b, s, s, h, hd, causal=False, pattern=pattern,
+            pattern_arg=pattern_arg, q_tile=spec.q_tile, kv_tile=spec.kv_tile,
+        ),
+        attention_hbm_bytes(spec, b, s, s, h, h, hd, causal=False),
+    )
+
+
+def rows(attn: str | None, pattern: str | None):
     out = []
     for name, b, s, d in CASES:
         h, hd = d // 64, 64
+        flash_rows = []
         if "at-all" in name:
             q = sds((b, s, h, hd))
             m_dense = modeled(f"fig15/{name}/dense", dense_attention, q, q, q)
             m_fused = _fft_analytic(f"fig15/{name}/butterfly-fused", b, s, d)
-            # the softmax path itself under the streaming-dataflow form:
-            # fused Pallas flash attention (scores VMEM-resident)
-            m_flash = analytic(
-                f"fig15/{name}/attn-flash-fused",
-                attention_flops(b, s, s, h, hd, causal=False),
-                attention_hbm_bytes(
-                    AttentionSpec(impl="flash_kernel"), b, s, s, h, h, hd, causal=False
-                ),
-            )
+            if attn:
+                # the softmax path itself under the streaming-dataflow form:
+                # fused Pallas flash attention (scores VMEM-resident)
+                flash_rows.append(
+                    _flash_analytic(f"fig15/{name}/attn-flash-fused", b, s, h, hd)
+                )
+                if pattern:
+                    # block-sparse flash: the grid iterates only live tiles
+                    flash_rows.append(_flash_analytic(
+                        f"fig15/{name}/attn-flash-{pattern}", b, s, h, hd,
+                        pattern=pattern,
+                    ))
         else:
-            m_flash = None
             x = sds((b * s, d))
             w = sds((d, 3 * d))
             m_dense = modeled(f"fig15/{name}/dense", lambda x, w: x @ w, x, w)
@@ -72,18 +101,42 @@ def rows():
             io = 3 * (2 * b * s * n2 * 2 + (nb * bsz**2 + bsz * nb**2) * 2)
             m_fused = analytic(f"fig15/{name}/butterfly-fused", flops, io)
         speed = m_dense.t / m_fused.t
-        out.append((m_dense.name, m_dense.us, f"bound={m_dense.bound}"))
-        out.append((m_fused.name, m_fused.us, f"speedup_vs_dense={speed:.2f}x"))
-        if m_flash is not None:
-            out.append((
-                m_flash.name, m_flash.us,
-                f"speedup_vs_dense={m_dense.t / m_flash.t:.2f}x",
-            ))
+        out.append((m_dense, f"bound={m_dense.bound}"))
+        out.append((m_fused, f"speedup_vs_dense={speed:.2f}x"))
+        for m in flash_rows:
+            out.append((m, f"speedup_vs_dense={m_dense.t / m.t:.2f}x"))
     return out
 
 
 def main():
-    emit(rows())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--attn", default=None, choices=["flash"],
+                    help="add fused flash-attention softmax-path rows")
+    ap.add_argument("--pattern", default=None,
+                    choices=["butterfly", "strided", "global_window"],
+                    help="add block-sparse flash rows under this pattern")
+    ap.add_argument("--json", default="BENCH_attention.json",
+                    help="machine-readable output path ('' disables)")
+    # parse_known: benchmarks.run invokes main() under its own argv
+    args, _ = ap.parse_known_args()
+    if args.pattern and not args.attn:
+        args.attn = "flash"  # sparse rows ARE flash rows — imply, don't drop
+
+    rws = rows(args.attn, args.pattern)
+    emit([(m.name, m.us, derived) for m, derived in rws])
+    if args.json:
+        write_bench_json(args.json, "fig15", [
+            {
+                "name": m.name,
+                "us": round(m.us, 3),
+                "flops": m.flops,
+                "hbm_bytes": m.hbm_bytes,
+                "bound": m.bound,
+                "source": m.source,
+                "derived": derived,
+            }
+            for m, derived in rws
+        ])
 
 
 if __name__ == "__main__":

@@ -11,7 +11,14 @@ so the decode array never idles.  Rows cover both attention execution forms
 ``ragged_attention_*``) and the cache-utilization ratio it implies.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--attn both]
-        [--batch 4] [--requests 12] [--cache-len 64] [--seed 0]
+        [--pattern butterfly] [--batch 4] [--requests 12] [--cache-len 64]
+        [--seed 0] [--json BENCH_attention.json]
+
+``--pattern`` runs the engine with a block-sparse attention map (sparse
+prefill + sparse decode through the pattern's live-tile tables).  Every row
+also lands in the machine-readable ``BENCH_attention.json`` (tokens/sec,
+FLOPs, HBM bytes per decode step) so the perf trajectory is tracked across
+PRs.
 """
 
 from __future__ import annotations
@@ -32,6 +39,8 @@ from repro.core.attention import (
 from repro.launch.mesh import make_local_mesh
 from repro.launch.serve import Request, ServeLoop
 from repro.models import model as M
+
+from benchmarks.common import write_bench_json
 
 
 def mixed_workload(cfg, n: int, cache_len: int, seed: int) -> list[Request]:
@@ -65,11 +74,15 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--attn", default="both",
                     choices=["xla_chunked", "flash_kernel", "both"])
+    ap.add_argument("--pattern", default="dense",
+                    choices=["dense", "butterfly", "strided", "global_window"])
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_attention.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args()
 
     base = dataclasses.replace(registry.get(args.arch, reduced=True), dtype="float32")
@@ -94,8 +107,11 @@ def main() -> None:
     )
     print(hdr)
     print("-" * len(hdr))
+    json_rows = []
     for impl in impls:
-        cfg = dataclasses.replace(base, attention=AttentionSpec(impl=impl))
+        cfg = dataclasses.replace(
+            base, attention=AttentionSpec(impl=impl, pattern=args.pattern)
+        )
         for static in (True, False):
             toks, dt, stats, done = run_mode(
                 cfg, mesh, params, reqs,
@@ -104,7 +120,12 @@ def main() -> None:
             # analytic ragged decode-step accounting at the workload's
             # steady state: every request halfway through its generation
             cur = [len(r.prompt) + r.max_new // 2 for r in done]
-            fl = ragged_attention_flops(1, cur, cfg.n_heads, cfg.head_dim)
+            spec = cfg.attention_spec
+            fl = ragged_attention_flops(
+                1, cur, cfg.n_heads, cfg.head_dim, pattern=spec.pattern,
+                pattern_arg=spec.pattern_arg, q_tile=spec.q_tile,
+                kv_tile=spec.kv_tile,
+            )
             hbm = ragged_attention_hbm_bytes(
                 cfg.attention_spec, 1, cur, cfg.n_heads, cfg.n_kv_heads,
                 cfg.head_dim,
@@ -116,6 +137,21 @@ def main() -> None:
                 f"{dt:>8.2f} {toks / dt:>8.1f} {fl:>17.3g} {hbm:>14.3g} "
                 f"{util:>10.2f}"
             )
+            json_rows.append({
+                "attn": impl,
+                "pattern": args.pattern,
+                "mode": mode,
+                "tokens": toks,
+                "decode_steps": stats["decode_steps"],
+                "decode_kv_live_max": stats.get("decode_kv_live_max"),
+                "wall_s": round(dt, 3),
+                "tokens_per_s": round(toks / dt, 2),
+                "live_kv_flops_per_step": fl,
+                "live_kv_hbm_bytes_per_step": hbm,
+                "cache_util": round(util, 3),
+            })
+    if args.json:
+        write_bench_json(args.json, "serve_throughput", json_rows)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,59 @@
+"""Hybrid butterfly-sparsity network [paper §III, Fig. 1] — the paper's
+attention-map orchestration target: early encoder layers run *butterfly-block-
+sparse attention* (the score matrix keeps only radix-2 stride-pair kv tiles —
+O(N log N) live blocks), the tail swaps attention for the FNet-style 2D-FFT
+mixer (FABNet's trade-off, paper ref [8]), and every FFN is a BPMM butterfly
+linear.  One config exercises all three sparsity substrates end to end.
+
+The per-slot ``attn_pattern`` override carries the depth split; the butterfly
+attention layers execute through whichever ``AttentionSpec.impl`` is selected
+(``+flash`` makes the kernel grid skip the dead tiles for real).
+"""
+
+from repro.core.api import ButterflyPolicy
+from repro.core.attention import AttentionSpec
+from repro.models.config import ModelConfig, Slot
+
+_ATTN = Slot("attn", "dense", attn_pattern="butterfly")
+_FFT = Slot("fft", "dense")
+
+FULL = ModelConfig(
+    name="hybrid-butterfly",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    vocab=30522,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+    slots_override=(_ATTN,) * 8 + (_FFT,) * 4,
+    attention=AttentionSpec(),
+    butterfly=ButterflyPolicy(
+        impl="monarch", on_qkv=False, on_out=False, on_ffn=True
+    ),
+)
+
+REDUCED = ModelConfig(
+    name="hybrid-butterfly-reduced",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    causal=False,
+    norm="layernorm",
+    act="gelu",
+    attn_chunk=8,
+    slots_override=(_ATTN,) * 2 + (_FFT,) * 2,
+    attention=AttentionSpec(q_tile=8),
+    butterfly=ButterflyPolicy(
+        impl="monarch", on_qkv=False, on_out=False, on_ffn=True, max_block=32
+    ),
+)

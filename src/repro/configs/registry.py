@@ -1,12 +1,17 @@
 """Architecture registry: ``get("<arch>[+variant...]", reduced=...)``.
 
 Variants apply the paper's technique to any architecture as config suffixes
-(stackable, e.g. ``yi-6b+bpmm+flash``):
+(stackable, e.g. ``yi-6b+bpmm+flash+butterfly_attn``):
     +bpmm      Monarch-grouped BPMM on qkv/out/ffn (the multilayer-dataflow form)
     +bpmm-r2   faithful radix-2 staged BPMM (the §Perf baseline form)
     +bpmm-k    fused Pallas-kernel BPMM
     +fft       2D-FFT attention replacement (non-causal stacks only)
     +flash     fused Pallas flash-attention kernel on the softmax path
+    +butterfly_attn  butterfly-block-sparse attention map (§III; radix-2
+                     stride pairs over kv tiles — under +flash the kernel
+                     grid skips dead tiles)
+    +strided_attn    strided/dilated block-sparse attention map
+    +global_attn     global+window block-sparse attention map
 """
 
 from __future__ import annotations
@@ -14,12 +19,12 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.api import ButterflyPolicy
-from repro.core.attention import AttentionSpec
 from repro.models.config import ModelConfig
 
 from repro.configs import (
     dbrx_132b,
     fabnet,
+    hybrid_butterfly,
     internvl2_26b,
     jamba_1_5_large,
     mamba2_130m,
@@ -44,6 +49,7 @@ _MODULES = {
     "whisper-base": whisper_base,
     "jamba-1.5-large": jamba_1_5_large,
     "fabnet-base": fabnet,
+    "hybrid-butterfly": hybrid_butterfly,
     "vanilla-1layer": vanilla_1layer,
 }
 
@@ -60,7 +66,7 @@ ASSIGNED = [
     "jamba-1.5-large",
 ]
 
-PAPER = ["fabnet-base", "vanilla-1layer"]
+PAPER = ["fabnet-base", "hybrid-butterfly", "vanilla-1layer"]
 
 _VARIANTS = {
     "bpmm": dict(impl="monarch"),
@@ -69,8 +75,13 @@ _VARIANTS = {
     "fft": dict(impl="monarch", fft_attention=True, on_qkv=False, on_out=False, on_ffn=False),
 }
 
+# attention-spec transforms: stackable, order-independent (each touches its
+# own field), e.g. "+flash+butterfly_attn" == "+butterfly_attn+flash"
 _ATTN_VARIANTS = {
-    "flash": AttentionSpec(impl="flash_kernel"),
+    "flash": dict(impl="flash_kernel"),
+    "butterfly_attn": dict(pattern="butterfly"),
+    "strided_attn": dict(pattern="strided"),
+    "global_attn": dict(pattern="global_window"),
 }
 
 
@@ -86,8 +97,9 @@ def get(name: str, reduced: bool = False) -> ModelConfig:
     cfg: ModelConfig = mod.REDUCED if reduced else mod.FULL
     for variant in variants:
         if variant in _ATTN_VARIANTS:
+            spec = dataclasses.replace(cfg.attention, **_ATTN_VARIANTS[variant])
             cfg = dataclasses.replace(
-                cfg, name=f"{cfg.name}+{variant}", attention=_ATTN_VARIANTS[variant]
+                cfg, name=f"{cfg.name}+{variant}", attention=spec
             )
             continue
         if variant not in _VARIANTS:

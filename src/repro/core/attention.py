@@ -23,8 +23,11 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core import sparsity
+
 __all__ = [
     "AttentionSpec",
+    "override_attention",
     "attention_flops",
     "attention_hbm_bytes",
     "ragged_attention_flops",
@@ -41,6 +44,14 @@ class AttentionSpec:
     ``chunk`` / ``f32_softmax`` apply to the ``xla_chunked`` form;
     ``q_tile`` / ``kv_tile`` are the Pallas grid tile sizes of the
     ``flash_kernel`` form (rows of Q and KV resident in VMEM per grid step).
+
+    ``pattern`` selects the static block-sparsity of the score matrix
+    (:mod:`repro.core.sparsity`: dense | causal | window | butterfly |
+    strided | global_window); ``pattern_arg`` is its knob (window tokens,
+    stride in tiles, global tile count).  The fused kernel iterates only live
+    blocks via the map's kv-tile index table; the XLA forms mask with the same
+    map — bit-identical liveness either way.  The pattern tile granularity is
+    ``q_tile`` x ``kv_tile`` for *both* impls.
     """
 
     impl: str = "xla_chunked"  # xla_chunked | flash_kernel
@@ -48,14 +59,75 @@ class AttentionSpec:
     q_tile: int = 128
     kv_tile: int = 128
     f32_softmax: bool = True
+    pattern: str = "dense"  # see repro.core.sparsity.PATTERNS
+    pattern_arg: int | None = None
 
     def __post_init__(self) -> None:
         if self.impl not in IMPLS:
             raise ValueError(f"unknown attention impl {self.impl!r}; known: {IMPLS}")
+        if self.pattern not in sparsity.PATTERNS:
+            raise ValueError(
+                f"unknown attention pattern {self.pattern!r}; known: {sparsity.PATTERNS}"
+            )
 
     @property
     def fused(self) -> bool:
         return self.impl == "flash_kernel"
+
+    @property
+    def sparse(self) -> bool:
+        """True when the pattern prunes blocks beyond causal/window."""
+        return self.pattern not in ("dense", "causal", "window")
+
+
+def override_attention(cfg, impl: str | None = None, pattern: str | None = None):
+    """Return ``cfg`` (any dataclass with an ``attention`` AttentionSpec
+    field) with the spec's impl/pattern replaced — the single override knob
+    behind the serve-engine and dry-run CLI surfaces.  No-op when both are
+    None."""
+    if impl is None and pattern is None:
+        return cfg
+    spec = cfg.attention
+    if impl is not None:
+        spec = dataclasses.replace(spec, impl=impl)
+    if pattern is not None:
+        spec = dataclasses.replace(spec, pattern=pattern)
+    return dataclasses.replace(cfg, attention=spec)
+
+
+def _pattern_kv_avg(
+    s_q: int,
+    s_kv: int,
+    *,
+    causal: bool,
+    window: int | None,
+    pattern: str,
+    pattern_arg: int | None,
+    q_tile: int,
+    kv_tile: int,
+) -> float:
+    """Average live kv per query row.  Structural patterns price the block
+    map exactly (block-granular, as the sparse kernel executes); the
+    dense/causal/window family keeps the closed forms.  A decode step
+    (``s_q == 1``) prices the *steady-state mean row* of the full CAUSAL map
+    — decode only ever reads the written prefix regardless of the caller's
+    ``causal`` flag, and the decoding token's own row density varies with
+    position, so the causal mean is what a stream of steps pays."""
+    if pattern not in ("dense", "causal", "window"):
+        s_q_eff = s_kv if s_q == 1 else s_q
+        causal_eff = True if s_q == 1 else causal
+        return sparsity.pattern_kv_density(
+            pattern, s_q_eff, s_kv, q_tile, kv_tile, causal=causal_eff,
+            window=window, pattern_arg=pattern_arg,
+        ) * s_kv
+    if pattern == "causal":
+        causal = True
+    if pattern == "window" and window is None:
+        window = pattern_arg
+    kv_avg = s_kv / 2 if (causal and s_q == s_kv) else s_kv
+    if window is not None:
+        kv_avg = min(kv_avg, window)
+    return kv_avg
 
 
 def attention_flops(
@@ -67,11 +139,19 @@ def attention_flops(
     *,
     causal: bool = True,
     window: int | None = None,
+    pattern: str = "dense",
+    pattern_arg: int | None = None,
+    q_tile: int = 128,
+    kv_tile: int = 128,
 ) -> float:
-    """Model FLOPs of the softmax stage (QK^T + PV), impl-independent."""
-    kv_avg = s_kv / 2 if (causal and s_q == s_kv) else s_kv
-    if window is not None:
-        kv_avg = min(kv_avg, window)
+    """Model FLOPs of the softmax stage (QK^T + PV) over the *live* score
+    area — impl-independent (the fused kernel skips dead blocks; the XLA form
+    wastes the difference computing masked blocks, which its HBM accounting
+    exposes)."""
+    kv_avg = _pattern_kv_avg(
+        s_q, s_kv, causal=causal, window=window, pattern=pattern,
+        pattern_arg=pattern_arg, q_tile=q_tile, kv_tile=kv_tile,
+    )
     return 2.0 * 2.0 * batch * s_q * kv_avg * heads * head_dim
 
 
@@ -92,17 +172,23 @@ def attention_hbm_bytes(
 
     ``flash_kernel``: one read of Q and one write of O; the score tile never
     leaves VMEM.  K/V are *re-streamed* from HBM once per (gqa group x q-tile)
-    grid row — liveness masking skips blocks above the causal diagonal /
-    outside the window, so each pass reads only the visible prefix.
+    grid row — the block map's kv-tile index table prunes the grid, so each
+    pass reads only the pattern-live tiles (density factor from
+    :mod:`repro.core.sparsity`), not the full prefix.
 
     ``xla_chunked``: K/V read once, but the full score matrix round-trips HBM
     (write + softmax read, probs write + einsum read: 4 passes over the
-    visible (S_q x S_kv) block, in f32 when ``f32_softmax``).
+    visible (S_q x S_kv) block, in f32 when ``f32_softmax``).  Structural
+    patterns are *mask-only* on this backend — dead blocks are still computed
+    and round-tripped, so the pattern does not shrink this term (the paper's
+    Fig. 2 point: sparsity without dataflow orchestration saves nothing).
     """
     qo_io = dtype_bytes * batch * s_q * heads * head_dim * 2  # Q read + O write
-    kv_vis = s_kv / 2 if (causal and s_q == s_kv) else s_kv
-    if window is not None:
-        kv_vis = min(kv_vis, window)
+    kv_vis = _pattern_kv_avg(
+        s_q, s_kv, causal=causal, window=window,
+        pattern=spec.pattern if spec.fused else "dense",
+        pattern_arg=spec.pattern_arg, q_tile=spec.q_tile, kv_tile=spec.kv_tile,
+    )
     if spec.fused:
         g = max(heads // max(kv_heads, 1), 1)
         kv_passes = g * max(-(-s_q // spec.q_tile), 1)
@@ -123,14 +209,23 @@ def ragged_attention_flops(
     cur_lens,
     heads: int,
     head_dim: int,
+    *,
+    pattern: str = "dense",
+    pattern_arg: int | None = None,
+    q_tile: int = 128,
+    kv_tile: int = 128,
 ) -> float:
     """Softmax-stage FLOPs of a ragged batch: each row attends exactly its
     own live KV prefix (``cur_lens``, one length per request) — the batch
     total is the sum, i.e. batch x *average* live KV per row.  ``s_q`` is 1
-    for a decode step, the bucketed prompt length for a ragged prefill."""
+    for a decode step, the bucketed prompt length for a ragged prefill.
+    Structural ``pattern``s scale each row by its block map's density."""
     total = 0.0
     for cl in cur_lens:
-        total += attention_flops(1, s_q, int(cl), heads, head_dim, causal=False)
+        total += attention_flops(
+            1, s_q, int(cl), heads, head_dim, causal=False, pattern=pattern,
+            pattern_arg=pattern_arg, q_tile=q_tile, kv_tile=kv_tile,
+        )
     return total
 
 

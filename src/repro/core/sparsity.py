@@ -1,0 +1,407 @@
+"""Static block-sparsity maps for the attention score matrix (paper §III).
+
+The paper's hybrid butterfly-sparsity network prunes the attention map itself:
+whole (q_tile x kv_tile) score blocks are statically dead and never computed.
+This module is the single source of truth for *which* blocks live — the Pallas
+kernels iterate only the live set (real compute/HBM skipping via the grid's
+kv-tile index map), the XLA forms mask with the same map, the analytic
+FLOP/HBM accounting scales by its density, and the test oracle expands it to a
+token-level mask.  One map, four consumers — parity is by construction.
+
+Patterns (``AttentionSpec.pattern``; block (i, j) indexes q-tile x kv-tile):
+
+* ``dense``          every block live (causal/window feasibility still prunes)
+* ``causal``         alias of dense with causal forced on
+* ``window``         alias of dense with a sliding window (``pattern_arg`` =
+                     window in tokens when the call site gives none)
+* ``butterfly``      radix-2 butterfly over kv tiles: j live for q-tile i iff
+                     ``i ^ j`` has at most one bit set — i and j differ in at
+                     most one bit, the union of all log2(n) butterfly stages'
+                     stride pairs (Pixelated-Butterfly-style, O(N log N) blocks)
+* ``strided``        local diagonal + every ``pattern_arg``-th earlier tile
+                     (Sparse-Transformer dilated form; default stride
+                     ~sqrt(n_kv_tiles))
+* ``global_window``  first ``pattern_arg`` kv tiles are global (every query
+                     attends them, their queries attend everything) + a local
+                     diagonal band (Longformer-style)
+
+Block liveness composes with causal/window *feasibility* (blocks entirely
+above the diagonal or outside the window are dead regardless of pattern) and
+with the fine in-tile mask (causal diagonal, window edge, padded keys) that
+keeps partially-live tiles exact.  Patterns are *block-granular* by
+definition: the token-level reference mask is the block map expanded to
+tokens, AND the fine constraints — the kernels and the oracle agree exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "PATTERNS",
+    "BlockMap",
+    "canonical_pattern",
+    "build_block_map",
+    "token_mask",
+    "pick_pattern_tiles",
+    "pattern_kv_density",
+    "decode_max_live",
+    "decode_live_tables",
+    "decode_token_mask",
+]
+
+PATTERNS = ("dense", "causal", "window", "butterfly", "strided", "global_window")
+
+_LANES = 128  # kv tiles align to the TPU lane width (mirrors flash_attention)
+
+
+def canonical_pattern(
+    pattern: str, pattern_arg: int | None, causal: bool, window: int | None
+) -> tuple[str, int | None, bool, int | None]:
+    """Fold the ``causal`` / ``window`` pattern *aliases* into the explicit
+    flags every execution path already carries, so kernels and masks only ever
+    see the structural patterns (dense / butterfly / strided / global_window)."""
+    if pattern == "causal":
+        return "dense", None, True, window
+    if pattern == "window":
+        win = window if window is not None else pattern_arg
+        if win is None:
+            raise ValueError("pattern 'window' needs pattern_arg (window tokens)")
+        return "dense", None, causal, win
+    return pattern, pattern_arg, causal, window
+
+
+def pick_pattern_tiles(s_q: int, s_kv: int, q_tile: int, kv_tile: int) -> tuple[int, int]:
+    """The *effective* tile grid a problem runs on (kernel clamp mirrored).
+
+    Every consumer of a block map — fused kernel, XLA mask, accounting, test
+    oracle — must build it on the same grid, so the clamp lives here and
+    :func:`repro.kernels.flash_attention.pick_tiles` delegates to it."""
+    tq = min(q_tile, -(-s_q // 8) * 8)
+    tk = min(kv_tile, -(-s_kv // _LANES) * _LANES)
+    return max(tq, 8), max(tk, _LANES)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMap:
+    """Static liveness of the (q_tile x kv_tile) score blocks + the packed
+    per-q-row kv-tile index map the sparse kernel grid iterates.
+
+    ``kv_index[i, jj]`` is the jj-th live kv-tile of q-tile row i; rows with
+    fewer than ``max_live`` live tiles pad with tile 0 and ``step_live`` 0 —
+    padded steps are skipped inside the kernel (no MXU work) and revisit an
+    already-resident block (no fresh HBM traffic)."""
+
+    pattern: str
+    s_q: int
+    s_kv: int
+    q_tile: int
+    kv_tile: int
+    causal: bool
+    window: int | None
+    live: np.ndarray  # (n_q_tiles, n_kv_tiles) bool
+    kv_index: np.ndarray  # (n_q_tiles, max_live) int32
+    step_live: np.ndarray  # (n_q_tiles, max_live) int32 (0 | 1)
+
+    @property
+    def n_q_tiles(self) -> int:
+        return self.live.shape[0]
+
+    @property
+    def n_kv_tiles(self) -> int:
+        return self.live.shape[1]
+
+    @property
+    def max_live(self) -> int:
+        return self.kv_index.shape[1]
+
+    @property
+    def grid_steps(self) -> int:
+        """kv-axis grid iterations per (batch x head x q-tile-row) sweep."""
+        return self.n_q_tiles * self.max_live
+
+    @property
+    def dense_grid_steps(self) -> int:
+        return self.n_q_tiles * self.n_kv_tiles
+
+    @property
+    def kv_density(self) -> float:
+        """Mean live-block fraction per q row — the analytic density factor."""
+        return float(self.live.sum()) / max(self.live.size, 1)
+
+
+def _span(i: int, q_tile: int, kv_tile: int, n_kv: int) -> tuple[int, int]:
+    """kv-tile indices overlapped by q-tile i (inclusive lo, hi)."""
+    lo = (i * q_tile) // kv_tile
+    hi = ((i + 1) * q_tile - 1) // kv_tile
+    return min(lo, n_kv - 1), min(hi, n_kv - 1)
+
+
+def _pattern_live(
+    pattern: str, nq: int, nk: int, q_tile: int, kv_tile: int,
+    causal: bool, pattern_arg: int | None,
+) -> np.ndarray:
+    live = np.zeros((nq, nk), bool)
+    if pattern in ("dense", "causal", "window"):
+        live[:] = True
+        return live
+    if pattern == "butterfly":
+        # i and j differ in at most one bit over the kv-tile index space
+        j = np.arange(nk)
+        for i in range(nq):
+            lo, hi = _span(i, q_tile, kv_tile, nk)
+            for ii in range(lo, hi + 1):
+                x = ii ^ j
+                live[i] |= (x & (x - 1)) == 0  # x == 0 or power of two
+        return live
+    if pattern == "strided":
+        stride = pattern_arg or max(2, int(math.isqrt(max(nk, 1))))
+        j = np.arange(nk)
+        for i in range(nq):
+            lo, hi = _span(i, q_tile, kv_tile, nk)
+            for ii in range(lo, hi + 1):
+                live[i] |= j == ii
+                if causal:
+                    live[i] |= (j < ii) & ((ii - j) % stride == 0)
+                else:
+                    live[i] |= np.abs(ii - j) % stride == 0
+        return live
+    if pattern == "global_window":
+        g = pattern_arg or 1
+        band = 1  # local diagonal band in tiles (window arg adds more)
+        j = np.arange(nk)
+        for i in range(nq):
+            lo, hi = _span(i, q_tile, kv_tile, nk)
+            live[i] |= j < g  # global kv tiles: everyone attends them
+            if lo < g:  # global q rows attend everything
+                live[i] = True
+            live[i] |= (j >= lo - band) & (j <= hi + band)
+        return live
+    raise ValueError(f"unknown sparsity pattern {pattern!r}; known: {PATTERNS}")
+
+
+def build_block_map(
+    pattern: str,
+    s_q: int,
+    s_kv: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+) -> BlockMap:
+    """Build the static per-q-tile live kv-tile map on the given tile grid.
+
+    ``q_tile`` / ``kv_tile`` must be the *effective* tiles of the executing
+    path (:func:`pick_pattern_tiles`).  The named ``causal`` / ``window``
+    aliases fold into the feasibility pruning; explicit ``causal`` / ``window``
+    args compose with every pattern."""
+    if pattern not in PATTERNS:
+        raise ValueError(f"unknown sparsity pattern {pattern!r}; known: {PATTERNS}")
+    if pattern == "causal":
+        causal = True
+    if pattern == "window":
+        window = window or pattern_arg
+        if window is None:
+            raise ValueError("pattern 'window' needs pattern_arg (window tokens)")
+    nq = -(-s_q // q_tile)
+    nk = -(-s_kv // kv_tile)
+    live = _pattern_live(pattern, nq, nk, q_tile, kv_tile, causal, pattern_arg)
+
+    i = np.arange(nq)[:, None]
+    j = np.arange(nk)[None, :]
+    live &= j * kv_tile < s_kv  # blocks entirely in key padding
+    if causal:
+        live &= j * kv_tile <= i * q_tile + q_tile - 1
+    if window is not None:
+        live &= j * kv_tile + kv_tile - 1 > i * q_tile - window
+    # every q row keeps >= 1 live block (an all-dead softmax row is NaN); the
+    # clamped diagonal block is always feasible under causal + window
+    for r in range(nq):
+        if not live[r].any():
+            lo, _ = _span(r, q_tile, kv_tile, nk)
+            live[r, lo] = True
+
+    max_live = max(int(live.sum(axis=1).max()), 1)
+    kv_index = np.zeros((nq, max_live), np.int32)
+    step_live = np.zeros((nq, max_live), np.int32)
+    for r in range(nq):
+        idx = np.nonzero(live[r])[0]
+        kv_index[r, : len(idx)] = idx
+        step_live[r, : len(idx)] = 1
+    return BlockMap(
+        pattern=pattern, s_q=s_q, s_kv=s_kv, q_tile=q_tile, kv_tile=kv_tile,
+        causal=causal, window=window, live=live, kv_index=kv_index,
+        step_live=step_live,
+    )
+
+
+def token_mask(bm: BlockMap) -> np.ndarray:
+    """Expand the block map to the exact token-level mask (s_q, s_kv): live
+    block AND fine causal/window constraints.  This is the oracle's mask and
+    the definition of pattern correctness for every execution form."""
+    m = np.repeat(np.repeat(bm.live, bm.q_tile, axis=0), bm.kv_tile, axis=1)
+    m = m[: bm.s_q, : bm.s_kv]
+    qpos = np.arange(bm.s_q)[:, None]
+    kpos = np.arange(bm.s_kv)[None, :]
+    if bm.causal:
+        m = m & (qpos >= kpos)
+    if bm.window is not None:
+        m = m & (kpos > qpos - bm.window)
+    return m
+
+
+def pattern_kv_density(
+    pattern: str,
+    s_q: int,
+    s_kv: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+) -> float:
+    """Fraction of the (s_q x s_kv) score area that is live under the pattern
+    — block-granular, i.e. exactly the compute/HBM the sparse kernel performs
+    (partially-live boundary tiles count whole, as executed)."""
+    tq, tk = pick_pattern_tiles(s_q, s_kv, q_tile, kv_tile)
+    bm = build_block_map(
+        pattern, s_q, s_kv, tq, tk, causal=causal, window=window,
+        pattern_arg=pattern_arg,
+    )
+    return bm.kv_density
+
+
+# --------------------------------------------------------------------------
+# Decode: per-row live kv-tile tables over the cache (traced positions)
+# --------------------------------------------------------------------------
+
+
+def decode_max_live(
+    pattern: str,
+    cache_len: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+) -> int:
+    """Static worst-case live kv-tile count for a single decode row — the
+    sparse decode grid's kv extent.  Exact: the max row population of the full
+    prefill-shaped map at the cache length (the decoding token's q-tile row is
+    one of those rows)."""
+    bm = build_block_map(
+        pattern, cache_len, cache_len, q_tile, kv_tile, causal=True,
+        window=window, pattern_arg=pattern_arg,
+    )
+    return int(bm.live.sum(axis=1).max())
+
+
+def _decode_live_jnp(pattern, qi, j, nk, q_tile, kv_tile, window, pattern_arg):
+    """Per-row block liveness (jnp): qi (B, 1) q-tile index, j (1, nk)."""
+    import jax.numpy as jnp
+
+    # q-tile span in kv-tile space (q_tile may differ from kv_tile)
+    lo = (qi * q_tile) // kv_tile
+    hi = ((qi + 1) * q_tile - 1) // kv_tile
+    hi = jnp.minimum(hi, nk - 1)
+    lo = jnp.minimum(lo, nk - 1)
+    if pattern in ("dense", "causal", "window"):
+        live = jnp.ones_like(j | qi, bool)
+    elif pattern == "butterfly":
+        live = jnp.zeros_like(j | qi, bool)
+        # static bound on the q-tile's kv-tile span; per-row gate keeps it
+        # identical to the static builder's inclusive [lo, hi] range
+        for off in range((q_tile - 1) // kv_tile + 2):
+            ii = jnp.minimum(lo + off, nk - 1)
+            x = ii ^ j
+            live |= ((x & (x - 1)) == 0) & (lo + off <= hi)
+    elif pattern == "strided":
+        stride = pattern_arg or max(2, int(math.isqrt(max(nk, 1))))
+        live = jnp.zeros_like(j | qi, bool)
+        for off in range((q_tile - 1) // kv_tile + 2):
+            ii = jnp.minimum(lo + off, nk - 1)
+            live |= ((j == ii) | ((j < ii) & ((ii - j) % stride == 0))) & (
+                lo + off <= hi
+            )
+    elif pattern == "global_window":
+        g = pattern_arg or 1
+        live = (j < g) | (lo < g) | ((j >= lo - 1) & (j <= hi + 1))
+    else:
+        raise ValueError(f"unknown sparsity pattern {pattern!r}; known: {PATTERNS}")
+    return live
+
+
+def decode_live_tables(
+    pattern: str,
+    cur_len,  # (B,) traced live lengths (pos + 1)
+    cache_len: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+    max_live: int | None = None,
+):
+    """Per-row packed live kv-tile tables for sparse flash-decode.
+
+    Returns (kv_index (B, max_live) int32, step_live (B, max_live) int32).
+    Row b's decoding token sits in q-tile ``(cur_len[b]-1) // q_tile``; its
+    live kv tiles are the pattern row restricted to written cache tiles
+    (``j * kv_tile < cur_len[b]``) — dead tiles are *absent from the table*,
+    so the kernel grid never visits them."""
+    import jax.numpy as jnp
+
+    nk = -(-cache_len // kv_tile)
+    if max_live is None:
+        max_live = decode_max_live(
+            pattern, cache_len, q_tile, kv_tile, window=window,
+            pattern_arg=pattern_arg,
+        )
+    max_live = min(max_live, nk)
+    cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)  # (B, 1)
+    qi = jnp.maximum(cl - 1, 0) // q_tile
+    j = jnp.arange(nk, dtype=jnp.int32)[None, :]  # (1, nk)
+    live = _decode_live_jnp(pattern, qi, j, nk, q_tile, kv_tile, window, pattern_arg)
+    live &= j * kv_tile < cl  # only written cache tiles
+    if window is not None:
+        live &= (j + 1) * kv_tile - 1 > cl - 1 - window
+    live |= j == jnp.minimum(qi * q_tile // kv_tile, nk - 1)  # diag always live
+    # pack live indices first (stable in j), pad with tile 0 / live 0
+    order = jnp.argsort(jnp.where(live, j, nk + j), axis=1)[:, :max_live]
+    packed_live = jnp.take_along_axis(live, order, axis=1)
+    kv_index = jnp.where(packed_live, order, 0).astype(jnp.int32)
+    return kv_index, packed_live.astype(jnp.int32)
+
+
+def decode_token_mask(
+    pattern: str,
+    cur_len,
+    cache_len: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+):
+    """Token-level decode mask (B, cache_len) bool (jnp) — the XLA decode
+    form's view of the same per-row live tile set (parity with the sparse
+    kernel by construction; the caller still ANDs its ``cur_len`` mask)."""
+    import jax.numpy as jnp
+
+    nk = -(-cache_len // kv_tile)
+    kv_index, step_live = decode_live_tables(
+        pattern, cur_len, cache_len, q_tile, kv_tile, window=window,
+        pattern_arg=pattern_arg, max_live=nk,
+    )
+    tile_live = jnp.zeros((kv_index.shape[0], nk), bool)
+    tile_live = tile_live.at[
+        jnp.arange(kv_index.shape[0])[:, None], kv_index
+    ].max(step_live > 0)
+    mask = jnp.repeat(tile_live, kv_tile, axis=1)[:, :cache_len]
+    return mask

@@ -1,5 +1,5 @@
 """Fused flash-attention kernels (Pallas, TPU target) — online softmax on
-VMEM-resident score tiles.
+VMEM-resident score tiles, iterating only *live* kv tiles.
 
 This is the paper's §IV orchestration applied to the attention AT-all itself:
 the (q_tile x kv_tile) score block is computed, masked, softmax-normalised and
@@ -10,24 +10,33 @@ stream through the grid exactly like :mod:`repro.kernels.monarch_bpmm`: one
 HBM read of Q/K/V and one HBM write of O per tile, with the TPU DMA engine
 double-buffering the next tile against MXU compute ({Load | Cal | Store}).
 
+Block sparsity (§III butterfly-sparsity): both kernels take a packed
+per-q-row *live kv-tile index map* (:mod:`repro.core.sparsity`) as
+scalar-prefetch arguments.  The kv grid axis has extent ``max_live`` (the
+widest row's live count), and the BlockSpec index maps dereference the table —
+so statically-dead kv tiles are never part of the grid: no DMA is issued for
+them and no MXU step runs.  Rows narrower than ``max_live`` pad with repeats
+of tile 0 flagged dead; padded steps skip compute under ``pl.when`` and
+revisit an already-streamed block.  A fine in-tile mask (causal diagonal,
+window edge, padded keys) keeps partially-live boundary tiles exact.
+
 Prefill kernel
-    grid = (batch x kv_heads, gqa_group, q_tiles, kv_tiles).  The kv axis is
-    the innermost (sequential on TPU) dimension; running max / sum-exp / out
+    grid = (batch x kv_heads, gqa_group, q_tiles, max_live_kv_tiles); the
+    table is static per (pattern, shape).  Running max / sum-exp / out
     accumulators live in VMEM scratch and carry across kv steps (the online
-    softmax).  Causal and sliding-window blocks that are statically dead for
-    a (q_tile, kv_tile) pair are skipped via ``pl.when``.
+    softmax).
 
 Decode kernel
-    flash-decode: grid = (batch x kv_heads, kv_tiles) over the cache, same
-    VMEM partial-max/sum combine across kv tiles; the query block is the GQA
-    group of head vectors for one token.  Cache-length masking arrives as a
-    *per-row* additive bias (keeps scalars out of the kernel; works
-    identically under interpret mode) — ragged batches hand every request its
-    own live-KV validity row.
+    flash-decode: grid = (batch x kv_heads, max_live); the table is *traced*
+    per-row data (each request's live tile set over the cache at its own
+    position — ragged batches truncate independently).  Cache-length masking
+    arrives as a per-row additive bias row.
 
 Layouts (pre-padded by :mod:`repro.kernels.ops`):
     prefill  q: (BK, G, Sq, D)   k, v: (BK, Skv, D)   y: (BK, G, Sq, D)
+             kv_index, step_live: (q_tiles, max_live) int32
     decode   q: (BK, Gp, D)      k, v: (BK, Skv, D)   bias: (BK, Skv)
+             kv_index, step_live: (BK, max_live) int32
     with BK = batch * kv_heads, G the GQA group, D the padded head dim.
 """
 
@@ -39,6 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.sparsity import pick_pattern_tiles
+
 __all__ = ["mha_prefill", "mha_decode", "pick_tiles", "NEG_INF"]
 
 NEG_INF = -1e30  # finite stand-in: exp(NEG_INF - m) underflows but never NaNs
@@ -46,36 +57,31 @@ _LANES = 128  # running-stat scratch is lane-replicated for TPU tiling
 
 
 def pick_tiles(s_q: int, s_kv: int, q_tile: int, kv_tile: int) -> tuple[int, int]:
-    """Clamp the spec's tile sizes to the (hardware-aligned) problem size."""
-    tq = min(q_tile, -(-s_q // 8) * 8)
-    tk = min(kv_tile, -(-s_kv // _LANES) * _LANES)
-    return max(tq, 8), max(tk, _LANES)
+    """Clamp the spec's tile sizes to the (hardware-aligned) problem size.
+
+    Delegates to :func:`repro.core.sparsity.pick_pattern_tiles` — block maps
+    and kernels must agree on the effective tile grid."""
+    return pick_pattern_tiles(s_q, s_kv, q_tile, kv_tile)
 
 
 def _prefill_kernel(
-    q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
+    kvi_ref, lv_ref, q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
     *, scale: float, causal: bool, window: int | None, s_q: int, s_kv: int,
     q_tile: int, kv_tile: int,
 ):
     i = pl.program_id(2)
-    j = pl.program_id(3)
+    jj = pl.program_id(3)
     nj = pl.num_programs(3)
+    j = kvi_ref[i, jj]  # the actual kv-tile index this grid step streams
 
-    @pl.when(j == 0)
+    @pl.when(jj == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # static-per-block liveness: skip kv blocks entirely above the causal
-    # diagonal or entirely left of the sliding window
-    live = j * kv_tile < s_kv
-    if causal:
-        live &= j * kv_tile <= i * q_tile + q_tile - 1
-    if window is not None:
-        live &= j * kv_tile + kv_tile - 1 > i * q_tile - window
-
-    @pl.when(live)
+    # table-padding steps (rows narrower than max_live) carry no live block
+    @pl.when(lv_ref[i, jj] > 0)
     def _step():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (tq, d)
         k = k_ref[0].astype(jnp.float32)  # (tk, d)
@@ -84,9 +90,11 @@ def _prefill_kernel(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (tq, tk)
 
+        # fine mask: padded keys + causal diagonal + window edge inside the
+        # (pattern-live) tile — block-level pruning already happened in the map
         qpos = i * q_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = j * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = kpos < s_kv  # padded keys
+        mask = kpos < s_kv
         if causal:
             mask &= qpos >= kpos
         if window is not None:
@@ -107,7 +115,7 @@ def _prefill_kernel(
         m_ref[...] = m_new
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
-    @pl.when(j == nj - 1)
+    @pl.when(jj == nj - 1)
     def _flush():
         l = l_ref[:, :1]
         y_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
@@ -123,6 +131,8 @@ def mha_prefill(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    kv_index: jax.Array,
+    step_live: jax.Array,
     *,
     scale: float,
     causal: bool,
@@ -135,74 +145,88 @@ def mha_prefill(
 ) -> jax.Array:
     """q: (BK, G, Sq_pad, D) -> y same shape; k, v: (BK, Skv_pad, D).
 
-    ``s_q`` / ``s_kv`` are the true (pre-padding) lengths; padded key columns
-    are masked inside the kernel, padded query rows are sliced off by the ops
-    wrapper."""
+    ``kv_index`` / ``step_live``: (Sq_pad/q_tile, max_live) packed live
+    kv-tile map (:class:`repro.core.sparsity.BlockMap`) — the kv grid axis
+    iterates the table, not the full tile range.  ``s_q`` / ``s_kv`` are the
+    true (pre-padding) lengths; padded key columns are masked inside the
+    kernel, padded query rows are sliced off by the ops wrapper."""
     from jax.experimental.pallas import tpu as pltpu
 
     bk, g, sq_pad, d = q.shape
     skv_pad = k.shape[1]
     if sq_pad % q_tile or skv_pad % kv_tile:
         raise ValueError(f"padded seqs {(sq_pad, skv_pad)} vs tiles {(q_tile, kv_tile)}")
+    nq, max_live = kv_index.shape
+    if nq != sq_pad // q_tile:
+        raise ValueError(f"kv_index rows {nq} vs q tiles {sq_pad // q_tile}")
 
-    grid = (bk, g, sq_pad // q_tile, skv_pad // kv_tile)
-    return pl.pallas_call(
-        functools.partial(
-            _prefill_kernel, scale=scale, causal=causal, window=window,
-            s_q=s_q, s_kv=s_kv, q_tile=q_tile, kv_tile=kv_tile,
-        ),
+    grid = (bk, g, nq, max_live)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # kv_index, step_live drive the DMA indexing
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, j: (b, g, i, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, j: (b, j, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv: (b, g, i, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv: (b, kvi[i, jj], 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv: (b, kvi[i, jj], 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, j: (b, g, i, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=pl.BlockSpec(
+            (1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv: (b, g, i, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((q_tile, _LANES), jnp.float32),
             pltpu.VMEM((q_tile, _LANES), jnp.float32),
             pltpu.VMEM((q_tile, d), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_kernel, scale=scale, causal=causal, window=window,
+            s_q=s_q, s_kv=s_kv, q_tile=q_tile, kv_tile=kv_tile,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(kv_index.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v)
 
 
 def _decode_kernel(
-    q_ref, k_ref, v_ref, bias_ref, y_ref, m_ref, l_ref, acc_ref,
+    kvi_ref, lv_ref, q_ref, k_ref, v_ref, bias_ref, y_ref, m_ref, l_ref, acc_ref,
     *, scale: float,
 ):
-    j = pl.program_id(1)
+    b = pl.program_id(0)
+    jj = pl.program_id(1)
     nj = pl.num_programs(1)
 
-    @pl.when(j == 0)
+    @pl.when(jj == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32) * scale  # (gp, d)
-    k = k_ref[0].astype(jnp.float32)  # (tk, d)
-    v = v_ref[0].astype(jnp.float32)
-    bias = bias_ref[0].astype(jnp.float32)  # (tk,): 0 | NEG_INF
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) + bias[None, :]  # (gp, tk)
-    valid = bias[None, :] > 0.5 * NEG_INF
+    @pl.when(lv_ref[b, jj] > 0)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale  # (gp, d)
+        k = k_ref[0].astype(jnp.float32)  # (tk, d)
+        v = v_ref[0].astype(jnp.float32)
+        bias = bias_ref[0].astype(jnp.float32)  # (tk,): 0 | NEG_INF
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) + bias[None, :]  # (gp, tk)
+        valid = bias[None, :] > 0.5 * NEG_INF
 
-    m_prev = m_ref[...]
-    m_cur = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
-    p = jnp.where(valid, jnp.exp(s - m_new[:, :1]), 0.0)
-    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-        p, v, preferred_element_type=jnp.float32
-    )
-    m_ref[...] = m_new
-    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        p = jnp.where(valid, jnp.exp(s - m_new[:, :1]), 0.0)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
-    @pl.when(j == nj - 1)
+    @pl.when(jj == nj - 1)
     def _flush():
         l = l_ref[:, :1]
         y_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
@@ -216,6 +240,8 @@ def mha_decode(
     k: jax.Array,
     v: jax.Array,
     bias: jax.Array,
+    kv_index: jax.Array,
+    step_live: jax.Array,
     *,
     scale: float,
     kv_tile: int,
@@ -224,6 +250,11 @@ def mha_decode(
     """Flash-decode: q (BK, Gp, D); k, v (BK, Skv_pad, D); bias (BK, Skv_pad)
     per-row additive mask (0 for live keys, NEG_INF for padded / beyond the
     row's cur_len — ragged batches mask each request independently).
+
+    ``kv_index`` / ``step_live``: (BK, max_live) per-row live kv-tile tables
+    (:func:`repro.core.sparsity.decode_live_tables`) — the grid's kv extent is
+    ``max_live``, not the cache tile count, so a short request against a deep
+    cache streams only its own written (and pattern-live) tiles.
     Returns (BK, Gp, D)."""
     from jax.experimental.pallas import tpu as pltpu
 
@@ -233,23 +264,30 @@ def mha_decode(
         raise ValueError(f"padded cache {skv_pad} vs kv tile {kv_tile}")
     if bias.shape != (bk, skv_pad):
         raise ValueError(f"bias {bias.shape} vs expected {(bk, skv_pad)}")
+    if kv_index.shape[0] != bk:
+        raise ValueError(f"kv_index rows {kv_index.shape[0]} vs BK {bk}")
+    max_live = kv_index.shape[1]
 
-    grid = (bk, skv_pad // kv_tile)
-    return pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale),
+    grid = (bk, max_live)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, gp, d), lambda b, j: (b, 0, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, kv_tile), lambda b, j: (b, j)),
+            pl.BlockSpec((1, gp, d), lambda b, jj, kvi, lv: (b, 0, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, jj, kvi, lv: (b, kvi[b, jj], 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, jj, kvi, lv: (b, kvi[b, jj], 0)),
+            pl.BlockSpec((1, kv_tile), lambda b, jj, kvi, lv: (b, kvi[b, jj])),
         ],
-        out_specs=pl.BlockSpec((1, gp, d), lambda b, j: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=pl.BlockSpec((1, gp, d), lambda b, jj, kvi, lv: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((gp, _LANES), jnp.float32),
             pltpu.VMEM((gp, _LANES), jnp.float32),
             pltpu.VMEM((gp, d), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(q, k, v, bias)
+    )(kv_index.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v, bias)

@@ -35,7 +35,11 @@ __all__ = ["monarch_bpmm", "pick_token_tile"]
 
 
 def pick_token_tile(gin: int, nb: int, b: int, dtype_bytes: int = 4) -> int:
-    """Token-tile size so x/u/y tiles fit a ~12 MB VMEM budget."""
+    """Token-tile size so x/u/y tiles fit a ~12 MB VMEM budget.
+
+    ``dtype_bytes`` must come from the ACTUAL activation dtype (bf16 tiles
+    are half the bytes of f32 and fit twice the tokens); the f32 default is a
+    conservative fallback for callers without an array in hand."""
     piece = nb * b
     per_token = (gin + 3) * piece * dtype_bytes  # x(gin) + u + acc + y
     budget = 12 * 1024 * 1024
@@ -73,7 +77,9 @@ def monarch_bpmm(
     (the ops wrapper pads)."""
     t, gin, nb, b = x.shape
     gout = r.shape[0]
-    tb = token_tile or pick_token_tile(gin, nb, b)
+    tb = token_tile or pick_token_tile(
+        gin, nb, b, dtype_bytes=jnp.dtype(x.dtype).itemsize
+    )
     if t % tb:
         raise ValueError(f"token count {t} not divisible by tile {tb}")
 

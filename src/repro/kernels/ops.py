@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stage_division as sd
+from repro.core import sparsity, stage_division as sd
 from repro.core.attention import AttentionSpec
 from repro.kernels import fft2d, flash_attention as fa, monarch_bpmm
 
@@ -55,7 +55,11 @@ def monarch_linear(params, spec, x: jax.Array) -> jax.Array:
     xf = _pad_axis(x.reshape(t, x.shape[-1]), -1, sp.din_pad)
     xf = xf.reshape(t, gin, nb, b)
 
-    tile = monarch_bpmm.pick_token_tile(gin, nb, b)
+    # tile budget from the ACTUAL activation dtype: bf16 tiles are half the
+    # bytes of f32, so they fit twice the tokens in the same VMEM budget
+    tile = monarch_bpmm.pick_token_tile(
+        gin, nb, b, dtype_bytes=jnp.dtype(x.dtype).itemsize
+    )
     tpad = -(-t // tile) * tile
     xf = _pad_axis(xf, 0, tpad)
     y = monarch_bpmm.monarch_bpmm(
@@ -140,21 +144,32 @@ def _round_up(n: int, to: int) -> int:
     return -(-n // to) * to
 
 
+canonical_pattern = sparsity.canonical_pattern
+
+
 def _flash_prefill_raw(
     q: jax.Array, k: jax.Array, v: jax.Array,
     causal: bool, window: int | None, q_tile: int, kv_tile: int,
+    pattern: str, pattern_arg: int | None,
 ) -> jax.Array:
     """Layout + padding around the Pallas prefill kernel.
 
     q: (B, S, H, hd); k, v: (B, Skv, KV, hd) -> (B, S, H, hd).  Head dim pads
     to the 128-lane boundary, sequences pad to the tile grid; padded keys are
-    masked inside the kernel, padded query rows are sliced off here."""
+    masked inside the kernel, padded query rows are sliced off here.  The
+    static block map (pattern liveness + causal/window feasibility) becomes
+    the kernel's packed kv-tile index map — dead tiles never enter the grid."""
     b, s, h, hd = q.shape
     skv, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     tq, tk = fa.pick_tiles(s, skv, q_tile, kv_tile)
     sq_pad, skv_pad = _round_up(s, tq), _round_up(skv, tk)
     d = _round_up(hd, _LANES)
+
+    bm = sparsity.build_block_map(
+        pattern, s, skv, tq, tk, causal=causal, window=window,
+        pattern_arg=pattern_arg,
+    )
 
     qt = q.reshape(b, s, kvh, g, hd).transpose(0, 2, 3, 1, 4).reshape(b * kvh, g, s, hd)
     qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - s), (0, d - hd)))
@@ -164,7 +179,8 @@ def _flash_prefill_raw(
     vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
 
     y = fa.mha_prefill(
-        qt, kt, vt, scale=1.0 / math.sqrt(hd), causal=causal, window=window,
+        qt, kt, vt, jnp.asarray(bm.kv_index), jnp.asarray(bm.step_live),
+        scale=1.0 / math.sqrt(hd), causal=causal, window=window,
         s_q=s, s_kv=skv, q_tile=tq, kv_tile=tk, interpret=_interpret(),
     )
     y = y[:, :, :s, :hd].reshape(b, kvh, g, s, hd)
@@ -174,24 +190,39 @@ def _flash_prefill_raw(
 # The kernel has no Pallas backward; training falls back to differentiating
 # the chunked XLA form (recompute — cheap next to the fwd save of score
 # traffic, and transient score memory stays bounded to (chunk x prefix),
-# unlike the naive full-score oracle).
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _flash_prefill(q, k, v, causal, window, q_tile, kv_tile):
-    return _flash_prefill_raw(q, k, v, causal, window, q_tile, kv_tile)
+# unlike the naive full-score oracle).  Pattern-sparse forms differentiate
+# the masked dense oracle under the same token mask.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_prefill(q, k, v, causal, window, q_tile, kv_tile, pattern, pattern_arg):
+    return _flash_prefill_raw(q, k, v, causal, window, q_tile, kv_tile, pattern, pattern_arg)
 
 
-def _flash_prefill_fwd(q, k, v, causal, window, q_tile, kv_tile):
-    return _flash_prefill_raw(q, k, v, causal, window, q_tile, kv_tile), (q, k, v)
+def _flash_prefill_fwd(q, k, v, causal, window, q_tile, kv_tile, pattern, pattern_arg):
+    y = _flash_prefill_raw(q, k, v, causal, window, q_tile, kv_tile, pattern, pattern_arg)
+    return y, (q, k, v)
 
 
-def _flash_prefill_bwd(causal, window, q_tile, kv_tile, res, g):
+def _flash_prefill_bwd(causal, window, q_tile, kv_tile, pattern, pattern_arg, res, g):
     # local import: avoids a module-load cycle (models.layers imports this
     # module lazily from inside run_attention)
     from repro.models.layers import chunked_attention
 
     q, k, v = res
+    pmask = None
+    if pattern != "dense":
+        tq, tk = fa.pick_tiles(q.shape[1], k.shape[1], q_tile, kv_tile)
+        bm = sparsity.build_block_map(
+            pattern, q.shape[1], k.shape[1], tq, tk, causal=causal,
+            window=window, pattern_arg=pattern_arg,
+        )
+        pmask = sparsity.token_mask(bm)
+    # chunked (not the naive oracle): transient score memory stays bounded to
+    # (chunk x prefix) — the full-score vjp residual is S^2 per head, OOM in
+    # exactly the long-context regime sparse patterns target
     _, vjp = jax.vjp(
-        lambda q, k, v: chunked_attention(q, k, v, causal=causal, window=window),
+        lambda q, k, v: chunked_attention(
+            q, k, v, causal=causal, window=window, pattern_mask=pmask
+        ),
         q, k, v,
     )
     return vjp(g)
@@ -211,9 +242,13 @@ def flash_attention(
 ) -> jax.Array:
     """Fused online-softmax attention.  Same contract as
     ``repro.models.layers.chunked_attention`` (q: (B, S, H, hd); k, v:
-    (B, Skv, KV, hd)) — used when ``AttentionSpec.impl == "flash_kernel"``."""
+    (B, Skv, KV, hd)) — used when ``AttentionSpec.impl == "flash_kernel"``.
+    ``spec.pattern`` selects the block-sparsity map the kernel grid iterates."""
     spec = spec or AttentionSpec(impl="flash_kernel")
-    return _flash_prefill(q, k, v, causal, window, spec.q_tile, spec.kv_tile)
+    pattern, arg, causal, window = canonical_pattern(
+        spec.pattern, spec.pattern_arg, causal, window
+    )
+    return _flash_prefill(q, k, v, causal, window, spec.q_tile, spec.kv_tile, pattern, arg)
 
 
 def flash_decode(
@@ -223,15 +258,35 @@ def flash_decode(
     cur_len: jax.Array | None = None,
     *,
     spec: AttentionSpec | None = None,
+    kv_live: int | None = None,
 ) -> jax.Array:
     """Flash-decode over a KV cache: partial max/sum-exp combine across kv
     tiles in VMEM.  q: (B, H, hd); caches: (B, S, KV, hd) -> (B, H, hd).
     ``cur_len`` masks cache rows not yet written: a traced scalar applies one
     length to the whole batch, a (B,) vector gives every request its own live
-    length (ragged continuous batching)."""
+    length (ragged continuous batching).
+
+    True tile skipping, two mechanisms:
+    * ``kv_live`` (static, host-known bound on every row's live length — the
+      serve engine's bucketed ``max(pos)+1``) truncates the streamed cache to
+      its first ``kv_live`` rows before the kernel: a 128-token request on a
+      16k cache reads 1 kv tile, not 128.
+    * ``spec.pattern`` builds a *per-row* live kv-tile table from ``cur_len``
+      (the decoding token's pattern row), so the grid's kv extent is the
+      pattern's static worst case (O(log n) tiles for butterfly) and each row
+      visits only its own live tiles."""
     spec = spec or AttentionSpec(impl="flash_kernel")
+    pattern, arg, _, window = canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
     b, h, hd = q.shape
     skv, kvh = k_cache.shape[1], k_cache.shape[2]
+    if kv_live is not None and kv_live < skv:
+        # static truncation: rows beyond every request's live length are
+        # sliced out of the stream entirely (the bias would only mask them)
+        skv = max(int(kv_live), 1)
+        k_cache = k_cache[:, :skv]
+        v_cache = v_cache[:, :skv]
     g = h // kvh
     _, tk = fa.pick_tiles(1, skv, spec.q_tile, spec.kv_tile)
     skv_pad = _round_up(skv, tk)
@@ -245,20 +300,31 @@ def flash_decode(
     kt = jnp.pad(kt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
     vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
 
+    if cur_len is None:
+        cl_rows = jnp.full((b,), skv, jnp.int32)
+    else:  # scalar broadcasts; (B,) stays per-row
+        cl_rows = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
     kpos = jnp.arange(skv_pad)
-    valid = (kpos < skv)[None, :]  # (1, Skv_pad)
-    if cur_len is not None:
-        cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)  # scalar | (B, 1)
-        valid = valid & (kpos[None, :] < cl)
+    valid = (kpos[None, :] < skv) & (kpos[None, :] < cl_rows[:, None])  # (B, Skv_pad)
+    if window is not None:  # fine window edge (matches the prefill mask)
+        valid &= kpos[None, :] > cl_rows[:, None] - 1 - window
     bias = jnp.where(valid, 0.0, fa.NEG_INF).astype(jnp.float32)
     # one validity row per (batch, kv_head) grid row
     bias = jnp.broadcast_to(bias[:, None, :], (b, kvh, skv_pad)).reshape(
         b * kvh, skv_pad
     )
 
+    # per-row live kv-tile tables: each request streams only the cache tiles
+    # that are written AND pattern-live for its own position
+    kv_index, step_live = sparsity.decode_live_tables(
+        pattern, cl_rows, skv_pad, spec.q_tile, tk, window=window, pattern_arg=arg
+    )
+    kv_index = jnp.repeat(kv_index, kvh, axis=0)  # (B*KV, max_live)
+    step_live = jnp.repeat(step_live, kvh, axis=0)
+
     y = fa.mha_decode(
-        qt, kt, vt, bias, scale=1.0 / math.sqrt(hd), kv_tile=tk,
-        interpret=_interpret(),
+        qt, kt, vt, bias, kv_index, step_live,
+        scale=1.0 / math.sqrt(hd), kv_tile=tk, interpret=_interpret(),
     )
     return y.reshape(b, kvh, gp, d)[:, :, :g, :hd].reshape(b, h, hd)
 

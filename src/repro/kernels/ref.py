@@ -5,7 +5,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["monarch_bpmm_ref", "dft_two_stage_ref", "mha_reference", "mha_decode_reference"]
+__all__ = [
+    "monarch_bpmm_ref",
+    "dft_two_stage_ref",
+    "mha_reference",
+    "mha_pattern_reference",
+    "mha_decode_reference",
+]
 
 
 def monarch_bpmm_ref(x: jax.Array, r: jax.Array, l: jax.Array) -> jax.Array:
@@ -41,6 +47,29 @@ def mha_reference(
     if window is not None:
         mask &= kpos > qpos - window
     scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def mha_pattern_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+) -> jax.Array:
+    """Masked dense oracle for block-sparse attention: naive full-score
+    softmax under an explicit (S_q, S_kv) boolean mask — the token-level
+    expansion of a :class:`repro.core.sparsity.BlockMap` (causal / window
+    fine constraints already folded in).  Differentiable; also serves as the
+    sparse kernel's VJP fallback."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(jnp.asarray(mask)[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
     return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -142,11 +142,21 @@ def _attention_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
         causal = cfg.causal
     win = cfg.sliding_window if causal else None
     args = (shape.batch, s_q, s_kv, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
-    flops = n_attn * attn.attention_flops(
-        shape.batch, s_q, s_kv, cfg.n_heads, cfg.head_dim, causal=causal, window=win
-    )
     spec = cfg.attention_spec
-    out = {"flops": flops, "n_attn_layers": n_attn}
+    flops = n_attn * attn.attention_flops(
+        shape.batch, s_q, s_kv, cfg.n_heads, cfg.head_dim, causal=causal,
+        window=win, pattern=spec.pattern, pattern_arg=spec.pattern_arg,
+        q_tile=spec.q_tile, kv_tile=spec.kv_tile,
+    )
+    out = {"flops": flops, "n_attn_layers": n_attn, "pattern": spec.pattern}
+    if spec.sparse:
+        from repro.core import sparsity
+
+        out["kv_density"] = sparsity.pattern_kv_density(
+            spec.pattern, s_q if s_q > 1 else s_kv, s_kv, spec.q_tile,
+            spec.kv_tile, causal=causal, window=win,
+            pattern_arg=spec.pattern_arg,
+        )
     for impl in attn.IMPLS:
         out[impl] = {
             "hbm_bytes": n_attn * attn.attention_hbm_bytes(
@@ -165,12 +175,10 @@ def run_cell(
     lower_only: bool = False,
     probes: bool = True,
     attn_impl: str | None = None,
+    attn_pattern: str | None = None,
 ) -> dict:
     cfg = cfg_override or registry.get(arch, reduced=reduced)
-    if attn_impl is not None:
-        cfg = dataclasses.replace(
-            cfg, attention=dataclasses.replace(cfg.attention, impl=attn_impl)
-        )
+    cfg = attn.override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
     shape = SHAPES[shape_name]
     rec: dict = {
         "arch": arch,
@@ -266,6 +274,10 @@ def main():
     ap.add_argument("--no-probes", action="store_true")
     ap.add_argument("--attn", default=None, choices=["xla_chunked", "flash_kernel"],
                     help="override the attention execution form for every cell")
+    ap.add_argument("--pattern", default=None,
+                    choices=["dense", "causal", "window", "butterfly", "strided",
+                             "global_window"],
+                    help="override the attention block-sparsity pattern")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -280,7 +292,7 @@ def main():
                 rec = run_cell(
                     arch, shape, mp, reduced=args.reduced,
                     lower_only=args.lower_only, probes=not args.no_probes,
-                    attn_impl=args.attn,
+                    attn_impl=args.attn, attn_pattern=args.pattern,
                 )
                 line = json.dumps(rec)
                 print(_summ0(rec), flush=True)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.attention import override_attention
 from repro.distributed import sharding as shd
 from repro.models import model as M
 from repro.models import transformer as tf
@@ -53,6 +54,7 @@ def make_serve_fns(
     batch: int,
     cache_len: int,
     attn_impl: str | None = None,
+    attn_pattern: str | None = None,
     ragged: bool = False,
 ):
     """Returns (prefill_fn, decode_fn).
@@ -62,11 +64,16 @@ def make_serve_fns(
     prefill_fn(params, batch_dict, lengths (B,)) gathers each row's last real
     token and decode_fn takes pos as a (B,) per-request position vector.
 
-    ``attn_impl`` overrides the config's attention execution form for this
-    serving instance (e.g. "flash_kernel" on a single-chip deployment)."""
-    if attn_impl is not None:
-        spec = dataclasses.replace(cfg.attention, impl=attn_impl)
-        cfg = dataclasses.replace(cfg, attention=spec)
+    ``attn_impl`` / ``attn_pattern`` override the config's attention
+    execution form / block-sparsity pattern for this serving instance (e.g.
+    "flash_kernel" + "butterfly" on a single-chip deployment).
+
+    ``decode_fn`` takes an optional trailing ``kv_live`` (static int): a
+    host-known bound on every row's live cache length.  Attention then
+    streams only the first ``kv_live`` cache rows — each distinct value
+    compiles once, so callers should bucket it (the engine uses powers of
+    two)."""
+    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
     rt = M.resolve_runtime(cfg, mesh)
     pspecs = M.build_specs(cfg)
     p_shard = shd.sharding_tree(pspecs, mesh, M.rules_for(cfg))
@@ -90,14 +97,22 @@ def make_serve_fns(
             out_shardings=(tok_shard, c_shard),
         )
         pos_shard = rep
-    decode = jax.jit(
-        lambda params, caches, tokens, pos: tf.decode_step(
-            params, cfg, caches, tokens, pos, rt
-        ),
-        in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
-        out_shardings=(tok_shard, c_shard),
-        donate_argnums=(1,),
-    )
+    jitted: dict[int | None, object] = {}
+
+    def decode(params, caches, tokens, pos, kv_live: int | None = None):
+        fn = jitted.get(kv_live)
+        if fn is None:
+            fn = jax.jit(
+                lambda params, caches, tokens, pos: tf.decode_step(
+                    params, cfg, caches, tokens, pos, rt, kv_live=kv_live
+                ),
+                in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                out_shardings=(tok_shard, c_shard),
+                donate_argnums=(1,),
+            )
+            jitted[kv_live] = fn
+        return fn(params, caches, tokens, pos)
+
     return prefill, decode
 
 
@@ -139,12 +154,9 @@ class ServeLoop:
     def __init__(
         self, cfg: ModelConfig, mesh: Mesh, params, *,
         batch: int, cache_len: int, attn_impl: str | None = None,
-        static_batching: bool = False,
+        attn_pattern: str | None = None, static_batching: bool = False,
     ):
-        if attn_impl is not None:
-            cfg = dataclasses.replace(
-                cfg, attention=dataclasses.replace(cfg.attention, impl=attn_impl)
-            )
+        cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
         if cfg.sliding_window and cache_len < cfg.sliding_window:
             raise ValueError(
                 f"cache_len {cache_len} < sliding_window {cfg.sliding_window}: "
@@ -266,9 +278,22 @@ class ServeLoop:
                         nxt[slot] = tok
                 if not any(r is not None for r in active):
                     continue
-                # one ragged decode step for the whole batch
+                # one ragged decode step for the whole batch; attention
+                # streams only the live cache prefix (bucketed so each bucket
+                # compiles once) — a short wave on a deep cache reads its own
+                # tiles, not the padded cache.  Ring caches keep their own
+                # mod-window layout and stream the whole (window-sized) ring.
+                kv_live = None
+                if not self.cfg.sliding_window:
+                    hot = max(int(pos[s]) for s in range(self.batch)
+                              if active[s] is not None) + 1
+                    kv_live = min(_next_bucket(hot, self.cache_len), self.cache_len)
+                    self.stats["decode_kv_live_max"] = max(
+                        self.stats.get("decode_kv_live_max", 0), kv_live
+                    )
                 logits, caches = self.decode_fn(
-                    self.params, caches, jnp.asarray(nxt[:, None]), jnp.asarray(pos)
+                    self.params, caches, jnp.asarray(nxt[:, None]),
+                    jnp.asarray(pos), kv_live,
                 )
                 self.stats["decode_steps"] += 1
                 toks = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))

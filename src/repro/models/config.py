@@ -17,10 +17,15 @@ __all__ = ["ModelConfig", "Slot"]
 
 @dataclasses.dataclass(frozen=True)
 class Slot:
-    """One layer slot inside the repeating period."""
+    """One layer slot inside the repeating period.
+
+    ``attn_pattern`` overrides ``AttentionSpec.pattern`` for this slot only —
+    the paper's §III hybrid butterfly-sparsity stacks mix butterfly-sparse
+    attention layers with dense/FNet layers at different depths."""
 
     mixer: Literal["attn", "mamba", "fft"]  # token mixing sublayer
     ffn: Literal["dense", "moe", "none"] = "dense"
+    attn_pattern: str | None = None  # per-slot sparsity pattern override
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +69,10 @@ class ModelConfig:
     causal: bool = True
     norm: str = "rmsnorm"  # rmsnorm | layernorm
     act: str = "swiglu"  # swiglu | gelu
+    # explicit layer pattern (the paper's §III hybrid butterfly-sparsity
+    # stacks): when set, this IS the repeating period — n_layers must divide
+    # by its length as usual (one period == the whole depth when equal)
+    slots_override: tuple[Slot, ...] | None = None
     # the paper's technique
     butterfly: ButterflyPolicy = ButterflyPolicy()
     # attention execution form (impl + kernel tile geometry); the legacy
@@ -120,6 +129,8 @@ class ModelConfig:
     @property
     def period_slots(self) -> tuple[Slot, ...]:
         """The repeating layer pattern; n_layers must divide evenly."""
+        if self.slots_override is not None:
+            return self.slots_override
         if self.family == "ssm":
             return (Slot("mamba", "dense"),)
         if self.family == "hybrid":

@@ -24,8 +24,10 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import sparsity
 from repro.core.attention import AttentionSpec
 from repro.distributed.sharding import constrain
 
@@ -119,9 +121,15 @@ def chunked_attention(
     chunk: int = 2048,
     rt: Runtime = Runtime(),
     f32_softmax: bool = True,
+    pattern_mask: np.ndarray | None = None,
 ) -> jax.Array:
     """Prefix-chunked attention (the ``xla_chunked`` reference form).
-    q: (B, S, H, hd); k, v: (B, S, KV, hd)."""
+    q: (B, S, H, hd); k, v: (B, S, KV, hd).
+
+    ``pattern_mask`` is the static (S_q, S_kv) token-level expansion of a
+    block-sparsity map — *mask-only* on this backend: dead blocks are still
+    computed and round-tripped through HBM, which is exactly the paper's
+    point about sparsity without dataflow orchestration."""
     b, s, h, hd = q.shape
     kvh = k.shape[2]
     g = h // kvh
@@ -146,6 +154,12 @@ def chunked_attention(
         if causal:  # self-attention: prefix slicing needs the padded length
             k, v = jnp.pad(k, pad), jnp.pad(v, pad)
     qr = q.reshape(b, s_pad, kvh, g, hd)
+    pm_full = None
+    if pattern_mask is not None:
+        # pad q rows True (sliced off at the end), kv cols False (dead tail)
+        pm_full = np.ones((s_pad, k.shape[1]), bool)
+        pm_full[:s, : pattern_mask.shape[1]] = pattern_mask
+        pm_full[:s, pattern_mask.shape[1] :] = False
     outs = []
     for i in range(n_chunks):  # static unroll: exact per-chunk causal prefixes
         q_i = jax.lax.slice_in_dim(qr, i * chunk, (i + 1) * chunk, axis=1)
@@ -163,7 +177,7 @@ def chunked_attention(
         if not f32_softmax:  # §Perf lever: halve the score HBM traffic
             scores = scores.astype(q.dtype)
         neg = jnp.asarray(-1e30 if f32_softmax else -3e38, scores.dtype)
-        if causal or window is not None:
+        if causal or window is not None or pattern_mask is not None:
             qpos = i * chunk + jnp.arange(chunk)
             kpos = start + jnp.arange(end - start)
             mask = jnp.ones((chunk, end - start), bool)
@@ -173,6 +187,8 @@ def chunked_attention(
                     mask &= kpos[None, :] < s  # padded tail keys
             if window is not None:
                 mask &= kpos[None, :] > qpos[:, None] - window
+            if pm_full is not None:  # static numpy slice of the pattern mask
+                mask &= jnp.asarray(pm_full[i * chunk : (i + 1) * chunk, start:end])
             scores = jnp.where(mask[None, None, None], scores, neg)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         out_i = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_i)
@@ -186,14 +202,17 @@ def decode_attention(
     k_cache: jax.Array,
     v_cache: jax.Array,
     cur_len: jax.Array | None = None,
+    pattern_mask: jax.Array | None = None,
 ) -> jax.Array:
     """One-token attention over a (possibly sequence-sharded) KV cache.
 
     q: (B, H, hd); caches: (B, S, KV, hd).  ``cur_len`` masks unwritten cache
     rows: a scalar applies one live length batch-wide, a (B,) vector masks
-    per request (ragged continuous batching).  Scores stay tiny, so plain
-    einsum + softmax — XLA inserts the cross-shard max/sum reductions when
-    the cache's S axis is sharded (flash-decode style combine).
+    per request (ragged continuous batching).  ``pattern_mask`` (B, S) is the
+    per-row token expansion of the block-sparsity map (mask-only on this
+    backend).  Scores stay tiny, so plain einsum + softmax — XLA inserts the
+    cross-shard max/sum reductions when the cache's S axis is sharded
+    (flash-decode style combine).
     """
     b, h, hd = q.shape
     kvh = k_cache.shape[2]
@@ -207,6 +226,8 @@ def decode_attention(
         cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)  # scalar | (B, 1)
         mask = jnp.arange(k_cache.shape[1])[None, :] < cl  # (1|B, S)
         scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    if pattern_mask is not None:
+        scores = jnp.where(pattern_mask[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
     return out.reshape(b, h, hd)
@@ -229,14 +250,32 @@ def run_attention(
     window: int | None = None,
     rt: Runtime = Runtime(),
 ) -> jax.Array:
-    """Execute train/prefill attention under the configured spec."""
+    """Execute train/prefill attention under the configured spec.
+
+    ``spec.pattern`` applies to both forms: the fused kernel iterates only
+    live blocks (grid-level skipping); the chunked form masks with the same
+    map's token expansion (mask-only — parity target and multi-chip
+    fallback)."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops  # local import: kernels are optional
 
         return ops.flash_attention(q, k, v, causal=causal, window=window, spec=spec)
+    pattern, arg, causal, window = sparsity.canonical_pattern(
+        spec.pattern, spec.pattern_arg, causal, window
+    )
+    pmask = None
+    if pattern != "dense":
+        tq, tk = sparsity.pick_pattern_tiles(
+            q.shape[1], k.shape[1], spec.q_tile, spec.kv_tile
+        )
+        bm = sparsity.build_block_map(
+            pattern, q.shape[1], k.shape[1], tq, tk, causal=causal,
+            window=window, pattern_arg=arg,
+        )
+        pmask = sparsity.token_mask(bm)
     return chunked_attention(
         q, k, v, causal=causal, window=window, chunk=spec.chunk, rt=rt,
-        f32_softmax=spec.f32_softmax,
+        f32_softmax=spec.f32_softmax, pattern_mask=pmask,
     )
 
 
@@ -248,13 +287,41 @@ def run_decode_attention(
     *,
     spec: AttentionSpec = AttentionSpec(),
     rt: Runtime = Runtime(),
+    kv_live: int | None = None,
 ) -> jax.Array:
     """Execute one-token cache attention under the configured spec.
 
     ``cur_len``: None (whole cache live), scalar (batch-wide live length), or
-    (B,) per-request live lengths (ragged continuous batching)."""
+    (B,) per-request live lengths (ragged continuous batching).  ``kv_live``
+    is a static host-known upper bound on every row's live length (the serve
+    engine's bucketed ``max(pos)+1``): both forms read only the first
+    ``kv_live`` cache rows instead of streaming the padded cache.
+    ``spec.pattern`` restricts each row to its own live kv tiles."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 
-        return ops.flash_decode(q, k_cache, v_cache, cur_len, spec=spec)
-    return decode_attention(q, k_cache, v_cache, cur_len)
+        return ops.flash_decode(
+            q, k_cache, v_cache, cur_len, spec=spec, kv_live=kv_live
+        )
+    if kv_live is not None and kv_live < k_cache.shape[1]:
+        k_cache = k_cache[:, : max(kv_live, 1)]
+        v_cache = v_cache[:, : max(kv_live, 1)]
+    pattern, arg, _, window = sparsity.canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    pmask = None
+    if pattern != "dense" or window is not None:
+        skv = k_cache.shape[1]
+        _, tk = sparsity.pick_pattern_tiles(1, skv, spec.q_tile, spec.kv_tile)
+        if cur_len is None:
+            cl = jnp.full((q.shape[0],), skv, jnp.int32)
+        else:
+            cl = jnp.broadcast_to(
+                jnp.asarray(cur_len, jnp.int32).reshape(-1), (q.shape[0],)
+            )
+        pmask = sparsity.decode_token_mask(
+            pattern, cl, skv, spec.q_tile, tk, window=window, pattern_arg=arg
+        )
+        if window is not None:  # fine window edge (matches the prefill mask)
+            pmask &= jnp.arange(skv)[None, :] > cl[:, None] - 1 - window
+    return decode_attention(q, k_cache, v_cache, cur_len, pattern_mask=pmask)

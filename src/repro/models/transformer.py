@@ -10,6 +10,7 @@ variants share every line of runtime code.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -184,9 +185,19 @@ def apply_attention(
     is_cross: bool = False,
     use_rope: bool = True,
     lengths: jax.Array | None = None,  # (B,) true prompt lengths (ragged prefill)
+    attn_pattern: str | None = None,  # per-slot sparsity override (hybrid stacks)
+    kv_live: int | None = None,  # static live-cache bound (sparse serve decode)
 ):
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = cfg.attention_spec
+    if attn_pattern is not None:
+        spec = dataclasses.replace(spec, pattern=attn_pattern)
+    if is_cross or (cfg.sliding_window and spec.sparse):
+        # patterns index absolute token positions: cross-attention KV has no
+        # such positions, and ring caches store keys in mod-window order —
+        # both fall back to the dense map (window sparsity still applies)
+        spec = dataclasses.replace(spec, pattern="dense")
 
     q = _proj(aparams, cfg, x, "wq", h).reshape(b, s, h, hd)
     if is_cross and mode == "decode":
@@ -226,17 +237,20 @@ def apply_attention(
             # unwritten — for a sliding-window ring cache their zero-init keys
             # would otherwise score e^0 in the softmax
             cur = jnp.minimum(pos + 1, cache_len)
-            out = run_decode_attention(q[:, 0], kc, vc, cur, spec=cfg.attention_spec, rt=rt)
+            out = run_decode_attention(
+                q[:, 0], kc, vc, cur, spec=spec, rt=rt,
+                kv_live=None if cfg.sliding_window else kv_live,
+            )
         else:  # cross-attention: static KV from the encoder pass
             new_cache = cache
             out = run_decode_attention(
-                q[:, 0], cache["k"], cache["v"], None, spec=cfg.attention_spec, rt=rt
+                q[:, 0], cache["k"], cache["v"], None, spec=spec, rt=rt
             )
         out = out[:, None]
     else:
         win = cfg.sliding_window if causal else None
         out = run_attention(
-            q, k_new, v_new, spec=cfg.attention_spec,
+            q, k_new, v_new, spec=spec,
             causal=causal and not is_cross, window=win, rt=rt,
         )
         if mode == "prefill":
@@ -285,6 +299,7 @@ def apply_slot(
     enc_out: jax.Array | None = None,
     causal: bool = True,
     lengths: jax.Array | None = None,
+    kv_live: int | None = None,
 ):
     """One layer: pre-norm mixer + (optional cross-attn) + pre-norm FFN."""
     aux = jnp.zeros((), jnp.float32)
@@ -294,7 +309,7 @@ def apply_slot(
         mix, c = apply_attention(
             sparams["attn"], cfg, hmix, rt, causal=causal, positions=positions,
             mode=mode, cache=None if cache is None else cache.get("attn"), pos=pos,
-            lengths=lengths,
+            lengths=lengths, attn_pattern=slot.attn_pattern, kv_live=kv_live,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -360,6 +375,7 @@ def run_stack(
     enc_out: jax.Array | None = None,
     causal: bool = True,
     lengths: jax.Array | None = None,  # (B,) ragged prompt lengths (prefill)
+    kv_live: int | None = None,  # static live-cache bound (sparse serve decode)
 ):
     """Scan the periodic layer pattern.  Returns (x, new_caches, aux_sum)."""
 
@@ -373,7 +389,7 @@ def run_stack(
             x, c, a = apply_slot(
                 slot, p_params[key], cfg, x, rt, mode=mode, positions=positions,
                 cache=None if p_cache is None else p_cache[key], pos=pos,
-                enc_out=enc_out, causal=causal, lengths=lengths,
+                enc_out=enc_out, causal=causal, lengths=lengths, kv_live=kv_live,
             )
             new_cache[key] = c
             aux = aux + a
@@ -604,10 +620,16 @@ def decode_step(
     tokens: jax.Array,
     pos: jax.Array,
     rt: Runtime,
+    *,
+    kv_live: int | None = None,
 ):
     """One token for the whole batch.  tokens: (B, 1); pos: scalar int32
     (static batch) or (B,) int32 per-request positions (ragged batch —
-    RoPE angles, cache write slots, and live-KV masks all go per row)."""
+    RoPE angles, cache write slots, and live-KV masks all go per row).
+
+    ``kv_live`` (static) bounds every row's live cache length — attention
+    streams only the first ``kv_live`` cache rows instead of the whole padded
+    cache (the serve engine passes its bucketed ``max(pos)+1``)."""
     x = embed_tokens(params, cfg, tokens, rt)
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
@@ -617,6 +639,7 @@ def decode_step(
     x, new_caches, _ = run_stack(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="decode",
         positions=positions, caches=caches, pos=pos, causal=cfg.causal,
+        kv_live=kv_live,
     )
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)

@@ -1,0 +1,333 @@
+"""Block-sparse attention: liveness maps, true tile skipping, and parity of
+every pattern against the masked dense oracle (token-level expansion of the
+same block map) — prefill and decode, fused kernel and XLA form.
+
+The regression that matters: statically-dead tiles must be ABSENT from the
+kernel grid (inspected via the block map's packed kv-tile index table that IS
+the grid's index map), not merely masked inside it.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsity
+from repro.core.attention import AttentionSpec, attention_flops, attention_hbm_bytes
+from repro.kernels import ops, ref
+from repro.models.layers import Runtime, run_attention, run_decode_attention
+
+RT = Runtime(mesh=None)
+ATOL = 2e-5
+
+# (pattern, pattern_arg, b, s, h, kvh, hd, causal, q_tile)
+PATTERN_SWEEP = [
+    ("butterfly", None, 2, 512, 4, 2, 16, True, 128),  # GQA causal
+    ("butterfly", None, 1, 509, 4, 4, 16, False, 128),  # prime S, non-causal
+    ("butterfly", None, 1, 256, 4, 2, 16, True, 64),  # q_tile != kv_tile span
+    ("strided", 2, 1, 512, 4, 2, 16, True, 128),
+    ("strided", None, 1, 384, 6, 3, 8, True, 128),
+    ("global_window", 1, 2, 512, 4, 2, 16, True, 128),
+    ("global_window", 1, 1, 1021, 4, 4, 16, False, 128),  # prime, non-causal
+]
+
+
+def _qkv(b, s, h, kvh, hd, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, hd), jnp.float32)
+    return q, k, v
+
+
+def _oracle(q, k, v, pattern, arg, causal, q_tile, kv_tile=128):
+    """Masked dense oracle: same block map, token-expanded."""
+    tq, tk = sparsity.pick_pattern_tiles(q.shape[1], k.shape[1], q_tile, kv_tile)
+    bm = sparsity.build_block_map(
+        pattern, q.shape[1], k.shape[1], tq, tk, causal=causal, pattern_arg=arg
+    )
+    return ref.mha_pattern_reference(q, k, v, jnp.asarray(sparsity.token_mask(bm))), bm
+
+
+@pytest.mark.parametrize("pattern,arg,b,s,h,kvh,hd,causal,q_tile", PATTERN_SWEEP)
+def test_flash_pattern_matches_masked_oracle(pattern, arg, b, s, h, kvh, hd, causal, q_tile):
+    q, k, v = _qkv(b, s, h, kvh, hd)
+    spec = AttentionSpec(
+        impl="flash_kernel", pattern=pattern, pattern_arg=arg, q_tile=q_tile
+    )
+    y = ops.flash_attention(q, k, v, causal=causal, spec=spec)
+    y_ref, bm = _oracle(q, k, v, pattern, arg, causal, q_tile)
+    assert bm.live.sum() < bm.live.size, "sweep case is not actually sparse"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=ATOL, rtol=1e-5)
+
+
+@pytest.mark.parametrize("pattern,arg,b,s,h,kvh,hd,causal,q_tile", PATTERN_SWEEP)
+def test_xla_chunked_pattern_matches_masked_oracle(pattern, arg, b, s, h, kvh, hd, causal, q_tile):
+    """The chunked form masks with the SAME map — cross-impl parity."""
+    q, k, v = _qkv(b, s, h, kvh, hd, key=1)
+    spec = AttentionSpec(
+        impl="xla_chunked", pattern=pattern, pattern_arg=arg, q_tile=q_tile, chunk=128
+    )
+    y = run_attention(q, k, v, spec=spec, causal=causal, rt=RT)
+    y_ref, _ = _oracle(q, k, v, pattern, arg, causal, q_tile)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["xla_chunked", "flash_kernel"])
+def test_window_pattern_alias(impl):
+    """pattern='window' == explicit sliding-window flags on both impls."""
+    q, k, v = _qkv(2, 160, 4, 2, 16, key=2)
+    spec = AttentionSpec(impl=impl, pattern="window", pattern_arg=24, q_tile=16, chunk=32)
+    y = run_attention(q, k, v, spec=spec, causal=True, rt=RT)
+    y_ref = ref.mha_reference(q, k, v, causal=True, window=24)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Liveness regressions: dead tiles are absent from the grid, not masked
+# --------------------------------------------------------------------------
+
+
+def test_butterfly_4k_strictly_fewer_grid_steps_than_dense_causal():
+    """Acceptance: butterfly prefill at S=4096 runs strictly fewer kv-tile
+    grid steps than dense causal — via the index map that IS the grid."""
+    s, t = 4096, 128
+    bf = sparsity.build_block_map("butterfly", s, s, t, t, causal=True)
+    dense = sparsity.build_block_map("dense", s, s, t, t, causal=True)
+    assert bf.grid_steps < dense.grid_steps, (bf.grid_steps, dense.grid_steps)
+    # O(N log N): the widest row carries ~log2(n)+1 live tiles, not n
+    assert bf.max_live <= bf.n_kv_tiles.bit_length() + 1
+    # and the live fraction shrinks accordingly
+    assert bf.kv_density < 0.25
+
+
+def test_dead_tiles_absent_from_index_map():
+    """Every packed table entry is a live block; every dead block is absent."""
+    for pattern, arg in [("butterfly", None), ("strided", 4), ("global_window", 2)]:
+        bm = sparsity.build_block_map(pattern, 2048, 2048, 128, 128, causal=True,
+                                      pattern_arg=arg)
+        for r in range(bm.n_q_tiles):
+            tabled = set(bm.kv_index[r][bm.step_live[r] > 0].tolist())
+            live = set(np.nonzero(bm.live[r])[0].tolist())
+            assert tabled == live, f"{pattern} row {r}: table {tabled} != live {live}"
+        assert not bm.live.all(), f"{pattern}: map is dense — nothing skipped"
+
+
+def test_decode_tables_read_only_live_tiles():
+    """A 130-token request on a 2048 cache streams 2 kv tiles, not 16; a
+    butterfly row at full depth streams O(log n) tiles."""
+    cur = jnp.array([130, 2048], jnp.int32)
+    ki, sl = sparsity.decode_live_tables("dense", cur, 2048, 128, 128)
+    live0 = np.asarray(ki[0][np.asarray(sl[0]) > 0])
+    assert set(live0.tolist()) == {0, 1}, live0  # ceil(130/128) written tiles
+    ki_b, sl_b = sparsity.decode_live_tables("butterfly", cur, 2048, 128, 128)
+    n_tiles = 2048 // 128
+    assert ki_b.shape[1] <= n_tiles.bit_length() + 1  # static grid extent
+    full_row = set(np.asarray(ki_b[1][np.asarray(sl_b[1]) > 0]).tolist())
+    expect = {j for j in range(16) if bin(15 ^ j).count("1") <= 1}
+    assert full_row == expect, (full_row, expect)
+
+
+def test_flash_decode_kv_live_static_truncation():
+    """kv_live slices the streamed cache (grid shrinks); output is exact."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, h, kvh, hd, cache = 2, 4, 2, 16, 1024
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, cache, kvh, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, cache, kvh, hd), jnp.float32)
+    cur = jnp.array([97, 130], jnp.int32)
+    for spec in (AttentionSpec(impl="flash_kernel"), AttentionSpec()):
+        y = run_decode_attention(q, kc, vc, cur, spec=spec, rt=RT, kv_live=256)
+        y_ref = ref.mha_decode_reference(q, kc, vc, cur)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=ATOL, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Decode == prefill under every pattern (incl. window edge at pos < window)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern,arg", [
+    ("butterfly", None), ("strided", 2), ("global_window", 1),
+])
+@pytest.mark.parametrize("impl", ["xla_chunked", "flash_kernel"])
+def test_pattern_decode_matches_prefill_last_token(pattern, arg, impl):
+    b, s, h, kvh, hd = 2, 512, 4, 2, 16
+    q, k, v = _qkv(b, s, h, kvh, hd, key=5)
+    spec = AttentionSpec(impl=impl, pattern=pattern, pattern_arg=arg, chunk=128)
+    full = run_attention(q, k, v, spec=spec, causal=True, rt=RT)
+    last = run_decode_attention(q[:, -1], k, v, jnp.int32(s), spec=spec, rt=RT)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[:, -1]), atol=1e-4, rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("impl", ["xla_chunked", "flash_kernel"])
+def test_window_pattern_decode_edge_below_window(impl):
+    """Window-pattern decode at pos < window: the whole (short) prefix lives."""
+    b, s, h, kvh, hd, win = 1, 272, 4, 2, 16, 160
+    q, k, v = _qkv(b, s, h, kvh, hd, key=6)
+    spec = AttentionSpec(impl=impl, pattern="window", pattern_arg=win, chunk=64)
+    full = run_attention(q, k, v, spec=spec, causal=True, rt=RT)
+    for pos in (12, win - 1, win + 40, s - 1):  # below, at, and past the edge
+        last = run_decode_attention(
+            q[:, pos], k[:, : pos + 1], v[:, : pos + 1], jnp.int32(pos + 1),
+            spec=spec, rt=RT,
+        )
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(full[:, pos]), atol=1e-4, rtol=1e-4,
+            err_msg=f"pos {pos}",
+        )
+
+
+def test_pattern_decode_per_row_ragged():
+    """Ragged butterfly decode: each row masks by its OWN position's live
+    tile set (flash tables vs per-row XLA mask vs per-row oracle)."""
+    b, h, kvh, hd, cache = 3, 4, 2, 16, 512
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, cache, kvh, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, cache, kvh, hd), jnp.float32)
+    cur = jnp.array([70, 300, 512], jnp.int32)
+    outs = {}
+    for impl in ("xla_chunked", "flash_kernel"):
+        spec = AttentionSpec(impl=impl, pattern="butterfly")
+        outs[impl] = run_decode_attention(q, kc, vc, cur, spec=spec, rt=RT)
+    np.testing.assert_allclose(
+        np.asarray(outs["xla_chunked"]), np.asarray(outs["flash_kernel"]),
+        atol=ATOL, rtol=1e-5,
+    )
+    tmask = sparsity.decode_token_mask("butterfly", cur, cache, 128, 128)
+    m = np.asarray(tmask & (jnp.arange(cache)[None, :] < cur[:, None]))
+    for i in range(b):
+        sc = jnp.einsum(
+            "kgd,skd->kgs", np.asarray(q[i]).reshape(kvh, h // kvh, hd),
+            np.asarray(kc[i], np.float32),
+        ) / np.sqrt(hd)
+        sc = jnp.where(jnp.asarray(m[i])[None, None, :], sc, -1e30)
+        pr = jax.nn.softmax(sc, -1)
+        o = jnp.einsum("kgs,skd->kgd", pr, np.asarray(vc[i], np.float32))
+        np.testing.assert_allclose(
+            np.asarray(outs["flash_kernel"][i]).reshape(kvh, h // kvh, hd),
+            np.asarray(o), atol=ATOL, rtol=1e-5, err_msg=f"row {i}",
+        )
+
+
+# --------------------------------------------------------------------------
+# Gradients, accounting, config plumbing
+# --------------------------------------------------------------------------
+
+
+def test_pattern_flash_is_differentiable():
+    """Sparse training falls back to the masked-oracle VJP."""
+    q, k, v = _qkv(1, 256, 2, 2, 8, key=9)
+    spec = AttentionSpec(impl="flash_kernel", pattern="butterfly")
+
+    def loss(q, k, v):
+        return jnp.sum(run_attention(q, k, v, spec=spec, causal=True, rt=RT) ** 2)
+
+    g_flash = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    y_ref, bm = _oracle(q, k, v, "butterfly", None, True, 128)
+    mask = jnp.asarray(sparsity.token_mask(bm))
+    g_ref = jax.grad(
+        lambda q, k, v: jnp.sum(ref.mha_pattern_reference(q, k, v, mask) ** 2),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    for gf, gr in zip(g_flash, g_ref):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gr), atol=1e-3, rtol=1e-3)
+
+
+def test_pattern_accounting_density():
+    """Analytic FLOPs/HBM scale by the block map's density on the fused form;
+    the XLA form keeps full traffic (mask-only — the paper's Fig. 2 point)."""
+    s, h, hd = 4096, 16, 64
+    fl_dense = attention_flops(1, s, s, h, hd, causal=True)
+    fl_bf = attention_flops(1, s, s, h, hd, causal=True, pattern="butterfly")
+    assert fl_bf < 0.5 * fl_dense
+    spec_f = AttentionSpec(impl="flash_kernel", pattern="butterfly")
+    spec_fd = AttentionSpec(impl="flash_kernel")
+    args = (1, s, s, h, h, hd)
+    assert attention_hbm_bytes(spec_f, *args) < attention_hbm_bytes(spec_fd, *args)
+    spec_x = AttentionSpec(impl="xla_chunked", pattern="butterfly")
+    spec_xd = AttentionSpec(impl="xla_chunked")
+    assert attention_hbm_bytes(spec_x, *args) == attention_hbm_bytes(spec_xd, *args)
+
+
+def test_registry_pattern_variants_and_hybrid():
+    from repro.configs import registry
+
+    cfg = registry.get("yi-6b+flash+butterfly_attn", reduced=True)
+    assert cfg.attention.impl == "flash_kernel"
+    assert cfg.attention.pattern == "butterfly"
+    cfg2 = registry.get("qwen3-0.6b+strided_attn", reduced=True)
+    assert cfg2.attention.pattern == "strided"
+    hy = registry.get("hybrid-butterfly", reduced=True)
+    pats = [s.attn_pattern for s in hy.period_slots]
+    mixers = [s.mixer for s in hy.period_slots]
+    assert "butterfly" in pats and "fft" in mixers  # §III: sparse attn + FFT tail
+    with pytest.raises(ValueError, match="unknown attention pattern"):
+        AttentionSpec(pattern="nope")
+
+
+def test_hybrid_model_forward_impl_parity():
+    """The §III hybrid stack produces the same logits under both impls."""
+    from repro.configs import registry
+    from repro.models import model as M
+    from repro.models import transformer as tf
+
+    base = dataclasses.replace(
+        registry.get("hybrid-butterfly", reduced=True), dtype="float32"
+    )
+    params = M.init_params(base, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, base.vocab)
+    outs = {}
+    for impl in ("xla_chunked", "flash_kernel"):
+        cfg = dataclasses.replace(
+            base, attention=dataclasses.replace(base.attention, impl=impl)
+        )
+        outs[impl], _ = tf.forward(params, cfg, {"tokens": tokens}, RT, mode="train")
+    scale = float(jnp.max(jnp.abs(outs["xla_chunked"])))
+    err = float(jnp.max(jnp.abs(outs["xla_chunked"] - outs["flash_kernel"])))
+    assert err < 1e-4 * max(scale, 1.0), err
+
+
+def test_serve_loop_sparse_decode_buckets():
+    """The engine's decode streams the bucketed live prefix, not the padded
+    cache, and still matches isolated greedy decoding."""
+    from repro.configs import registry
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import Request, ServeLoop
+    from repro.models import model as M
+    from repro.models import transformer as tf
+
+    cfg = dataclasses.replace(
+        registry.get("qwen3-0.6b", reduced=True), dtype="float32",
+        attention=AttentionSpec(impl="flash_kernel", q_tile=8, pattern="butterfly"),
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=ln).astype(np.int32),
+                max_new=mn)
+        for i, (ln, mn) in enumerate([(5, 4), (3, 6)])
+    ]
+    loop = ServeLoop(cfg, make_local_mesh(), params, batch=2, cache_len=64)
+    done = loop.run(reqs)
+    assert loop.stats["decode_kv_live_max"] < 64  # streamed < padded cache
+    for r in done:
+        logits, caches = tf.prefill(
+            params, cfg, {"tokens": jnp.asarray(np.asarray(r.prompt)[None])},
+            RT, cache_len=64,
+        )
+        nxt = int(jnp.argmax(logits[0]))
+        expect = [nxt]
+        for j in range(r.max_new - 1):
+            logits, caches = tf.decode_step(
+                params, cfg, caches, jnp.asarray([[nxt]], jnp.int32),
+                jnp.int32(len(r.prompt) + j), RT,
+            )
+            nxt = int(jnp.argmax(logits[0]))
+            expect.append(nxt)
+        assert r.generated == expect, f"uid {r.uid}"
