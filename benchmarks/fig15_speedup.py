@@ -27,7 +27,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import monarch as mo, stage_division as sd
+from repro.core import monarch as mo, sparsity, stage_division as sd
 from repro.core.attention import AttentionSpec, attention_flops, attention_hbm_bytes
 from benchmarks.common import analytic, emit, modeled, sds, write_bench_json
 
@@ -59,7 +59,15 @@ def _flash_analytic(name, b, s, h, hd, pattern="dense", pattern_arg=None):
     spec = AttentionSpec(
         impl="flash_kernel", pattern=pattern, pattern_arg=pattern_arg
     )
-    return analytic(
+    # block-map density at THIS shape: at small S the tile grid can collapse
+    # to one or two 128-wide kv tiles, where e.g. butterfly keeps every block
+    # live (popcount(i^j) <= 1 always holds on a 2x2 map) and the row prices
+    # identically to dense flash — emitted so degenerate rows self-explain
+    density = sparsity.pattern_kv_density(
+        pattern, s, s, spec.q_tile, spec.kv_tile, causal=False,
+        pattern_arg=pattern_arg,
+    )
+    m = analytic(
         name,
         attention_flops(
             b, s, s, h, hd, causal=False, pattern=pattern,
@@ -67,6 +75,7 @@ def _flash_analytic(name, b, s, h, hd, pattern="dense", pattern_arg=None):
         ),
         attention_hbm_bytes(spec, b, s, s, h, h, hd, causal=False),
     )
+    return m, density
 
 
 def rows(attn: str | None, pattern: str | None):
@@ -103,8 +112,11 @@ def rows(attn: str | None, pattern: str | None):
         speed = m_dense.t / m_fused.t
         out.append((m_dense, f"bound={m_dense.bound}"))
         out.append((m_fused, f"speedup_vs_dense={speed:.2f}x"))
-        for m in flash_rows:
-            out.append((m, f"speedup_vs_dense={m_dense.t / m.t:.2f}x"))
+        for m, density in flash_rows:
+            out.append((
+                m,
+                f"speedup_vs_dense={m_dense.t / m.t:.2f}x density={density:.4f}",
+            ))
     return out
 
 

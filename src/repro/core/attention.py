@@ -28,11 +28,25 @@ from repro.core import sparsity
 __all__ = [
     "AttentionSpec",
     "override_attention",
+    "truncate_kv_live",
     "attention_flops",
     "attention_hbm_bytes",
     "ragged_attention_flops",
     "ragged_attention_hbm_bytes",
 ]
+
+
+def truncate_kv_live(k_cache, v_cache, kv_live: int | None):
+    """Statically truncate a KV cache to its first ``kv_live`` rows (the
+    serve engine's bucketed bound on every row's live length) — the single
+    definition of the clamp every execution form applies, so the fused and
+    XLA paths can never diverge on it.  Returns (k, v, skv)."""
+    skv = k_cache.shape[1]
+    if kv_live is not None and kv_live < skv:
+        skv = max(int(kv_live), 1)
+        k_cache = k_cache[:, :skv]
+        v_cache = v_cache[:, :skv]
+    return k_cache, v_cache, skv
 
 IMPLS = ("xla_chunked", "flash_kernel")
 

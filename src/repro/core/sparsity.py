@@ -51,6 +51,8 @@ __all__ = [
     "decode_max_live",
     "decode_live_tables",
     "decode_token_mask",
+    "chunk_live_tables",
+    "chunk_token_mask",
 ]
 
 PATTERNS = ("dense", "causal", "window", "butterfly", "strided", "global_window")
@@ -337,6 +339,19 @@ def _decode_live_jnp(pattern, qi, j, nk, q_tile, kv_tile, window, pattern_arg):
     return live
 
 
+def _pack_live(live, j, max_live: int):
+    """Pack per-row live kv-tile indices first (stable in j), padded with
+    tile 0 / live 0 — the table layout both sparse kernels dereference.
+    live: (B, nk) bool; j: (1, nk) int32.  Returns (kv_index, step_live)."""
+    import jax.numpy as jnp
+
+    nk = live.shape[1]
+    order = jnp.argsort(jnp.where(live, j, nk + j), axis=1)[:, :max_live]
+    packed_live = jnp.take_along_axis(live, order, axis=1)
+    kv_index = jnp.where(packed_live, order, 0).astype(jnp.int32)
+    return kv_index, packed_live.astype(jnp.int32)
+
+
 def decode_live_tables(
     pattern: str,
     cur_len,  # (B,) traced live lengths (pos + 1)
@@ -372,11 +387,7 @@ def decode_live_tables(
     if window is not None:
         live &= (j + 1) * kv_tile - 1 > cl - 1 - window
     live |= j == jnp.minimum(qi * q_tile // kv_tile, nk - 1)  # diag always live
-    # pack live indices first (stable in j), pad with tile 0 / live 0
-    order = jnp.argsort(jnp.where(live, j, nk + j), axis=1)[:, :max_live]
-    packed_live = jnp.take_along_axis(live, order, axis=1)
-    kv_index = jnp.where(packed_live, order, 0).astype(jnp.int32)
-    return kv_index, packed_live.astype(jnp.int32)
+    return _pack_live(live, j, max_live)
 
 
 def decode_token_mask(
@@ -405,3 +416,128 @@ def decode_token_mask(
     ].max(step_live > 0)
     mask = jnp.repeat(tile_live, kv_tile, axis=1)[:, :cache_len]
     return mask
+
+
+# --------------------------------------------------------------------------
+# Mixed chunked-prefill steps: per-row chunk tables over the shared cache
+# --------------------------------------------------------------------------
+
+
+def chunk_max_live(
+    pattern: str,
+    chunk: int,
+    cache_len: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+) -> int:
+    """Static worst-case live kv-tile count for one chunk row of the mixed
+    step — the chunk kernel grid's kv extent.
+
+    A chunk of ``chunk`` queries starting anywhere inside q-tile ``i`` spans
+    q-tile rows ``i .. i + span - 1`` (``span = (chunk-1)//q_tile + 2``; the
+    start is not tile-aligned); its table is the union of those rows' pattern
+    sets, capped right by the written frontier (< ``(i+span)*q_tile``) and
+    left by the first query's window edge (> ``i*q_tile - window``).  The max
+    over ``i`` of that union's population is an exact worst case for
+    :func:`chunk_live_tables` — computed on the same static map, so the
+    argsort pack can never truncate a live tile."""
+    nq = -(-cache_len // q_tile)
+    nk = -(-cache_len // kv_tile)
+    span = (max(chunk, 1) - 1) // q_tile + 2
+    live = _pattern_live(pattern, nq, nk, q_tile, kv_tile, True, pattern_arg)
+    j = np.arange(nk)
+    best = 1
+    for i in range(nq):
+        u = np.zeros(nk, bool)
+        for r in range(i, min(i + span, nq)):
+            u |= live[r]
+        u &= j * kv_tile <= min((i + span) * q_tile, cache_len) - 1
+        if window is not None:
+            u &= (j + 1) * kv_tile - 1 > i * q_tile - window
+        u[min((i * q_tile) // kv_tile, nk - 1)] = True  # forced diagonal
+        best = max(best, int(u.sum()))
+    return min(best, nk)
+
+
+def chunk_live_tables(
+    pattern: str,
+    start,  # (B,) traced absolute position of each row's first chunk query
+    ntok,  # (B,) traced valid-token count per row (0 = idle slot)
+    chunk: int,
+    cache_len: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+):
+    """Per-row packed live kv-tile tables for the mixed chunk kernel.
+
+    Returns (kv_index (B, max_live) int32, step_live (B, max_live) int32).
+    Row b's queries sit at absolute positions ``start[b] .. start[b]+ntok[b]-1``
+    over the shared cache; the table is the union of those rows' pattern-live
+    kv tiles (the same per-q-tile machinery as :func:`decode_live_tables`),
+    restricted to written cache tiles (``j * kv_tile < start + ntok``) — the
+    causal frontier guarantees every readable key is already written.  The
+    fine in-kernel mask then trims each query back to its own q-tile's row, so
+    per-query liveness matches the static prefill map exactly."""
+    import jax.numpy as jnp
+
+    nk = -(-cache_len // kv_tile)
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    ntok = jnp.asarray(ntok, jnp.int32).reshape(-1)
+    b = start.shape[0]
+    qpos = start[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]  # (B, C)
+    qi = (qpos // q_tile).reshape(-1, 1)  # (B*C, 1)
+    j = jnp.arange(nk, dtype=jnp.int32)[None, :]  # (1, nk)
+    live = _decode_live_jnp(pattern, qi, j, nk, q_tile, kv_tile, window, pattern_arg)
+    live = live.reshape(b, chunk, nk)
+    # idle / budget-starved rows keep their first query row so the table is
+    # never empty (the kernel's flush still emits zeros for fully-dead rows)
+    valid_q = jnp.arange(chunk)[None, :] < jnp.maximum(ntok, 1)[:, None]
+    live &= valid_q[:, :, None]
+    live = live.any(axis=1)  # (B, nk): union over the chunk's q rows
+    live &= j * kv_tile < (start + jnp.maximum(ntok, 1))[:, None]  # written
+    if window is not None:
+        # earliest key any chunk query can reach is start - window + 1 (the
+        # first query's window edge); later queries only reach further right
+        live &= (j + 1) * kv_tile - 1 > (start - window)[:, None]
+    # the tile holding the row's own start is always feasible (NaN guard,
+    # mirrors decode_live_tables' forced diagonal)
+    live |= j == jnp.minimum((start[:, None] // q_tile) * q_tile // kv_tile, nk - 1)
+    max_live = chunk_max_live(
+        pattern, chunk, cache_len, q_tile, kv_tile, window=window,
+        pattern_arg=pattern_arg,
+    )
+    return _pack_live(live, j, max_live)
+
+
+def chunk_token_mask(
+    pattern: str,
+    qpos,  # (B, C) traced absolute query positions
+    cache_len: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+):
+    """Token-level pattern mask (B, C, cache_len) bool (jnp) for a mixed
+    chunk: each query's own q-tile row of the pattern map, expanded to tokens
+    (the XLA mixed form's view; the caller ANDs the causal frontier and fine
+    window).  Per-query semantics are identical to the static prefill map and
+    to the fine in-kernel mask of the chunk kernel — NOT the chunk-table
+    union, which is block-superset only."""
+    import jax.numpy as jnp
+
+    nk = -(-cache_len // kv_tile)
+    b, c = qpos.shape
+    qi = jnp.asarray(qpos, jnp.int32).reshape(-1, 1)  # (B*C, 1)
+    qi = qi // q_tile
+    j = jnp.arange(nk, dtype=jnp.int32)[None, :]
+    live = _decode_live_jnp(pattern, qi, j, nk, q_tile, kv_tile, window, pattern_arg)
+    mask = jnp.repeat(live, kv_tile, axis=1)[:, :cache_len]
+    return mask.reshape(b, c, cache_len)

@@ -48,9 +48,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.sparsity import pick_pattern_tiles
+from repro.core.sparsity import _decode_live_jnp, pick_pattern_tiles
 
-__all__ = ["mha_prefill", "mha_decode", "pick_tiles", "NEG_INF"]
+__all__ = ["mha_prefill", "mha_chunk", "mha_decode", "pick_tiles", "NEG_INF"]
 
 NEG_INF = -1e30  # finite stand-in: exp(NEG_INF - m) underflows but never NaNs
 _LANES = 128  # running-stat scratch is lane-replicated for TPU tiling
@@ -187,6 +187,147 @@ def mha_prefill(
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(kv_index.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v)
+
+
+def _chunk_kernel(
+    start_ref, kvi_ref, lv_ref, q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, window: int | None, s_kv: int, q_tile: int, kv_tile: int,
+    n_kv_tiles: int, pattern: str, pattern_arg: int | None,
+):
+    b = pl.program_id(0)
+    jj = pl.program_id(2)
+    nj = pl.num_programs(2)
+    j = kvi_ref[b, jj]  # the streamed kv-tile index (per-row traced table)
+    start = start_ref[b]  # absolute position of this row's first chunk query
+
+    @pl.when(jj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(lv_ref[b, jj] > 0)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (cp, d)
+        k = k_ref[0].astype(jnp.float32)  # (tk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (cp, tk)
+
+        # per-row causal frontier: query at absolute position start+i attends
+        # keys <= its own position — the newest readable cache row is the
+        # query itself, so the frontier is also the written-cache mask
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = j * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < s_kv) & (qpos >= kpos)
+        if window is not None:
+            mask &= kpos > qpos - window
+        if pattern != "dense":
+            # per-QUERY pattern gate: the chunk table is the union over the
+            # q-tile rows the chunk spans; each query keeps only its own
+            # q-tile's row (the same liveness the decode tables trace)
+            mask &= _decode_live_jnp(
+                pattern, qpos // q_tile, j, n_kv_tiles, q_tile, kv_tile,
+                window, pattern_arg,
+            )
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        p = jnp.where(mask, jnp.exp(s - m_new[:, :1]), 0.0)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jj == nj - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        y_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "window", "s_kv", "q_tile", "kv_tile", "pattern",
+        "pattern_arg", "interpret",
+    ),
+)
+def mha_chunk(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    start: jax.Array,
+    kv_index: jax.Array,
+    step_live: jax.Array,
+    *,
+    scale: float,
+    window: int | None,
+    s_kv: int,
+    q_tile: int,
+    kv_tile: int,
+    pattern: str = "dense",
+    pattern_arg: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Mixed chunked-prefill attention over a shared KV cache.
+
+    q: (BK, Gp, C_pad, D) — each row's chunk of queries at absolute positions
+    ``start[b] .. start[b]+C-1``; k, v: (BK, Skv_pad, D) the (truncated)
+    cache; ``kv_index`` / ``step_live``: (BK, max_live) per-row packed live
+    kv-tile tables (:func:`repro.core.sparsity.chunk_live_tables`) — traced
+    data, so rows mid-prompt, rows decoding one token, and idle rows all run
+    the same grid while streaming only their own live tiles.  ``q_tile`` is
+    the *pattern* q-tile granularity (absolute position space), not the chunk
+    length.  Returns (BK, Gp, C_pad, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bk, g, cp, d = q.shape
+    skv_pad = k.shape[1]
+    if skv_pad % kv_tile:
+        raise ValueError(f"padded cache {skv_pad} vs kv tile {kv_tile}")
+    if kv_index.shape[0] != bk or start.shape[0] != bk:
+        raise ValueError(
+            f"table rows {kv_index.shape[0]} / start rows {start.shape[0]} vs BK {bk}"
+        )
+    max_live = kv_index.shape[1]
+
+    grid = (bk, g, max_live)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # start, kv_index, step_live
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, cp, d), lambda b, gg, jj, st, kvi, lv: (b, gg, 0, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, gg, jj, st, kvi, lv: (b, kvi[b, jj], 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, gg, jj, st, kvi, lv: (b, kvi[b, jj], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, cp, d), lambda b, gg, jj, st, kvi, lv: (b, gg, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((cp, _LANES), jnp.float32),
+            pltpu.VMEM((cp, _LANES), jnp.float32),
+            pltpu.VMEM((cp, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _chunk_kernel, scale=scale, window=window, s_kv=s_kv,
+            q_tile=q_tile, kv_tile=kv_tile, n_kv_tiles=skv_pad // kv_tile,
+            pattern=pattern, pattern_arg=pattern_arg,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(
+        start.astype(jnp.int32), kv_index.astype(jnp.int32),
+        step_live.astype(jnp.int32), q, k, v,
+    )
 
 
 def _decode_kernel(

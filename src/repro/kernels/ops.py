@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sparsity, stage_division as sd
-from repro.core.attention import AttentionSpec
+from repro.core.attention import AttentionSpec, truncate_kv_live
 from repro.kernels import fft2d, flash_attention as fa, monarch_bpmm
 
 __all__ = [
@@ -24,6 +24,7 @@ __all__ = [
     "dft_1d",
     "fnet_mixing_kernel",
     "flash_attention",
+    "flash_chunk",
     "flash_decode",
 ]
 
@@ -251,6 +252,68 @@ def flash_attention(
     return _flash_prefill(q, k, v, causal, window, spec.q_tile, spec.kv_tile, pattern, arg)
 
 
+def flash_chunk(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    start: jax.Array,
+    ntok: jax.Array,
+    *,
+    spec: AttentionSpec | None = None,
+    kv_live: int | None = None,
+) -> jax.Array:
+    """Mixed chunked-prefill attention over the shared KV cache.
+
+    q: (B, C, H, hd) — row b's chunk queries at absolute positions
+    ``start[b] .. start[b]+C-1``; caches: (B, Skv, KV, hd); ``ntok`` (B,) is
+    each row's valid-token count (0 = idle, 1 = decode, >1 = prompt chunk).
+    Returns (B, C, H, hd); rows ``i >= ntok[b]`` are garbage the caller never
+    reads (the engine gathers logits at ``ntok-1``).
+
+    One kernel serves every row mode: the per-row live kv-tile table
+    (:func:`repro.core.sparsity.chunk_live_tables`) is traced data built from
+    each row's causal frontier ``start + ntok``, so a decode row streams
+    exactly its written (pattern-live) tiles while a mid-prompt row streams
+    its chunk's — the grid never visits a dead tile for either."""
+    spec = spec or AttentionSpec(impl="flash_kernel")
+    pattern, arg, _, window = canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    b, c, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    k_cache, v_cache, skv = truncate_kv_live(k_cache, v_cache, kv_live)
+    g = h // kvh
+    _, tk = fa.pick_tiles(1, skv, spec.q_tile, spec.kv_tile)
+    skv_pad = _round_up(skv, tk)
+    d = _round_up(hd, _LANES)
+    cp = _round_up(c, 8)
+
+    qt = q.reshape(b, c, kvh, g, hd).transpose(0, 2, 3, 1, 4).reshape(b * kvh, g, c, hd)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, cp - c), (0, d - hd)))
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    kt = jnp.pad(kt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
+    vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, d - hd)))
+
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    kv_index, step_live = sparsity.chunk_live_tables(
+        pattern, start, ntok, c, skv_pad, spec.q_tile, tk,
+        window=window, pattern_arg=arg,
+    )
+    kv_index = jnp.repeat(kv_index, kvh, axis=0)  # (B*KV, max_live)
+    step_live = jnp.repeat(step_live, kvh, axis=0)
+    start_rows = jnp.repeat(start, kvh)
+
+    y = fa.mha_chunk(
+        qt, kt, vt, start_rows, kv_index, step_live,
+        scale=1.0 / math.sqrt(hd), window=window, s_kv=skv,
+        q_tile=spec.q_tile, kv_tile=tk, pattern=pattern, pattern_arg=arg,
+        interpret=_interpret(),
+    )
+    y = y[:, :, :c, :hd].reshape(b, kvh, g, c, hd)
+    return y.transpose(0, 3, 1, 2, 4).reshape(b, c, h, hd)
+
+
 def flash_decode(
     q: jax.Array,
     k_cache: jax.Array,
@@ -280,13 +343,10 @@ def flash_decode(
         spec.pattern, spec.pattern_arg, True, None
     )
     b, h, hd = q.shape
-    skv, kvh = k_cache.shape[1], k_cache.shape[2]
-    if kv_live is not None and kv_live < skv:
-        # static truncation: rows beyond every request's live length are
-        # sliced out of the stream entirely (the bias would only mask them)
-        skv = max(int(kv_live), 1)
-        k_cache = k_cache[:, :skv]
-        v_cache = v_cache[:, :skv]
+    kvh = k_cache.shape[2]
+    # static truncation: rows beyond every request's live length are
+    # sliced out of the stream entirely (the bias would only mask them)
+    k_cache, v_cache, skv = truncate_kv_live(k_cache, v_cache, kv_live)
     g = h // kvh
     _, tk = fa.pick_tiles(1, skv, spec.q_tile, spec.kv_tile)
     skv_pad = _round_up(skv, tk)

@@ -1,23 +1,36 @@
-"""Ragged continuous-batching serve runtime: jit'd prefill + decode with
-sharded KV caches.
+"""Streaming serve runtime: chunked-prefill mixed-step engine + jit'd
+prefill/decode entry points with sharded KV caches.
 
-`make_serve_fns` builds the two compiled entry points the dry-run exercises
-(`prefill_32k` lowers prefill; `decode_32k` / `long_500k` lower decode_step);
-with ``ragged=True`` the prefill takes per-request prompt lengths and the
-decode takes a (B,) position vector instead of a batch-wide scalar.
+`make_serve_fns` builds the two classic compiled entry points the dry-run
+exercises (`prefill_32k` lowers prefill; `decode_32k` / `long_500k` lower
+decode_step); with ``ragged=True`` the prefill takes per-request prompt
+lengths and the decode takes a (B,) position vector instead of a batch-wide
+scalar.  `make_mixed_fn` builds the third, unified entry point: one jitted
+``mixed_step`` where every batch row consumes a per-row token count — a
+prompt chunk, one decode token, or nothing.
 
-`ServeLoop` is the continuous-batching engine: requests stream through a
-fixed set of batch *slots* — each admission runs a bucketed batch-1 prefill
-(right-padded, masked by true length) and inserts the resulting caches into
-the shared KV cache at the slot index; every decode step advances all live
-slots with per-request positions and live-KV masks, so short requests retire
-and hand their slot to the queue without stalling on the longest request
-(the request-level analogue of the paper's §V-A {Load | Cal | Store}
-streaming: admission/eviction keeps the decode array saturated).
+`ServeLoop` is the engine.  In its **chunked** mode (the paper's §V-A
+{Load | Cal | Store} streaming applied at the request level) prompts are
+split into fixed-size chunks and every iteration advances the WHOLE batch
+through ``mixed_step`` issued at two ragged shapes: a (B, 1) *decode wave*
+(every decoding row takes one token, bucketed at the decode rows' own
+live-cache depth) and a (1, C) *slot chunk* per mid-prompt row
+(prefill-into-slot, writing straight into the shared KV cache at positions
+``pos..pos+C-1`` at the prompt's own frontier bucket) — admission is free
+(no blocking batch-1 prefill) and decode never stalls while a long prompt
+streams in.  A per-step chunk *budget* bounds prefill work per iteration
+(Sarathi-style), and sampled tokens are fetched with a one-step lag so host
+dispatch overlaps device compute.
+
+``chunked=False`` keeps the admission-prefill engine (bucketed batch-1
+prefill inserted into the shared cache) — still the right mode for
+sliding-window ring caches and encoder-decoder stacks, whose cache layout a
+mixed chunk cannot stream into.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import jax
 import jax.numpy as jnp
@@ -30,7 +43,15 @@ from repro.models import model as M
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 
-__all__ = ["make_serve_fns", "cache_shardings", "abstract_cache", "Request", "ServeLoop"]
+__all__ = [
+    "make_serve_fns",
+    "make_mixed_fn",
+    "make_slot_chunk_fn",
+    "cache_shardings",
+    "abstract_cache",
+    "Request",
+    "ServeLoop",
+]
 
 
 def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
@@ -45,6 +66,20 @@ def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
         specs,
         is_leaf=lambda x: isinstance(x, shd.ParamSpec),
     )
+
+
+def _entry_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
+    """Shared setup of every serve entry-point factory: resolved runtime +
+    the param / cache / token / replicated shardings.  One definition so the
+    prefill, decode, mixed-wave and slot-chunk compiles can never diverge."""
+    rt = M.resolve_runtime(cfg, mesh)
+    p_shard = shd.sharding_tree(M.build_specs(cfg), mesh, M.rules_for(cfg))
+    c_shard = cache_shardings(cfg, mesh, batch, cache_len)
+    tok_shard = NamedSharding(
+        mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+    )
+    rep = NamedSharding(mesh, P())
+    return rt, p_shard, c_shard, tok_shard, rep
 
 
 def make_serve_fns(
@@ -74,12 +109,9 @@ def make_serve_fns(
     compiles once, so callers should bucket it (the engine uses powers of
     two)."""
     cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
-    rt = M.resolve_runtime(cfg, mesh)
-    pspecs = M.build_specs(cfg)
-    p_shard = shd.sharding_tree(pspecs, mesh, M.rules_for(cfg))
-    c_shard = cache_shardings(cfg, mesh, batch, cache_len)
-    tok_shard = NamedSharding(mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names)))
-    rep = NamedSharding(mesh, P())
+    rt, p_shard, c_shard, tok_shard, rep = _entry_shardings(
+        cfg, mesh, batch, cache_len
+    )
 
     if ragged:
         prefill = jax.jit(
@@ -116,45 +148,222 @@ def make_serve_fns(
     return prefill, decode
 
 
+def make_mixed_fn(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    batch: int,
+    cache_len: int,
+    chunk: int,
+    attn_impl: str | None = None,
+    attn_pattern: str | None = None,
+):
+    """The unified mixed-step entry point: one compiled function advances the
+    whole batch, each row consuming ``ntok[b]`` tokens (0 idle / 1 decode /
+    2..chunk prompt chunk) at positions ``pos[b]..``.
+
+    Returned callable: ``mixed(params, caches, tokens (B,C) host prompt
+    chunks, nxt (B,) device feedback tokens, use_nxt (B,) bool, pos (B,),
+    ntok (B,), kv_live)``.  Decode rows take their input token from ``nxt``
+    (the previous step's on-device argmax — the host never syncs on token
+    values), prefill rows from ``tokens``.  ``kv_live`` buckets compile
+    per value, like the decode entry point."""
+    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
+    rt, p_shard, c_shard, tok_shard, rep = _entry_shardings(
+        cfg, mesh, batch, cache_len
+    )
+    jitted: dict[int | None, object] = {}
+
+    def mixed(params, caches, tokens, nxt, use_nxt, pos, ntok,
+              kv_live: int | None = None):
+        if tokens.shape != (batch, chunk):
+            raise ValueError(
+                f"tokens {tokens.shape} vs compiled chunk shape {(batch, chunk)}"
+            )
+        fn = jitted.get(kv_live)
+        if fn is None:
+            def _step(params, caches, tokens, nxt, use_nxt, pos, ntok):
+                col0 = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :] == 0
+                toks = jnp.where(use_nxt[:, None] & col0, nxt[:, None], tokens)
+                return tf.mixed_step(
+                    params, cfg, caches, toks, pos, ntok, rt, kv_live=kv_live
+                )
+
+            fn = jax.jit(
+                _step,
+                in_shardings=(p_shard, c_shard, tok_shard, tok_shard, rep, rep, rep),
+                out_shardings=(tok_shard, c_shard),
+                donate_argnums=(1,),
+            )
+            jitted[kv_live] = fn
+        return fn(params, caches, tokens, nxt, use_nxt, pos, ntok)
+
+    return mixed
+
+
+def make_slot_chunk_fn(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    batch: int,
+    cache_len: int,
+    chunk: int,
+    attn_impl: str | None = None,
+    attn_pattern: str | None = None,
+):
+    """``mixed_step`` at its other ragged shape, (1, chunk): stream one
+    prompt chunk into ONE slot of the shared cache at a traced slot index.
+
+    Returned callable: ``chunk_fn(params, caches, tokens (1, C), slot, pos,
+    ntok, kv_live)`` -> (logits (vocab,) at the chunk's last valid token,
+    full updated caches).  The slot's cache rows are sliced to a batch-1
+    view, the chunk runs through the exact same mixed_step / chunk-kernel
+    path, and the updated rows are written back in place (donated) — so a
+    chunk call costs ``C x kv_live`` attention for one row, not
+    ``B x C x kv_live`` for the whole batch.  Compiles once per ``kv_live``
+    bucket, like the decode entry point."""
+    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
+    rt, p_shard, c_shard, _, rep = _entry_shardings(cfg, mesh, batch, cache_len)
+    jitted: dict[int | None, object] = {}
+
+    def chunk_fn(params, caches, tokens, slot, pos, ntok,
+                 kv_live: int | None = None):
+        if tokens.shape != (1, chunk):
+            raise ValueError(
+                f"tokens {tokens.shape} vs compiled chunk shape {(1, chunk)}"
+            )
+        fn = jitted.get(kv_live)
+        if fn is None:
+            def _step(params, caches, tokens, slot, pos, ntok):
+                sub = jax.tree.map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                    caches,
+                )
+                logits, new_sub = tf.mixed_step(
+                    params, cfg, sub, tokens, jnp.reshape(pos, (1,)),
+                    jnp.reshape(ntok, (1,)), rt, kv_live=kv_live,
+                )
+                caches = jax.tree.map(
+                    lambda c, w: jax.lax.dynamic_update_slice_in_dim(
+                        c, w.astype(c.dtype), slot, axis=1
+                    ),
+                    caches,
+                    new_sub,
+                )
+                return logits[0], caches
+
+            fn = jax.jit(
+                _step,
+                in_shardings=(p_shard, c_shard, rep, rep, rep, rep),
+                out_shardings=(rep, c_shard),
+                donate_argnums=(1,),
+            )
+            jitted[kv_live] = fn
+        return fn(params, caches, tokens, slot, pos, ntok)
+
+    return chunk_fn
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int
+    arrival: int = 0  # earliest engine step at which the request exists
     generated: list[int] = dataclasses.field(default_factory=list)
     extras: dict = dataclasses.field(default_factory=dict)  # e.g. encdec frames
 
 
 def _next_bucket(n: int, cap: int, floor: int = 8) -> int:
-    """Smallest power-of-two >= n (>= floor), capped at ``cap`` but never
-    below n — bounds the number of compiled prefill shapes."""
+    """Smallest power-of-two >= n (>= floor), clamped at ``cap`` — the result
+    is always a power of two or exactly ``cap``, so the jit shape cache stays
+    bounded (at most log2(cap) values).  ``n`` must already be validated
+    against ``cap`` (the engine checks prompts/positions against cache_len);
+    a larger ``n`` is a caller bug, not a bucket to allocate."""
+    if n > cap:
+        raise ValueError(f"bucket request {n} exceeds cap {cap}")
     b = floor
     while b < n:
         b *= 2
-    return max(n, min(b, cap))
+    return min(b, cap)
+
+
+class _AsyncTokens:
+    """One-step-lag device-to-host token fetch.
+
+    ``push(dev, sinks)`` registers a device array of sampled token ids and
+    the (request, row) pairs that consumed them, starts an async copy, and
+    resolves any record older than ``lag`` steps — so the host appends step
+    t-1's values while step t's compute is already dispatched, and the
+    per-token blocking ``np.asarray(argmax(...))`` sync disappears from the
+    steady-state loop.  ``flush()`` resolves everything (end of run)."""
+
+    def __init__(self, lag: int = 1):
+        self.lag = lag
+        self._q: collections.deque = collections.deque()
+
+    def push(self, dev, sinks: list[tuple[Request, int]]) -> None:
+        try:
+            dev.copy_to_host_async()
+        except AttributeError:  # non-array backends / older jax
+            pass
+        self._q.append((dev, sinks))
+        while len(self._q) > self.lag:
+            self._resolve()
+
+    def _resolve(self) -> None:
+        dev, sinks = self._q.popleft()
+        vals = np.asarray(dev).reshape(-1)
+        for r, i in sinks:
+            r.generated.append(int(vals[i]))
+
+    def flush(self) -> None:
+        while self._q:
+            self._resolve()
 
 
 class ServeLoop:
-    """Continuous-batching decode loop (slot admit/evict, greedy sampling).
+    """Streaming serve engine (greedy sampling), two scheduling modes.
+
+    **Chunked** — mixed-step scheduling: every iteration advances all slots
+    through the ONE unified entry point (``tf.mixed_step``) at two ragged
+    shapes — a (B, 1) decode wave (all decoding rows sample one token,
+    kv_live bucketed at *their* live depth) plus a (1, C) slot-chunk call
+    per mid-prompt row (up to ``chunk_size`` prompt tokens written straight
+    into the slot's rows of the shared cache, bucketed at the prompt's own
+    frontier).  Admission costs nothing (a freed slot just starts consuming
+    the next request's chunks), a per-step ``chunk_budget`` caps total
+    prefill tokens per iteration so decode latency stays bounded, and
+    ``kv_live`` buckets (powers of two) bound the compiled shape count.
+    Decode rows advance on EVERY step by construction —
+    ``stats["decode_stall_steps"]`` stays 0.
+
+    **Admission-prefill** (``chunked=False``) — the slot admit/evict engine:
+    each admission runs a bucketed batch-1 prefill and inserts the caches at
+    the slot index; all live decode slots idle for that prefill
+    (``stats["admission_stall_steps"]`` counts them).  Required for
+    sliding-window ring caches and encoder-decoder stacks; with
+    ``static_batching=True`` it degrades admission to wave scheduling (the
+    serve_throughput baseline).
+
+    Both modes fetch sampled tokens with a one-step lag (`_AsyncTokens`):
+    the decode feedback token stays on device, the host only tracks counts
+    (stopping is length-based), so the loop never blocks on the current
+    step's values.
 
     Per-slot host state mirrors the device-side (B,)-vector threading:
     ``pos[b]`` is request b's next write position (== tokens seen so far),
-    fed to ``decode_step`` so RoPE angles, cache writes and live-KV masks are
-    all per-request.  Prompts are *right*-padded into prefill buckets — real
-    tokens at positions 0..L-1, so positions and causal masks are exact and
-    pad keys are never attended (masked by the decode ``cur_len`` and
-    overwritten in place by the first decode steps).
-
-    ``static_batching=True`` degrades admission to wave scheduling (admit
-    only when every slot is free) — the old-ServeLoop baseline the
-    serve_throughput benchmark compares against; the decode path itself stays
-    ragged-correct.
+    so RoPE angles, cache writes and live-KV masks are all per-request.
+    Prompts are *right*-padded / chunk-aligned — real tokens at positions
+    0..L-1, positions and causal masks exact, pad keys never attended.
     """
 
     def __init__(
         self, cfg: ModelConfig, mesh: Mesh, params, *,
         batch: int, cache_len: int, attn_impl: str | None = None,
         attn_pattern: str | None = None, static_batching: bool = False,
+        chunked: bool = False, chunk_size: int = 32,
+        chunk_budget: int | None = None,
     ):
         cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
         if cfg.sliding_window and cache_len < cfg.sliding_window:
@@ -170,35 +379,74 @@ class ServeLoop:
                 f"{stateful} mixers integrate right-pad tokens into their "
                 "state during bucketed prefill (no per-row mask can undo it)"
             )
+        if chunked:
+            if static_batching:
+                raise ValueError("chunked and static_batching are exclusive: "
+                                 "chunked scheduling IS continuous")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "chunked prefill writes at absolute cache positions; "
+                    "sliding-window ring caches need the admission-prefill "
+                    "path (chunked=False)"
+                )
+            if cfg.family == "encdec" or cfg.n_img_tokens:
+                raise ValueError(
+                    "chunked prefill has no encoder/extras path; use the "
+                    "admission-prefill engine (chunked=False)"
+                )
+            if chunk_size < 1:
+                raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+            if chunk_budget is not None and chunk_budget < 1:
+                raise ValueError(
+                    f"chunk_budget must be >= 1, got {chunk_budget} — a "
+                    "zero budget would starve prefill rows forever"
+                )
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.batch, self.cache_len = batch, cache_len
         self.static_batching = static_batching
-        # batch-1 ragged prefill (jit retraces per bucket shape; caches insert
-        # at a traced slot index so one compile covers every slot) + batch-wide
-        # ragged decode, both through the sharded serve entry points
-        self.prefill_fn, _ = make_serve_fns(
-            cfg, mesh, batch=1, cache_len=cache_len, ragged=True
-        )
-        _, self.decode_fn = make_serve_fns(
-            cfg, mesh, batch=batch, cache_len=cache_len, ragged=True
-        )
-        self._insert = jax.jit(
-            lambda caches, wave, slot: jax.tree.map(
-                lambda c, w: jax.lax.dynamic_update_slice_in_dim(
-                    c, w.astype(c.dtype), slot, axis=1
+        self.chunked = chunked
+        self.chunk_size = chunk_size
+        self.chunk_budget = chunk_budget if chunk_budget is not None else chunk_size
+        if chunked:
+            # ONE entry point (tf.mixed_step), two ragged shapes: the (B, 1)
+            # decode wave advances every decoding row each iteration at the
+            # decode rows' OWN kv_live bucket, and each (1, C) slot-chunk
+            # call streams a prompt chunk into the shared cache at its own
+            # frontier bucket — decode work and prefill work never inflate
+            # each other's compiled shapes or compute
+            self.mixed1_fn = make_mixed_fn(
+                cfg, mesh, batch=batch, cache_len=cache_len, chunk=1
+            )
+            self.chunk_fn = make_slot_chunk_fn(
+                cfg, mesh, batch=batch, cache_len=cache_len, chunk=chunk_size
+            )
+        else:
+            # batch-1 ragged prefill (jit retraces per bucket shape; caches
+            # insert at a traced slot index so one compile covers every slot)
+            # + batch-wide ragged decode, through the sharded entry points
+            self.prefill_fn, _ = make_serve_fns(
+                cfg, mesh, batch=1, cache_len=cache_len, ragged=True
+            )
+            _, self.decode_fn = make_serve_fns(
+                cfg, mesh, batch=batch, cache_len=cache_len, ragged=True
+            )
+            self._insert = jax.jit(
+                lambda caches, wave, slot: jax.tree.map(
+                    lambda c, w: jax.lax.dynamic_update_slice_in_dim(
+                        c, w.astype(c.dtype), slot, axis=1
+                    ),
+                    caches,
+                    wave,
                 ),
-                caches,
-                wave,
-            ),
-            donate_argnums=(0,),
-        )
+                donate_argnums=(0,),
+            )
         self.stats: dict[str, int] = {}
 
-    # -- per-slot prefill -------------------------------------------------
+    # -- per-slot prefill (admission-prefill mode) ------------------------
 
     def _prefill_one(self, r: Request):
         """Prefill one request (batch=1, right-padded to a bucket); returns
-        (first generated token, batch-1 cache tree)."""
+        (first sampled token — a DEVICE scalar, batch-1 cache tree)."""
         ln = len(r.prompt)
         bucket = _next_bucket(ln, self.cache_len)
         toks = np.zeros((1, bucket), np.int32)
@@ -208,7 +456,7 @@ class ServeLoop:
             b[key] = jnp.asarray(val)[None]
         logits, wave = self.prefill_fn(self.params, b, jnp.asarray([ln], jnp.int32))
         self.stats["prefill_calls"] = self.stats.get("prefill_calls", 0) + 1
-        return int(jnp.argmax(logits[0])), wave
+        return jnp.argmax(logits[0]).astype(jnp.int32), wave
 
     def _zero_caches(self):
         specs = tf.cache_specs(self.cfg, self.batch, self.cache_len)
@@ -219,16 +467,7 @@ class ServeLoop:
             is_leaf=lambda x: isinstance(x, shd.ParamSpec),
         )
 
-    # -- engine loop ------------------------------------------------------
-
-    def run(self, requests: list[Request]) -> list[Request]:
-        """Serve every request to completion; returns them in input order.
-
-        Admission fills free slots from the queue (per-slot prefill + cache
-        insert), then one ragged decode step advances all live slots;
-        finished requests retire immediately and free their slot for the
-        next admission — decode never stalls on the longest request.
-        """
+    def _validate(self, requests: list[Request]) -> None:
         for r in requests:
             if len(r.prompt) < 1:
                 raise ValueError(f"request {r.uid}: prompt must be non-empty")
@@ -247,12 +486,33 @@ class ServeLoop:
                     f"> cache_len {self.cache_len}"
                 )
             r.generated.clear()
+
+    # -- engine loops -----------------------------------------------------
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve every request to completion; returns them in input order."""
+        self._validate(requests)
+        if self.chunked:
+            return self._run_chunked(requests)
+        return self._run_admission(requests)
+
+    def _run_admission(self, requests: list[Request]) -> list[Request]:
+        """Admission-prefill engine: per-slot prefill + cache insert, then
+        ragged decode steps; finished requests retire immediately and free
+        their slot — but every admission stalls all live decode slots for
+        one blocking batch-1 prefill (counted in ``admission_stall_steps``).
+        """
         queue = list(requests)
         qi = 0
         active: list[Request | None] = [None] * self.batch
         pos = np.zeros(self.batch, np.int32)  # next write position per slot
-        nxt = np.zeros(self.batch, np.int32)  # last sampled token per slot
-        self.stats = {"prefill_calls": 0, "decode_steps": 0}
+        remaining = np.zeros(self.batch, np.int32)  # decode tokens still owed
+        nxt = jnp.zeros((self.batch,), jnp.int32)  # device feedback tokens
+        fetch = _AsyncTokens(lag=1)
+        self.stats = {
+            "prefill_calls": 0, "decode_steps": 0, "admission_stall_steps": 0,
+        }
+        clock = 0  # admission clock: decode steps + idle ticks (arrivals)
         with self.mesh:
             caches = self._zero_caches()
             while qi < len(queue) or any(r is not None for r in active):
@@ -262,21 +522,27 @@ class ServeLoop:
                 )
                 if may_admit:
                     for slot in range(self.batch):
-                        if qi >= len(queue):
-                            break
+                        if qi >= len(queue) or queue[qi].arrival > clock:
+                            break  # FIFO: the head hasn't arrived yet
                         if active[slot] is not None:
                             continue
                         r = queue[qi]
                         qi += 1
+                        if any(a is not None for a in active):
+                            # live decode slots idle for this whole prefill —
+                            # the stall the chunked engine exists to remove
+                            self.stats["admission_stall_steps"] += 1
                         tok, wave = self._prefill_one(r)
-                        r.generated.append(tok)
+                        fetch.push(tok, [(r, 0)])
                         if r.max_new <= 1:
                             continue  # done at prefill; slot stays free
                         caches = self._insert(caches, wave, jnp.int32(slot))
                         active[slot] = r
                         pos[slot] = len(r.prompt)
-                        nxt[slot] = tok
+                        remaining[slot] = r.max_new - 1
+                        nxt = nxt.at[slot].set(tok)
                 if not any(r is not None for r in active):
+                    clock += 1  # idle tick: waiting on arrivals
                     continue
                 # one ragged decode step for the whole batch; attention
                 # streams only the live cache prefix (bucketed so each bucket
@@ -287,23 +553,164 @@ class ServeLoop:
                 if not self.cfg.sliding_window:
                     hot = max(int(pos[s]) for s in range(self.batch)
                               if active[s] is not None) + 1
-                    kv_live = min(_next_bucket(hot, self.cache_len), self.cache_len)
+                    kv_live = _next_bucket(hot, self.cache_len)
                     self.stats["decode_kv_live_max"] = max(
                         self.stats.get("decode_kv_live_max", 0), kv_live
                     )
                 logits, caches = self.decode_fn(
-                    self.params, caches, jnp.asarray(nxt[:, None]),
-                    jnp.asarray(pos), kv_live,
+                    self.params, caches, nxt[:, None], jnp.asarray(pos), kv_live,
                 )
                 self.stats["decode_steps"] += 1
-                toks = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+                clock += 1
+                toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                sinks = []
                 for slot in range(self.batch):
                     r = active[slot]
                     if r is None:
                         continue
-                    r.generated.append(int(toks[slot]))
+                    sinks.append((r, slot))
                     pos[slot] += 1
-                    nxt[slot] = toks[slot]
-                    if len(r.generated) >= r.max_new:
+                    remaining[slot] -= 1
+                    if remaining[slot] <= 0:
                         active[slot] = None  # evict: slot frees for the queue
+                fetch.push(toks, sinks)
+                nxt = toks
+        fetch.flush()
+        return requests
+
+    def _run_chunked(self, requests: list[Request]) -> list[Request]:
+        """Mixed-step engine: every iteration advances ALL slots — one (B, 1)
+        decode wave samples every decoding row, then each mid-prompt row
+        streams one chunk into the shared cache through a (1, C) slot-chunk
+        call — so a long admission never stalls the batch, and decode steps
+        stay bucketed at the decode rows' own live-cache depth while the
+        prompt streams at its own."""
+        B, C = self.batch, self.chunk_size
+        queue = list(requests)
+        qi = 0
+        active: list[Request | None] = [None] * B
+        pos = np.zeros(B, np.int32)  # next cache write position per slot
+        consumed = np.zeros(B, np.int32)  # prompt tokens consumed per slot
+        remaining = np.zeros(B, np.int32)  # decode tokens still owed
+        nxt = jnp.zeros((B,), jnp.int32)  # device feedback tokens
+        zeros_b1 = jnp.zeros((B, 1), jnp.int32)
+        fetch = _AsyncTokens(lag=1)
+        self.stats = {
+            "prefill_calls": 0, "mixed_steps": 0, "chunk_calls": 0,
+            "decode_steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+            "decode_stall_steps": 0, "overlap_steps": 0,
+        }
+        clock = 0
+        rr = 0  # round-robin offset: fair prefill budget across slots
+        with self.mesh:
+            caches = self._zero_caches()
+            while qi < len(queue) or any(r is not None for r in active):
+                # admission is free: a freed slot starts consuming the next
+                # arrived request's chunks on the very next mixed step
+                for slot in range(B):
+                    if qi >= len(queue) or queue[qi].arrival > clock:
+                        break  # FIFO: the head hasn't arrived yet
+                    if active[slot] is not None:
+                        continue
+                    r = queue[qi]
+                    qi += 1
+                    active[slot] = r
+                    pos[slot] = 0
+                    consumed[slot] = 0
+                    remaining[slot] = r.max_new
+                if not any(r is not None for r in active):
+                    clock += 1  # idle tick: waiting on arrivals
+                    continue
+                # schedule: decode rows always advance; prompt rows split the
+                # per-step chunk budget under a round-robin rotation
+                eligible = [
+                    s for s in range(B)
+                    if active[s] is not None
+                    and len(active[s].prompt) - consumed[s] <= 0
+                ]
+                use_nxt = np.zeros(B, bool)
+                chunk_t = np.zeros(B, np.int32)
+                budget = self.chunk_budget
+                for k in range(B):
+                    slot = (rr + k) % B
+                    r = active[slot]
+                    if r is None:
+                        continue
+                    rem_prompt = len(r.prompt) - consumed[slot]
+                    if rem_prompt > 0:
+                        t = min(C, rem_prompt, budget)
+                        if t <= 0:
+                            continue  # budget-starved this step; retries next
+                        chunk_t[slot] = t
+                        budget -= t
+                    else:
+                        use_nxt[slot] = True  # decode rows: never budget-gated
+                rr = (rr + 1) % B
+                clock += 1
+                self.stats["mixed_steps"] += 1
+                dec_rows = [s for s in range(B) if use_nxt[s]]
+                chunk_rows = [s for s in range(B) if chunk_t[s] > 0]
+                if any(s not in dec_rows for s in eligible):
+                    # observational, not definitional: trips if a scheduler
+                    # change ever gates a decode-eligible row (e.g. on the
+                    # chunk budget) — the CI gate asserts this stays 0
+                    self.stats["decode_stall_steps"] += 1
+                if dec_rows and chunk_rows:
+                    self.stats["overlap_steps"] += 1  # the §V-A overlap
+                # (a) decode wave — mixed_step at (B, 1), bucketed by the
+                # decode rows' own frontier (a short request decoding next to
+                # a 4k prompt mid-prefill still reads a shallow cache)
+                if dec_rows:
+                    ntok_a = np.where(use_nxt, 1, 0).astype(np.int32)
+                    hot = max(int(pos[s]) + 1 for s in dec_rows)
+                    kv_live = _next_bucket(hot, self.cache_len)
+                    self.stats["decode_kv_live_max"] = max(
+                        self.stats.get("decode_kv_live_max", 0), kv_live
+                    )
+                    logits, caches = self.mixed1_fn(
+                        self.params, caches, zeros_b1, nxt,
+                        jnp.asarray(use_nxt), jnp.asarray(pos),
+                        jnp.asarray(ntok_a), kv_live,
+                    )
+                    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                    self.stats["decode_steps"] += 1
+                    self.stats["decode_tokens"] += len(dec_rows)
+                    sinks = []
+                    for slot in dec_rows:
+                        r = active[slot]
+                        sinks.append((r, slot))
+                        pos[slot] += 1
+                        remaining[slot] -= 1
+                        if remaining[slot] <= 0:
+                            active[slot] = None
+                    fetch.push(toks, sinks)
+                    nxt = jnp.where(jnp.asarray(use_nxt), toks, nxt)
+                # (b) prompt chunks — mixed_step at (1, C) per mid-prompt
+                # row, streaming into the slot's rows of the shared cache at
+                # the prompt's own frontier bucket
+                for slot in chunk_rows:
+                    r = active[slot]
+                    t = int(chunk_t[slot])
+                    ctoks = np.zeros((1, C), np.int32)
+                    ctoks[0, :t] = r.prompt[consumed[slot] : consumed[slot] + t]
+                    kv_live = _next_bucket(int(pos[slot]) + t, self.cache_len)
+                    logits1, caches = self.chunk_fn(
+                        self.params, caches, jnp.asarray(ctoks),
+                        jnp.int32(slot), jnp.int32(pos[slot]), jnp.int32(t),
+                        kv_live,
+                    )
+                    self.stats["chunk_calls"] += 1
+                    self.stats["prefill_tokens"] += t
+                    pos[slot] += t
+                    consumed[slot] += t
+                    if consumed[slot] == len(r.prompt):
+                        # the chunk that finishes the prompt samples the
+                        # first generated token (logits at ntok-1)
+                        tok1 = jnp.argmax(logits1).astype(jnp.int32)
+                        fetch.push(tok1, [(r, 0)])
+                        nxt = nxt.at[slot].set(tok1)
+                        remaining[slot] -= 1
+                        if remaining[slot] <= 0:
+                            active[slot] = None
+        fetch.flush()
         return requests

@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import sparsity
-from repro.core.attention import AttentionSpec
+from repro.core.attention import AttentionSpec, truncate_kv_live
 from repro.distributed.sharding import constrain
 
 __all__ = [
@@ -38,8 +38,10 @@ __all__ = [
     "apply_rope",
     "chunked_attention",
     "decode_attention",
+    "chunk_attention_cache",
     "run_attention",
     "run_decode_attention",
+    "run_chunk_attention",
     "silu",
     "gelu",
 ]
@@ -233,6 +235,46 @@ def decode_attention(
     return out.reshape(b, h, hd)
 
 
+def chunk_attention_cache(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    start: jax.Array,
+    *,
+    window: int | None = None,
+    pattern_mask: jax.Array | None = None,
+) -> jax.Array:
+    """Chunk-of-queries attention over a shared KV cache with a per-row
+    causal frontier (the XLA form of the mixed chunked-prefill step).
+
+    q: (B, C, H, hd); caches: (B, S, KV, hd); ``start`` (B,) is the absolute
+    position of each row's first query — query i attends cache keys at
+    positions ``<= start[b] + i`` (its own position is the newest written
+    row, so the frontier doubles as the written-cache mask).
+    ``pattern_mask`` (B, C, S) is the per-query token expansion of the
+    block-sparsity map (mask-only on this backend).  Rows beyond a row's
+    valid count produce garbage the caller never reads."""
+    b, c, h, hd = q.shape
+    skv, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, c, kvh, g, hd)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    qpos = jnp.asarray(start, jnp.int32)[:, None] + jnp.arange(c, dtype=jnp.int32)
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    mask = kpos[None, None, :] <= qpos[:, :, None]  # (B, C, S) frontier
+    if window is not None:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    if pattern_mask is not None:
+        mask &= pattern_mask
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, c, h, hd)
+
+
 def _fused_ok(rt: Runtime) -> bool:
     # pallas_call is a per-device kernel: under a >1-chip mesh the SPMD
     # partitioner cannot split it, so the spec falls back to the XLA form
@@ -303,15 +345,12 @@ def run_decode_attention(
         return ops.flash_decode(
             q, k_cache, v_cache, cur_len, spec=spec, kv_live=kv_live
         )
-    if kv_live is not None and kv_live < k_cache.shape[1]:
-        k_cache = k_cache[:, : max(kv_live, 1)]
-        v_cache = v_cache[:, : max(kv_live, 1)]
+    k_cache, v_cache, skv = truncate_kv_live(k_cache, v_cache, kv_live)
     pattern, arg, _, window = sparsity.canonical_pattern(
         spec.pattern, spec.pattern_arg, True, None
     )
     pmask = None
     if pattern != "dense" or window is not None:
-        skv = k_cache.shape[1]
         _, tk = sparsity.pick_pattern_tiles(1, skv, spec.q_tile, spec.kv_tile)
         if cur_len is None:
             cl = jnp.full((q.shape[0],), skv, jnp.int32)
@@ -325,3 +364,47 @@ def run_decode_attention(
         if window is not None:  # fine window edge (matches the prefill mask)
             pmask &= jnp.arange(skv)[None, :] > cl[:, None] - 1 - window
     return decode_attention(q, k_cache, v_cache, cur_len, pattern_mask=pmask)
+
+
+def run_chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    start: jax.Array,
+    ntok: jax.Array,
+    *,
+    spec: AttentionSpec = AttentionSpec(),
+    rt: Runtime = Runtime(),
+    kv_live: int | None = None,
+) -> jax.Array:
+    """Execute one mixed chunked-prefill attention step under the configured
+    spec: q (B, C, H, hd) chunk queries at absolute positions
+    ``start[b]..start[b]+C-1`` over the shared cache, per-row causal frontier.
+
+    The fused kernel streams each row's own live kv-tile table
+    (:func:`repro.core.sparsity.chunk_live_tables` — traced from
+    ``start + ntok``); the XLA form masks with the same map's per-query token
+    expansion.  ``kv_live`` is the engine's bucketed static bound on the
+    hottest row's frontier — both forms read only that cache prefix."""
+    if spec.fused and _fused_ok(rt):
+        from repro.kernels import ops
+
+        return ops.flash_chunk(
+            q, k_cache, v_cache, start, ntok, spec=spec, kv_live=kv_live
+        )
+    k_cache, v_cache, skv = truncate_kv_live(k_cache, v_cache, kv_live)
+    pattern, arg, _, window = sparsity.canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    pmask = None
+    if pattern != "dense":
+        _, tk = sparsity.pick_pattern_tiles(1, skv, spec.q_tile, spec.kv_tile)
+        qpos = jnp.asarray(start, jnp.int32)[:, None] + jnp.arange(
+            q.shape[1], dtype=jnp.int32
+        )
+        pmask = sparsity.chunk_token_mask(
+            pattern, qpos, skv, spec.q_tile, tk, window=window, pattern_arg=arg
+        )
+    return chunk_attention_cache(
+        q, k_cache, v_cache, start, window=window, pattern_mask=pmask
+    )

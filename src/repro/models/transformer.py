@@ -31,6 +31,7 @@ from repro.models.layers import (
     layer_norm,
     rms_norm,
     run_attention,
+    run_chunk_attention,
     run_decode_attention,
     silu,
 )
@@ -178,7 +179,7 @@ def apply_attention(
     *,
     causal: bool,
     positions: jax.Array,
-    mode: str,  # train | encode | prefill | decode
+    mode: str,  # train | encode | prefill | decode | mixed
     cache: dict | None = None,
     pos: jax.Array | None = None,
     kv_source: jax.Array | None = None,
@@ -187,6 +188,7 @@ def apply_attention(
     lengths: jax.Array | None = None,  # (B,) true prompt lengths (ragged prefill)
     attn_pattern: str | None = None,  # per-slot sparsity override (hybrid stacks)
     kv_live: int | None = None,  # static live-cache bound (sparse serve decode)
+    ntok: jax.Array | None = None,  # (B,) valid chunk tokens (mixed step)
 ):
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -217,7 +219,33 @@ def apply_attention(
             k_new = apply_rope(k_new, positions, cfg.rope_theta)
 
     new_cache = None
-    if mode == "decode":
+    if mode == "mixed":
+        # mixed chunked-prefill step: row b consumes ntok[b] tokens at
+        # absolute positions pos[b] .. pos[b]+ntok[b]-1 (0 = idle slot,
+        # 1 = decode, >1 = prompt chunk) — the chunk KV is scattered straight
+        # into the shared cache BEFORE attention (in-chunk causal self-
+        # attention reads its own keys), and the per-row causal frontier
+        # inside run_chunk_attention doubles as the written-cache mask.
+        assert cache is not None and pos is not None and ntok is not None
+        assert not is_cross, "mixed steps are self-attention only"
+        assert not cfg.sliding_window, (
+            "mixed chunked prefill needs absolute cache positions; ring "
+            "caches go through the admission-prefill path"
+        )
+        cache_len = cache["k"].shape[1]
+        rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, C)
+        valid = jnp.arange(s)[None, :] < ntok[:, None]
+        # invalid rows scatter out of bounds and are dropped — idle / budget-
+        # starved / decode rows never clobber cache rows they don't own
+        rows = jnp.where(valid, rows, cache_len)
+        upd = jax.vmap(lambda c, n, r: c.at[r].set(n, mode="drop"))
+        kc = upd(cache["k"], k_new.astype(cache["k"].dtype), rows)
+        vc = upd(cache["v"], v_new.astype(cache["v"].dtype), rows)
+        new_cache = {"k": kc, "v": vc}
+        out = run_chunk_attention(
+            q, kc, vc, pos, ntok, spec=spec, rt=rt, kv_live=kv_live
+        )
+    elif mode == "decode":
         assert cache is not None and pos is not None
         if not is_cross:  # self-attention: append the token's kv at pos
             cache_len = cache["k"].shape[1]
@@ -300,6 +328,7 @@ def apply_slot(
     causal: bool = True,
     lengths: jax.Array | None = None,
     kv_live: int | None = None,
+    ntok: jax.Array | None = None,
 ):
     """One layer: pre-norm mixer + (optional cross-attn) + pre-norm FFN."""
     aux = jnp.zeros((), jnp.float32)
@@ -310,6 +339,7 @@ def apply_slot(
             sparams["attn"], cfg, hmix, rt, causal=causal, positions=positions,
             mode=mode, cache=None if cache is None else cache.get("attn"), pos=pos,
             lengths=lengths, attn_pattern=slot.attn_pattern, kv_live=kv_live,
+            ntok=ntok,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -376,6 +406,7 @@ def run_stack(
     causal: bool = True,
     lengths: jax.Array | None = None,  # (B,) ragged prompt lengths (prefill)
     kv_live: int | None = None,  # static live-cache bound (sparse serve decode)
+    ntok: jax.Array | None = None,  # (B,) valid chunk tokens (mixed step)
 ):
     """Scan the periodic layer pattern.  Returns (x, new_caches, aux_sum)."""
 
@@ -390,6 +421,7 @@ def run_stack(
                 slot, p_params[key], cfg, x, rt, mode=mode, positions=positions,
                 cache=None if p_cache is None else p_cache[key], pos=pos,
                 enc_out=enc_out, causal=causal, lengths=lengths, kv_live=kv_live,
+                ntok=ntok,
             )
             new_cache[key] = c
             aux = aux + a
@@ -644,4 +676,49 @@ def decode_step(
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)
     logits = x[:, 0] @ params["head"].astype(x.dtype)
+    return logits, new_caches
+
+
+def mixed_step(
+    params: Params,
+    cfg: ModelConfig,
+    caches: dict,
+    tokens: jax.Array,
+    pos: jax.Array,
+    ntok: jax.Array,
+    rt: Runtime,
+    *,
+    kv_live: int | None = None,
+):
+    """One mixed chunked-prefill/decode step for the whole batch.
+
+    tokens: (B, C); pos: (B,) absolute position of each row's first token;
+    ntok: (B,) valid tokens per row — 0 (idle slot), 1 (decode), 2..C (prompt
+    chunk).  Row b's tokens land at cache positions ``pos[b]..pos[b]+ntok-1``
+    and every query attends its own causal prefix, so prompt chunks stream
+    into the shared cache while decode rows take their next token in the SAME
+    compiled step — decode throughput is never gated on a prefill finishing
+    (the request-level {Load | Cal | Store} overlap of §V-A).
+
+    Returns (logits (B, vocab) at each row's LAST valid token — the sampling
+    row for decode rows and for the chunk that completes a prompt — and the
+    new caches).  Rows with ntok == 0 return garbage logits the engine never
+    reads.  ``kv_live`` bounds the hottest row's frontier (bucketed, static).
+    """
+    b, c = tokens.shape
+    x = embed_tokens(params, cfg, tokens, rt)
+    pos = jnp.asarray(pos, jnp.int32)
+    ntok = jnp.asarray(ntok, jnp.int32)
+    positions = pos[:, None] + jnp.arange(c, dtype=jnp.int32)  # (B, C)
+    x = _boundary(x, rt, cfg)
+    x, new_caches, _ = run_stack(
+        params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="mixed",
+        positions=positions, caches=caches, pos=pos, causal=cfg.causal,
+        kv_live=kv_live, ntok=ntok,
+    )
+    nf = jax.tree.map(lambda a: a[0], params["final_norm"])
+    x = _norm(nf, cfg, x)
+    idx = jnp.clip(ntok - 1, 0, c - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = last @ params["head"].astype(x.dtype)
     return logits, new_caches

@@ -201,6 +201,176 @@ def test_serve_loop_rejects_stateful_mixers():
         ServeLoop(cfg, make_local_mesh(), None, batch=2, cache_len=32)
 
 
+# --------------------------------------------------------------------------
+# Chunked-prefill mixed-step engine
+# --------------------------------------------------------------------------
+
+
+def test_next_bucket_boundaries():
+    """Buckets must stay a bounded set (powers of two or exactly the cap) so
+    the jit shape cache is bounded; n > cap is a caller bug, not a shape."""
+    from repro.launch.serve import _next_bucket
+
+    assert _next_bucket(1, 64) == 8
+    assert _next_bucket(8, 64) == 8
+    assert _next_bucket(9, 64) == 16
+    assert _next_bucket(33, 64) == 64
+    assert _next_bucket(64, 64) == 64
+    # non-power-of-two cap: n landing between the cap and the next power of
+    # two must clamp to the cap, never leak arbitrary n into the jit cache
+    assert _next_bucket(20, 24) == 24
+    assert _next_bucket(24, 24) == 24
+    assert _next_bucket(5, 24) == 8
+    with pytest.raises(ValueError, match="exceeds cap"):
+        _next_bucket(25, 24)
+    vals = {_next_bucket(n, 100) for n in range(1, 101)}
+    assert vals <= {8, 16, 32, 64, 100}
+
+
+# pattern, pattern_arg, impl, cache_len, (prompt_len, max_new) list, chunk.
+# dense/window run at small shapes; butterfly needs cache_len >= 512 so the
+# kv-tile grid (128-wide tiles) actually has dead tiles to skip.  qwen3 is
+# GQA (4 heads over 2 kv heads) throughout.
+CHUNKED_CASES = [
+    ("dense", None, "xla_chunked", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("dense", None, "flash_kernel", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("window", 16, "xla_chunked", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("window", 16, "flash_kernel", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("butterfly", None, "xla_chunked", 512, [(300, 5), (7, 6), (150, 3)], 32),
+    ("butterfly", None, "flash_kernel", 512, [(300, 4), (7, 4)], 32),
+]
+
+
+@pytest.mark.parametrize("pattern,arg,impl,cache_len,lens,chunk", CHUNKED_CASES)
+def test_chunked_engine_matches_admission_engine(
+    pattern, arg, impl, cache_len, lens, chunk
+):
+    """The mixed-step engine must be token-identical to the admission-prefill
+    engine (and to isolated greedy decoding) on interleaved long/short
+    prompts — chunked prefill changes the schedule, never the math."""
+    import numpy as np
+
+    from repro.core.attention import AttentionSpec
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import Request, ServeLoop
+
+    cfg = dataclasses.replace(
+        _f32(registry.get("qwen3-0.6b", reduced=True)),
+        attention=AttentionSpec(impl=impl, pattern=pattern, pattern_arg=arg),
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32) for ln, _ in lens]
+
+    def mk():
+        return [
+            Request(uid=i, prompt=p, max_new=mn)
+            for i, (p, (_, mn)) in enumerate(zip(prompts, lens))
+        ]
+
+    mesh = make_local_mesh()
+    ref = ServeLoop(cfg, mesh, params, batch=2, cache_len=cache_len).run(mk())
+    ch = ServeLoop(
+        cfg, mesh, params, batch=2, cache_len=cache_len, chunked=True,
+        chunk_size=chunk,
+    ).run(mk())
+    for r1, r2 in zip(ref, ch):
+        assert r2.generated == r1.generated, f"uid {r1.uid}"
+    if pattern == "dense":  # the engines also match isolated decoding
+        for r in ch:
+            assert r.generated == _reference_greedy(
+                cfg, params, r.prompt, r.max_new, cache_len
+            ), f"uid {r.uid} vs isolated"
+
+
+def test_chunked_decode_never_stalls_on_admission():
+    """A long prompt arriving mid-decode must stream in chunks WHILE the live
+    decode rows keep sampling: zero decode stalls, overlap steps observed,
+    and generations still token-identical to the admission engine."""
+    import numpy as np
+
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import Request, ServeLoop
+
+    cfg = _f32(registry.get("qwen3-0.6b", reduced=True))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    short = [rng.integers(0, cfg.vocab, size=4).astype(np.int32) for _ in range(2)]
+    long_p = rng.integers(0, cfg.vocab, size=90).astype(np.int32)
+
+    def mk():
+        rs = [Request(uid=i, prompt=p, max_new=12) for i, p in enumerate(short)]
+        rs.append(Request(uid=2, prompt=long_p, max_new=3, arrival=2))
+        return rs
+
+    mesh = make_local_mesh()
+    loop = ServeLoop(
+        cfg, mesh, params, batch=3, cache_len=128, chunked=True, chunk_size=8
+    )
+    done = loop.run(mk())
+    assert loop.stats["decode_stall_steps"] == 0
+    # the long prompt needs ceil(90/8) > 11 chunk steps; the short requests'
+    # 12 decode steps must overlap them rather than wait
+    assert loop.stats["overlap_steps"] >= 3
+    assert loop.stats["prefill_calls"] == 0
+    ref = ServeLoop(cfg, mesh, params, batch=3, cache_len=128).run(mk())
+    for r1, r2 in zip(ref, done):
+        assert r2.generated == r1.generated, f"uid {r1.uid}"
+
+
+def test_kv_live_bucket_boundary_butterfly_decode():
+    """Regression: butterfly decode with the live cache bucketed at
+    ``hot`` one above a power of two (cur_len 129 -> kv_live 256 on a 512
+    cache) must match the untruncated decode — the per-row live-tile tables
+    rebuilt at the truncated length may not change liveness."""
+    from repro.core.attention import AttentionSpec
+    from repro.models.layers import run_decode_attention
+
+    key = jax.random.PRNGKey(2)
+    b, h, kv, hd, cache = 2, 4, 2, 16, 512
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, hd), jnp.float32)
+    kc = jax.random.normal(kk, (b, cache, kv, hd), jnp.float32)
+    vc = jax.random.normal(kv_, (b, cache, kv, hd), jnp.float32)
+    cur = jnp.asarray([129, 65], jnp.int32)  # one above a power of two
+    for impl in ("xla_chunked", "flash_kernel"):
+        spec = AttentionSpec(impl=impl, pattern="butterfly")
+        full = run_decode_attention(q, kc, vc, cur, spec=spec)
+        bucketed = run_decode_attention(q, kc, vc, cur, spec=spec, kv_live=256)
+        err = float(jnp.max(jnp.abs(full - bucketed)))
+        assert err < 1e-5, f"{impl}: kv_live truncation diverged by {err}"
+
+
+@pytest.mark.parametrize("pattern", ["dense", "butterfly"])
+@pytest.mark.parametrize("impl", ["xla_chunked", "flash_kernel"])
+def test_chunk_attention_matches_prefill_rows(pattern, impl):
+    """A mid-sequence chunk of queries over the shared cache must equal the
+    same rows of a full prefill — per-query pattern liveness (each query's
+    own q-tile row), causal frontier, GQA grouping all exact."""
+    import numpy as np
+
+    from repro.core.attention import AttentionSpec
+    from repro.models.layers import run_attention, run_chunk_attention
+
+    key = jax.random.PRNGKey(3)
+    b, s, h, kvh, hd, c = 2, 512, 4, 2, 16, 96
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(kv_, (b, s, kvh, hd), jnp.float32)
+    spec = AttentionSpec(impl=impl, pattern=pattern)
+    full = run_attention(q, k, v, spec=spec, causal=True)
+    start = np.asarray([200, 64], np.int32)  # not tile-aligned on row 0
+    qc = jnp.stack([q[i, p : p + c] for i, p in enumerate(start)])
+    out = run_chunk_attention(
+        qc, k, v, jnp.asarray(start), jnp.full((b,), c, jnp.int32), spec=spec
+    )
+    ref = jnp.stack([full[i, p : p + c] for i, p in enumerate(start)])
+    tol = 2e-5 * float(jnp.max(jnp.abs(ref)))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < tol, f"{impl}/{pattern}: chunk rows diverge by {err}"
+
+
 def test_serve_admit_evict_mid_stream():
     """More requests than slots: short requests exit, queued ones are admitted
     into the freed slot mid-stream, and every stream still matches isolation."""
