@@ -117,14 +117,15 @@ def make_workload(cfg, scenario: str, n: int, cache_len: int, seed: int, batch: 
     raise ValueError(f"unknown scenario {scenario!r}")
 
 
-MODES = ("static", "continuous", "chunked")
+MODES = ("static", "continuous", "chunked", "paged")
 
 
 def run_mode(cfg, mesh, params, reqs, *, mode, batch, cache_len, chunk_size,
              reps: int = 3):
     loop = ServeLoop(
         cfg, mesh, params, batch=batch, cache_len=cache_len,
-        static_batching=(mode == "static"), chunked=(mode == "chunked"),
+        static_batching=(mode == "static"),
+        chunked=(mode in ("chunked", "paged")), paged=(mode == "paged"),
         chunk_size=chunk_size,
     )
 
@@ -168,6 +169,13 @@ def main() -> None:
                     help="CI gate: zero decode stalls, token-identical to "
                          "continuous, more tokens/iteration than static's "
                          "tokens/dispatch, 0.5x wall-clock sanity bound")
+    ap.add_argument("--check-paged", action="store_true",
+                    help="CI gate: paged engine token-identical to the "
+                         "contiguous engine, peak resident pages < the dense "
+                         "reservation, and >= 2x concurrent long-context "
+                         "requests at a fixed page-pool budget (deterministic "
+                         "capacity sub-benchmark; emits the paged_capacity "
+                         "BENCH section)")
     ap.add_argument("--json", default="BENCH_attention.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
@@ -202,6 +210,7 @@ def main() -> None:
     print(hdr)
     print("-" * len(hdr))
     json_rows = []
+    cap_json = []
     failures = []
     for impl in impls:
         cfg = dataclasses.replace(
@@ -250,6 +259,8 @@ def main() -> None:
                 "stall_steps": stalls,
                 "prefill_tokens": stats.get("prefill_tokens"),
                 "decode_kv_live_max": stats.get("decode_kv_live_max"),
+                "pool_pages": stats.get("pool_pages"),
+                "pool_peak_pages": stats.get("pool_peak_pages"),
                 "wall_s": round(dt, 3),
                 "tokens_per_s": round(toks / dt, 2),
                 "live_kv_flops_per_step": fl,
@@ -258,6 +269,12 @@ def main() -> None:
             })
         if args.check_chunked:
             failures += check_chunked(impl, per_mode)
+        if args.check_paged:
+            cap_rows, cap_fail = check_paged_capacity(
+                cfg, mesh, params, impl=impl, pattern=args.pattern,
+            )
+            cap_json += cap_rows
+            failures += cap_fail
     if args.json:
         # one section per (scenario, pattern): CI's butterfly smoke row and
         # the chunked-scheduler gate both survive in the artifact
@@ -265,12 +282,107 @@ def main() -> None:
             args.json, f"serve_throughput/{args.scenario}/{args.pattern}",
             json_rows,
         )
+        if cap_json:
+            write_bench_json(args.json, "paged_capacity", cap_json)
     if failures:
         for f in failures:
             print(f"CHECK FAILED: {f}", file=sys.stderr)
         raise SystemExit(1)
     if args.check_chunked:
         print("check-chunked: all assertions passed")
+    if args.check_paged:
+        print("check-paged: all assertions passed")
+
+
+def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
+    """The paged-capacity CI gate: long-context mixed requests at a FIXED
+    HBM budget.  The contiguous engine reserves ``cache_len`` rows per slot,
+    so a budget of two slots serves two requests at a time no matter how
+    short their live sets; the paged engine spends the same bytes as a page
+    pool and packs however many requests' live pages fit.  Deterministic
+    assertions: (a) paged generations are token-identical to the contiguous
+    engine, (b) peak resident pages stay strictly below the dense
+    reservation, (c) max concurrent requests reach >= 2x the contiguous
+    slots.  Returns (bench rows, failures)."""
+    page = 128  # the effective kv tile of the default spec
+    cache_len = 8 * page  # 8 virtual tiles per request's worst case
+    contig_batch = 2
+    budget_pages = contig_batch * (cache_len // page)  # the dense reservation
+    chunk = 64
+    rng = np.random.default_rng(7)
+    lens = [(int(rng.integers(3 * page // 2, 2 * page + page // 2)), int(rng.integers(2, 4)))
+            for _ in range(6)]
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32) for ln, _ in lens]
+
+    def mk():
+        return [
+            Request(uid=i, prompt=p, max_new=mn)
+            for i, (p, (_, mn)) in enumerate(zip(prompts, lens))
+        ]
+
+    contig = ServeLoop(
+        cfg, mesh, params, batch=contig_batch, cache_len=cache_len,
+        chunked=True, chunk_size=chunk,
+    )
+    t0 = time.perf_counter()
+    done_c = contig.run(mk())
+    dt_c = time.perf_counter() - t0
+    paged = ServeLoop(
+        cfg, mesh, params, batch=len(prompts), cache_len=cache_len,
+        chunked=True, chunk_size=chunk, paged=True, pool_pages=budget_pages,
+    )
+    assert paged.page == page, (
+        f"capacity gate sized its budget in {page}-token pages but the "
+        f"engine derived {paged.page}-token pages — the dense-reservation "
+        "comparison would be in mismatched units"
+    )
+    t0 = time.perf_counter()
+    done_p = paged.run(mk())
+    dt_p = time.perf_counter() - t0
+
+    failures = []
+    for rc, rp in zip(done_c, done_p):
+        if rc.generated != rp.generated:
+            failures.append(
+                f"{impl}/{pattern}: uid {rc.uid} paged generations diverge "
+                f"from contiguous at the capacity shape"
+            )
+            break
+    peak = paged.stats["pool_peak_pages"]
+    if peak >= budget_pages:
+        failures.append(
+            f"{impl}/{pattern}: peak resident pages {peak} >= dense "
+            f"reservation {budget_pages} — paging saved nothing"
+        )
+    conc = paged.stats["max_concurrent"]
+    if conc < 2 * contig_batch:
+        failures.append(
+            f"{impl}/{pattern}: {conc} concurrent long-context requests < "
+            f"2x the contiguous engine's {contig_batch} at the same "
+            f"{budget_pages}-page HBM budget"
+        )
+    row = {
+        "attn": impl,
+        "pattern": pattern,
+        "cache_len": cache_len,
+        "page_tokens": page,
+        "budget_pages": budget_pages,
+        "contiguous_concurrent": contig_batch,
+        "paged_concurrent": conc,
+        "capacity_x": round(conc / contig_batch, 2),
+        "pool_peak_pages": peak,
+        "page_allocs": paged.stats["page_allocs"],
+        "admission_backpressure": paged.stats["admission_backpressure"],
+        "tokens": sum(len(r.generated) for r in done_p),
+        "wall_s_contiguous": round(dt_c, 3),
+        "wall_s_paged": round(dt_p, 3),
+    }
+    print(
+        f"paged_capacity[{impl}/{pattern}]: {conc}x concurrent vs "
+        f"{contig_batch} contiguous at {budget_pages} pages "
+        f"(peak resident {peak}, {row['capacity_x']}x)"
+    )
+    return [row], failures
 
 
 def check_chunked(impl: str, per_mode: dict) -> list[str]:

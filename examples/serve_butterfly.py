@@ -1,7 +1,9 @@
 """Streaming serving of a butterfly-sparse model: more requests than slots
-flow through BOTH engine modes — the admission-prefill engine (slots admit,
-evict, re-admit mid-stream) and the chunked mixed-step engine (prompts
-stream in chunks while decode rows keep sampling; zero decode stalls) — and
+flow through ALL THREE engine modes — the admission-prefill engine (slots
+admit, evict, re-admit mid-stream), the chunked mixed-step engine (prompts
+stream in chunks while decode rows keep sampling; zero decode stalls), and
+the paged engine (one global page pool, per-request tile-granular page
+tables; capacity priced at live pages instead of batch x cache_len) — and
 must generate identical tokens.
 
     PYTHONPATH=src python examples/serve_butterfly.py
@@ -53,3 +55,15 @@ print(f"chunked engine:   {chunked.stats['mixed_steps']} mixed steps "
       f"({chunked.stats['prefill_tokens']} prompt tokens streamed, "
       f"{chunked.stats['decode_tokens']} decoded), "
       f"{chunked.stats['decode_stall_steps']} decode stalls — token-identical")
+
+paged = ServeLoop(
+    cfg, mesh, params, batch=2, cache_len=32, chunked=True, chunk_size=8,
+    paged=True,
+)
+done_pg = paged.run(requests())
+assert [r.generated for r in done_pg] == [r.generated for r in done], \
+    "page-table indirection changed the tokens"
+print(f"paged engine:     {paged.stats['mixed_steps']} mixed steps, "
+      f"{paged.stats['pool_peak_pages']}/{paged.stats['pool_pages']} peak "
+      f"pages resident ({paged.stats['page_allocs']} allocs) — "
+      f"token-identical across all three engines")

@@ -53,6 +53,11 @@ __all__ = [
     "decode_token_mask",
     "chunk_live_tables",
     "chunk_token_mask",
+    "translate_tables",
+    "page_last_reader",
+    "page_last_reader_union",
+    "page_residency",
+    "page_peak_resident",
 ]
 
 PATTERNS = ("dense", "causal", "window", "butterfly", "strided", "global_window")
@@ -513,6 +518,153 @@ def chunk_live_tables(
         pattern_arg=pattern_arg,
     )
     return _pack_live(live, j, max_live)
+
+
+# --------------------------------------------------------------------------
+# Paged KV cache: virtual-tile -> physical-page translation + page lifetimes
+# --------------------------------------------------------------------------
+
+
+def translate_tables(kv_index, step_live, page_table, n_pages: int):
+    """Compose packed live *virtual* kv-tile tables with a page table.
+
+    ``kv_index`` / ``step_live``: (R, max_live) the packed tables
+    :func:`decode_live_tables` / :func:`chunk_live_tables` /
+    :class:`BlockMap` emit — entries index VIRTUAL kv tiles of a request's
+    logical cache.  ``page_table``: (R, n_vtiles) or (n_vtiles,) int32 mapping
+    virtual tile -> physical page id in a global pool of ``n_pages`` pages;
+    unallocated tiles hold the sentinel ``n_pages``.
+
+    Returns ``(kv_phys, kv_virt, step_live')``: the same packed layout with
+    physical page ids (clamped in-bounds so dead steps still DMA a real page),
+    the untouched virtual ids (the kernels' fine masks index token positions,
+    which are virtual), and liveness ANDed with "the tile is allocated" — a
+    live-but-freed tile can only arise from a retention-schedule bug, and
+    masking it keeps the failure a parity miss instead of reading another
+    request's keys.  The kernel grid shape is unchanged: dead tiles were
+    already absent, translation only redirects the DMA."""
+    import jax.numpy as jnp
+
+    kv_index = jnp.asarray(kv_index, jnp.int32)
+    step_live = jnp.asarray(step_live, jnp.int32)
+    pt = jnp.asarray(page_table, jnp.int32)
+    if pt.ndim == 1:
+        phys = pt[kv_index]
+    else:
+        phys = jnp.take_along_axis(pt, kv_index, axis=1)
+    live = step_live * (phys < n_pages).astype(jnp.int32)
+    return jnp.minimum(phys, n_pages - 1), kv_index, live
+
+
+def page_last_reader(
+    pattern: str,
+    length: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+) -> np.ndarray:
+    """Last query position that can ever read each virtual kv tile of a
+    request whose positions span ``0 .. length-1``.
+
+    Returns (n_tiles,) int64: ``last_reader[j]`` is the sup over the static
+    block map's live rows of the row's last query position — conservative
+    over the traced decode/chunk tables by construction (they are built from
+    the same per-q-tile liveness, only further restricted by written/window
+    frontiers).  Once a request's next query position exceeds
+    ``last_reader[j]``, page j is dead forever and its physical page can be
+    freed: this is what makes a butterfly row's resident set shrink to the
+    O(log n) tiles its future rows can touch, where dense-causal retains all
+    of them."""
+    bm = build_block_map(
+        pattern, length, length, q_tile, kv_tile, causal=True, window=window,
+        pattern_arg=pattern_arg,
+    )
+    nq, nk = bm.live.shape
+    row_end = np.minimum((np.arange(nq) + 1) * q_tile - 1, length - 1)
+    last = np.full(nk, -1, np.int64)
+    for j in range(nk):
+        readers = np.nonzero(bm.live[:, j])[0]
+        if len(readers):
+            last[j] = row_end[readers[-1]]
+    # a written tile is always read at least by its own positions' rows (the
+    # forced diagonal); a -1 here would free a page while it is still the
+    # write frontier, so clamp to the tile's own last position
+    own_end = np.minimum((np.arange(nk) + 1) * kv_tile - 1, length - 1)
+    return np.maximum(last, own_end)
+
+
+def page_last_reader_union(
+    patterns,
+    length: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    pattern_arg: int | None = None,
+) -> np.ndarray:
+    """Elementwise-max :func:`page_last_reader` over a set of pattern names
+    (``causal``/``window`` aliases canonicalised).  One page table serves
+    every layer of a stack, so a request's retention is the union of its
+    slots' patterns — the serve engine's admission reservation and the
+    dry-run's capacity pricing both build on THIS schedule, from one
+    definition."""
+    nt = -(-length // kv_tile)
+    last = np.zeros(nt, np.int64)
+    for p in patterns:
+        pat, arg, _, win = canonical_pattern(p, pattern_arg, True, None)
+        last = np.maximum(
+            last,
+            page_last_reader(
+                pat, length, q_tile, kv_tile, window=win, pattern_arg=arg
+            ),
+        )
+    return last
+
+
+def page_residency(
+    last_reader: np.ndarray,
+    length: int,
+    kv_tile: int,
+    step_span: int = 1,
+) -> np.ndarray:
+    """Resident page count at every frontier position, given the per-tile
+    last-reader schedule.  A tile is resident from its first write (position
+    ``j * kv_tile``) until the next query position passes ``last_reader[j]``.
+    The engine advances in steps of up to ``step_span`` query positions and
+    only frees *after* a step, so each tile's interval widens by
+    ``step_span - 1`` on the left.  This one curve is shared by the serve
+    engine's admission reservation (its suffix max is the remaining-peak
+    commitment that makes ``PagePool.alloc`` infallible) and by the
+    dry-run/benchmark accounting — the invariant math has exactly one home."""
+    diff = np.zeros(length + 1, np.int64)
+    for j in range(len(last_reader)):
+        lo = max(j * kv_tile - (max(step_span, 1) - 1), 0)
+        diff[lo] += 1
+        diff[min(int(last_reader[j]), length - 1) + 1] -= 1
+    return np.cumsum(diff)[:length]
+
+
+def page_peak_resident(
+    pattern: str,
+    length: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    window: int | None = None,
+    pattern_arg: int | None = None,
+    step_span: int = 1,
+) -> int:
+    """Worst-case simultaneously-resident page count over a request's whole
+    lifetime (the max of :func:`page_residency` over the
+    :func:`page_last_reader` schedule) — the sound admission reservation for
+    the paged serve engine, and the per-request page price the dry-run's
+    ``kv_cache`` record reports."""
+    last = page_last_reader(
+        pattern, length, q_tile, kv_tile, window=window, pattern_arg=pattern_arg
+    )
+    res = page_residency(last, length, kv_tile, step_span)
+    return int(res.max()) if length else 0
 
 
 def chunk_token_mask(

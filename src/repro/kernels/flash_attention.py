@@ -50,7 +50,15 @@ from jax.experimental import pallas as pl
 
 from repro.core.sparsity import _decode_live_jnp, pick_pattern_tiles
 
-__all__ = ["mha_prefill", "mha_chunk", "mha_decode", "pick_tiles", "NEG_INF"]
+__all__ = [
+    "mha_prefill",
+    "mha_chunk",
+    "mha_decode",
+    "mha_chunk_paged",
+    "mha_decode_paged",
+    "pick_tiles",
+    "NEG_INF",
+]
 
 NEG_INF = -1e30  # finite stand-in: exp(NEG_INF - m) underflows but never NaNs
 _LANES = 128  # running-stat scratch is lane-replicated for TPU tiling
@@ -65,14 +73,16 @@ def pick_tiles(s_q: int, s_kv: int, q_tile: int, kv_tile: int) -> tuple[int, int
 
 
 def _prefill_kernel(
-    kvi_ref, lv_ref, q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
+    kvi_ref, lv_ref, vt_ref, q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
     *, scale: float, causal: bool, window: int | None, s_q: int, s_kv: int,
     q_tile: int, kv_tile: int,
 ):
     i = pl.program_id(2)
     jj = pl.program_id(3)
     nj = pl.num_programs(3)
-    j = kvi_ref[i, jj]  # the actual kv-tile index this grid step streams
+    # vt is the VIRTUAL kv-tile (token positions); kvi drives the DMA and is
+    # either the same tile (contiguous cache) or its physical page (paged)
+    j = vt_ref[i, jj]
 
     @pl.when(jj == 0)
     def _init():
@@ -142,6 +152,7 @@ def mha_prefill(
     q_tile: int,
     kv_tile: int,
     interpret: bool = False,
+    kv_virt: jax.Array | None = None,
 ) -> jax.Array:
     """q: (BK, G, Sq_pad, D) -> y same shape; k, v: (BK, Skv_pad, D).
 
@@ -149,7 +160,14 @@ def mha_prefill(
     kv-tile map (:class:`repro.core.sparsity.BlockMap`) — the kv grid axis
     iterates the table, not the full tile range.  ``s_q`` / ``s_kv`` are the
     true (pre-padding) lengths; padded key columns are masked inside the
-    kernel, padded query rows are sliced off by the ops wrapper."""
+    kernel, padded query rows are sliced off by the ops wrapper.
+
+    ``kv_virt`` (same shape as ``kv_index``) splits the table in two for a
+    *paged* cache: ``kv_index`` then holds PHYSICAL page ids into a shared
+    pool (``k``/``v`` are the pool, one page per kv tile) while ``kv_virt``
+    holds the virtual tile the fine position mask is computed from
+    (:func:`repro.core.sparsity.translate_tables`).  Defaults to
+    ``kv_index`` — the contiguous identity mapping."""
     from jax.experimental.pallas import tpu as pltpu
 
     bk, g, sq_pad, d = q.shape
@@ -159,18 +177,20 @@ def mha_prefill(
     nq, max_live = kv_index.shape
     if nq != sq_pad // q_tile:
         raise ValueError(f"kv_index rows {nq} vs q tiles {sq_pad // q_tile}")
+    if kv_virt is None:
+        kv_virt = kv_index
 
     grid = (bk, g, nq, max_live)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # kv_index, step_live drive the DMA indexing
+        num_scalar_prefetch=3,  # kv_index, step_live, kv_virt drive the DMA
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv: (b, g, i, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv: (b, kvi[i, jj], 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv: (b, kvi[i, jj], 0)),
+            pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, g, i, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj], 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj], 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv: (b, g, i, 0)
+            (1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, g, i, 0)
         ),
         scratch_shapes=[
             pltpu.VMEM((q_tile, _LANES), jnp.float32),
@@ -186,7 +206,10 @@ def mha_prefill(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(kv_index.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v)
+    )(
+        kv_index.astype(jnp.int32), step_live.astype(jnp.int32),
+        kv_virt.astype(jnp.int32), q, k, v,
+    )
 
 
 def _chunk_kernel(
@@ -432,3 +455,273 @@ def mha_decode(
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(kv_index.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v, bias)
+
+
+# --------------------------------------------------------------------------
+# Paged grids: the kv tables hold PHYSICAL page ids into a batch-shared pool
+# --------------------------------------------------------------------------
+
+
+def _decode_kernel_paged(
+    cl_ref, kvi_ref, vt_ref, lv_ref, q_ref, k_ref, v_ref, y_ref,
+    m_ref, l_ref, acc_ref, *, scale: float, window: int | None, kv_tile: int,
+):
+    b = pl.program_id(0)
+    jj = pl.program_id(2)
+    nj = pl.num_programs(2)
+    jv = vt_ref[b, jj]  # virtual tile: token positions for the fine mask
+    cl = cl_ref[b]  # the row's live cache length (pos + 1)
+
+    @pl.when(jj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(lv_ref[b, jj] > 0)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (gp, d)
+        k = k_ref[0].astype(jnp.float32)  # (tk, d) — one physical page
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (gp, tk)
+        # fine mask from VIRTUAL positions: the page holds virtual tile jv,
+        # so its t-th row is absolute position jv*kv_tile + t
+        kpos = jv * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < cl
+        if window is not None:
+            valid &= kpos > cl - 1 - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        p = jnp.where(valid, jnp.exp(s - m_new[:, :1]), 0.0)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jj == nj - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        y_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "kv_tile", "interpret")
+)
+def mha_decode_paged(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cur_len: jax.Array,
+    kv_index: jax.Array,
+    kv_virt: jax.Array,
+    step_live: jax.Array,
+    *,
+    scale: float,
+    window: int | None,
+    kv_tile: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode over a PAGED cache: q (B, KV, Gp, D); k, v are the global
+    page pool laid out (KV, n_pages * kv_tile, D) — no batch axis, every row
+    reads the pool through its own table.  ``kv_index`` (B, max_live) holds
+    physical page ids (the DMA target), ``kv_virt`` the matching virtual kv
+    tiles (the fine mask's position base), ``step_live`` the packed liveness
+    (:func:`repro.core.sparsity.translate_tables`).  ``cur_len`` (B,) is each
+    row's live length in virtual token space; the grid never visits a dead or
+    unallocated tile.  Returns (B, KV, Gp, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, kvh, gp, d = q.shape
+    pool_rows = k.shape[1]
+    if pool_rows % kv_tile:
+        raise ValueError(f"pool rows {pool_rows} vs kv tile {kv_tile}")
+    if kv_index.shape[0] != b or kv_virt.shape != kv_index.shape:
+        raise ValueError(
+            f"tables {kv_index.shape}/{kv_virt.shape} vs batch {b}"
+        )
+    max_live = kv_index.shape[1]
+
+    grid = (b, kvh, max_live)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # cur_len, kv_index, kv_virt, step_live
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, d), lambda b, h, jj, cl, kvi, vt, lv: (b, h, 0, 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj], 0)),
+            pl.BlockSpec((1, kv_tile, d), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, gp, d), lambda b, h, jj, cl, kvi, vt, lv: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((gp, _LANES), jnp.float32),
+            pltpu.VMEM((gp, _LANES), jnp.float32),
+            pltpu.VMEM((gp, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel_paged, scale=scale, window=window, kv_tile=kv_tile
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(
+        cur_len.astype(jnp.int32), kv_index.astype(jnp.int32),
+        kv_virt.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v,
+    )
+
+
+def _chunk_kernel_paged(
+    start_ref, kvi_ref, vt_ref, lv_ref, q_ref, k_ref, v_ref, y_ref,
+    m_ref, l_ref, acc_ref, *, scale: float, window: int | None, s_kv: int,
+    q_tile: int, kv_tile: int, n_kv_tiles: int, pattern: str,
+    pattern_arg: int | None,
+):
+    b = pl.program_id(0)
+    jj = pl.program_id(3)
+    nj = pl.num_programs(3)
+    jv = vt_ref[b, jj]  # virtual tile (positions); DMA used the physical id
+    start = start_ref[b]
+
+    @pl.when(jj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(lv_ref[b, jj] > 0)
+    def _step():
+        q = q_ref[0, 0, 0].astype(jnp.float32) * scale  # (cp, d)
+        k = k_ref[0].astype(jnp.float32)  # (tk, d) — one physical page
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (cp, tk)
+
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = jv * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < s_kv) & (qpos >= kpos)
+        if window is not None:
+            mask &= kpos > qpos - window
+        if pattern != "dense":
+            mask &= _decode_live_jnp(
+                pattern, qpos // q_tile, jv, n_kv_tiles, q_tile, kv_tile,
+                window, pattern_arg,
+            )
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        p = jnp.where(mask, jnp.exp(s - m_new[:, :1]), 0.0)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jj == nj - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        y_ref[0, 0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "window", "s_kv", "q_tile", "kv_tile", "pattern",
+        "pattern_arg", "interpret",
+    ),
+)
+def mha_chunk_paged(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    start: jax.Array,
+    kv_index: jax.Array,
+    kv_virt: jax.Array,
+    step_live: jax.Array,
+    *,
+    scale: float,
+    window: int | None,
+    s_kv: int,
+    q_tile: int,
+    kv_tile: int,
+    pattern: str = "dense",
+    pattern_arg: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Mixed chunked-prefill attention over a PAGED shared KV cache.
+
+    q: (B, KV, G, C_pad, D); k, v: the global page pool (KV, n_pages *
+    kv_tile, D).  ``kv_index`` (B, max_live) physical page ids, ``kv_virt``
+    the matching virtual kv tiles, ``step_live`` packed liveness — the
+    translated form of :func:`repro.core.sparsity.chunk_live_tables`.
+    ``s_kv`` is the VIRTUAL cache length (fine masks index virtual token
+    positions; the per-query pattern gate runs on virtual tiles).  Same grid
+    semantics as :func:`mha_chunk` with the batch and kv-head axes split so
+    the pool needs no per-row copy.  Returns (B, KV, G, C_pad, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, kvh, g, cp, d = q.shape
+    pool_rows = k.shape[1]
+    if pool_rows % kv_tile:
+        raise ValueError(f"pool rows {pool_rows} vs kv tile {kv_tile}")
+    if kv_index.shape[0] != b or start.shape[0] != b:
+        raise ValueError(
+            f"table rows {kv_index.shape[0]} / start rows {start.shape[0]} vs B {b}"
+        )
+    max_live = kv_index.shape[1]
+
+    grid = (b, kvh, g, max_live)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # start, kv_index, kv_virt, step_live
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, cp, d),
+                lambda b, h, gg, jj, st, kvi, vt, lv: (b, h, gg, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, kv_tile, d),
+                lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj], 0),
+            ),
+            pl.BlockSpec(
+                (1, kv_tile, d),
+                lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj], 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, cp, d), lambda b, h, gg, jj, st, kvi, vt, lv: (b, h, gg, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((cp, _LANES), jnp.float32),
+            pltpu.VMEM((cp, _LANES), jnp.float32),
+            pltpu.VMEM((cp, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _chunk_kernel_paged, scale=scale, window=window, s_kv=s_kv,
+            q_tile=q_tile, kv_tile=kv_tile,
+            n_kv_tiles=-(-s_kv // kv_tile), pattern=pattern,
+            pattern_arg=pattern_arg,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(
+        start.astype(jnp.int32), kv_index.astype(jnp.int32),
+        kv_virt.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v,
+    )

@@ -26,6 +26,9 @@ __all__ = [
     "flash_attention",
     "flash_chunk",
     "flash_decode",
+    "flash_paged_prefill",
+    "flash_paged_chunk",
+    "flash_paged_decode",
 ]
 
 
@@ -387,6 +390,189 @@ def flash_decode(
         scale=1.0 / math.sqrt(hd), kv_tile=tk, interpret=_interpret(),
     )
     return y.reshape(b, kvh, gp, d)[:, :, :g, :hd].reshape(b, h, hd)
+
+
+# --------------------------------------------------------------------------
+# Paged cache forms: the kernels stream a batch-shared page pool through the
+# translated (physical-page) live tables — same grids, redirected DMA
+# --------------------------------------------------------------------------
+
+
+def _pool_layout(k_pool: jax.Array, v_pool: jax.Array, page: int):
+    """(P*page, KV, hd) pool -> kernel layout (KV, P*page, D_pad) + counts."""
+    rows, kvh, hd = k_pool.shape
+    if rows % page:
+        raise ValueError(f"pool rows {rows} not a page multiple ({page})")
+    d = _round_up(hd, _LANES)
+    kt = jnp.swapaxes(k_pool, 0, 1)
+    vt = jnp.swapaxes(v_pool, 0, 1)
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, d - hd)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, d - hd)))
+    return kt, vt, rows // page, d
+
+
+def _virtual_extent(page_table: jax.Array, page: int, kv_live: int | None) -> int:
+    """Static virtual cache length the tables cover: the page table's full
+    span, truncated to the engine's bucketed ``kv_live`` bound (rounded up to
+    a whole page — tables are tile-granular)."""
+    vl = page_table.shape[-1] * page
+    if kv_live is not None:
+        vl = min(vl, _round_up(max(int(kv_live), 1), page))
+    return vl
+
+
+def flash_paged_prefill(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    *,
+    page: int,
+    spec: AttentionSpec | None = None,
+) -> jax.Array:
+    """Fused prefill attention reading prompt KV back through the page pool.
+
+    q: (1, S, H, hd) — one admitted request's (bucketed) prompt, positions
+    0..S-1; ``k_pool`` / ``v_pool``: (n_pages * page, KV, hd) the global
+    pool, already holding this prompt's KV (the model layer scatters before
+    attention); ``page_table``: (n_vtiles,) this request's virtual-tile ->
+    physical-page map.  The static block map over the prompt translates to
+    physical page ids, so the prefill grid streams pool pages directly —
+    batch-1 because the table is shared across grid rows, which is exactly
+    the admission engine's shape."""
+    spec = spec or AttentionSpec(impl="flash_kernel")
+    pattern, arg, causal, window = canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    b, s, h, hd = q.shape
+    if b != 1:
+        raise ValueError(
+            f"paged prefill is batch-1 (shared block map), got batch {b}"
+        )
+    kvh = k_pool.shape[1]
+    g = h // kvh
+    kt, vt, n_pages, d = _pool_layout(k_pool, v_pool, page)
+    tq, _ = fa.pick_tiles(s, s, spec.q_tile, spec.kv_tile)
+    sq_pad = _round_up(s, tq)
+
+    bm = sparsity.build_block_map(
+        pattern, s, s, tq, page, causal=causal, window=window, pattern_arg=arg
+    )
+    kv_phys, kv_virt, step_live = sparsity.translate_tables(
+        jnp.asarray(bm.kv_index), jnp.asarray(bm.step_live),
+        jnp.asarray(page_table, jnp.int32).reshape(-1), n_pages,
+    )
+
+    qt = q.reshape(1, s, kvh, g, hd).transpose(0, 2, 3, 1, 4).reshape(kvh, g, s, hd)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - s), (0, d - hd)))
+
+    y = fa.mha_prefill(
+        qt, kt, vt, kv_phys, step_live,
+        scale=1.0 / math.sqrt(hd), causal=causal, window=window,
+        s_q=s, s_kv=s, q_tile=tq, kv_tile=page, interpret=_interpret(),
+        kv_virt=kv_virt,
+    )
+    y = y[:, :, :s, :hd].reshape(1, kvh, g, s, hd)
+    return y.transpose(0, 3, 1, 2, 4).reshape(1, s, h, hd)
+
+
+def flash_paged_chunk(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    start: jax.Array,
+    ntok: jax.Array,
+    page_table: jax.Array,
+    *,
+    page: int,
+    spec: AttentionSpec | None = None,
+    kv_live: int | None = None,
+) -> jax.Array:
+    """Paged form of :func:`flash_chunk`: q (B, C, H, hd) mixed rows over the
+    shared pool (n_pages * page, KV, hd), each row reading through its own
+    ``page_table`` row (B, n_vtiles).  The per-row chunk tables are built in
+    VIRTUAL tile space (identical liveness to the contiguous engine) and
+    translated to physical pages — the kernel grid never visits a dead or
+    unallocated tile, and ``kv_live`` buckets the virtual extent exactly as
+    the contiguous path buckets its cache truncation."""
+    spec = spec or AttentionSpec(impl="flash_kernel")
+    pattern, arg, _, window = canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    b, c, h, hd = q.shape
+    kvh = k_pool.shape[1]
+    g = h // kvh
+    kt, vt, n_pages, d = _pool_layout(k_pool, v_pool, page)
+    skv = _virtual_extent(page_table, page, kv_live)
+    cp = _round_up(c, 8)
+
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    kv_index, step_live = sparsity.chunk_live_tables(
+        pattern, start, ntok, c, skv, spec.q_tile, page,
+        window=window, pattern_arg=arg,
+    )
+    kv_phys, kv_virt, step_live = sparsity.translate_tables(
+        kv_index, step_live, page_table, n_pages
+    )
+
+    qt = q.reshape(b, c, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, cp - c), (0, d - hd)))
+
+    y = fa.mha_chunk_paged(
+        qt, kt, vt, start, kv_phys, kv_virt, step_live,
+        scale=1.0 / math.sqrt(hd), window=window, s_kv=skv,
+        q_tile=spec.q_tile, kv_tile=page, pattern=pattern, pattern_arg=arg,
+        interpret=_interpret(),
+    )
+    y = y[:, :, :, :c, :hd]
+    return y.transpose(0, 3, 1, 2, 4).reshape(b, c, h, hd)
+
+
+def flash_paged_decode(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    cur_len: jax.Array,
+    page_table: jax.Array,
+    *,
+    page: int,
+    spec: AttentionSpec | None = None,
+    kv_live: int | None = None,
+) -> jax.Array:
+    """Paged form of :func:`flash_decode`: q (B, H, hd) over the shared pool.
+
+    Each row's per-position live-tile table (the same
+    :func:`repro.core.sparsity.decode_live_tables` the contiguous kernel
+    prefetches) is translated to physical page ids; the fine mask runs on
+    the virtual positions, so a freed or never-allocated tile is simply
+    absent and the softmax matches the contiguous engine bit-for-bit."""
+    spec = spec or AttentionSpec(impl="flash_kernel")
+    pattern, arg, _, window = canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    b, h, hd = q.shape
+    kvh = k_pool.shape[1]
+    g = h // kvh
+    kt, vt, n_pages, d = _pool_layout(k_pool, v_pool, page)
+    skv = _virtual_extent(page_table, page, kv_live)
+    gp = _round_up(g, 8)
+
+    cl_rows = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
+    kv_index, step_live = sparsity.decode_live_tables(
+        pattern, cl_rows, skv, spec.q_tile, page, window=window, pattern_arg=arg
+    )
+    kv_phys, kv_virt, step_live = sparsity.translate_tables(
+        kv_index, step_live, page_table, n_pages
+    )
+
+    qt = jnp.pad(q.reshape(b, kvh, g, hd), ((0, 0), (0, 0), (0, gp - g), (0, d - hd)))
+
+    y = fa.mha_decode_paged(
+        qt, kt, vt, cl_rows, kv_phys, kv_virt, step_live,
+        scale=1.0 / math.sqrt(hd), window=window, kv_tile=page,
+        interpret=_interpret(),
+    )
+    return y[:, :, :g, :hd].reshape(b, h, hd)
 
 
 def fnet_mixing_kernel(x: jax.Array, max_radix: int = sd.MAX_RADIX_COMPLEX) -> jax.Array:

@@ -166,6 +166,71 @@ def _attention_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
     return out
 
 
+def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
+    """KV-cache HBM accounting for serving shapes, priced both ways.
+
+    ``dense_reserved_bytes`` is the contiguous engine's cost: every slot
+    reserves ``cache_len`` rows regardless of pattern — capacity is priced at
+    worst-case dense length.  ``paged_resident_bytes`` prices the paged
+    engine: per request, the PEAK simultaneously-live page count under the
+    pattern's retention schedule (:func:`repro.core.sparsity.
+    page_peak_resident` — the admission reservation), times the page size.
+    ``paged_live_read_bytes`` is the steady-state *read* set (block-map
+    density x pages — what one decode step actually streams).  The ratio of
+    the first two is the concurrent-request capacity win at a fixed HBM
+    budget (the serve_throughput ``paged_capacity`` gate measures it live).
+
+    One page table serves every layer, so retention is the UNION of the
+    per-slot patterns' last-reader schedules (``Slot.attn_pattern``
+    overrides included) — exactly what ``ServeLoop._paged_schedule``
+    reserves: a hybrid stack with one dense-causal slot prices at dense
+    retention, not at the sparse slots' optimism."""
+    import math
+
+    from repro.core import sparsity
+
+    n_attn = sum(1 for s in cfg.period_slots if s.mixer == "attn") * cfg.n_periods
+    if not n_attn or not cfg.n_kv_heads or shape.kind not in ("decode", "prefill"):
+        return None
+    if cfg.sliding_window or cfg.family == "encdec":
+        return None  # ring / cross caches keep the contiguous layout
+    spec = cfg.attention_spec
+    pattern, arg, _, win = sparsity.canonical_pattern(
+        spec.pattern, spec.pattern_arg, True, None
+    )
+    s = shape.seq
+    page = sparsity.pick_pattern_tiles(1, s, spec.q_tile, spec.kv_tile)[1]
+    n_tiles = -(-s // page)
+    pats = {
+        sl.attn_pattern or spec.pattern
+        for sl in cfg.period_slots
+        if sl.mixer == "attn"
+    }
+    last = sparsity.page_last_reader_union(
+        pats, s, spec.q_tile, page, pattern_arg=spec.pattern_arg
+    )
+    peak_pages = int(sparsity.page_residency(last, s, page).max())
+    density = sparsity.pattern_kv_density(
+        pattern, s, s, spec.q_tile, page, causal=True, window=win,
+        pattern_arg=arg,
+    ) if pattern != "dense" or win is not None else 1.0
+    row_bytes = 2 * cfg.n_kv_heads * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize
+    per_layer_dense = shape.batch * s * row_bytes
+    per_layer_paged = shape.batch * peak_pages * page * row_bytes
+    live_read = shape.batch * max(math.ceil(density * n_tiles), 1) * page * row_bytes
+    return {
+        "pattern": pattern,
+        "retention_patterns": sorted(pats),
+        "page_tokens": page,
+        "n_tiles": n_tiles,
+        "peak_resident_pages": peak_pages,
+        "dense_reserved_bytes": float(n_attn * per_layer_dense),
+        "paged_resident_bytes": float(n_attn * per_layer_paged),
+        "paged_live_read_bytes": float(n_attn * live_read),
+        "capacity_ratio": float(per_layer_dense / max(per_layer_paged, 1)),
+    }
+
+
 def run_cell(
     arch: str,
     shape_name: str,
@@ -236,6 +301,7 @@ def run_cell(
             ) / chips
             rl = dataclasses.replace(rl, hbm_bytes=max(rl.hbm_bytes + delta, 0.0))
         rec["attention_stage_fwd"] = stage
+        rec["kv_cache"] = _kv_cache_stage(cfg, shape)
         rec.update(
             status="ok",
             t_lower_s=round(t_lower, 1),
@@ -320,12 +386,19 @@ def _summ0(rec: dict) -> str:
 def _summ(rec: dict) -> str:
     r = rec["roofline"]
     m = rec["memory"]
+    kv = rec.get("kv_cache")
+    kv_s = (
+        f" kv_cap={kv['capacity_ratio']:.1f}x"
+        f"({kv['peak_resident_pages']}/{kv['n_tiles']}pg)"
+        if kv else ""
+    )
     return (
         f"[ok] {rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} "
         f"compile={rec['t_compile_s']:.0f}s mem/dev={m['peak_est_bytes']/2**30:.2f}GiB "
         f"t_comp={r['t_compute']*1e3:.2f}ms t_mem={r['t_memory']*1e3:.2f}ms "
         f"t_coll={r['t_collective']*1e3:.2f}ms dom={r['dominant']} "
         f"useful={r['useful_ratio']:.2f} roofline={r['roofline_fraction']:.2%}"
+        f"{kv_s}"
     )
 
 

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import sparsity
 from repro.core.attention import override_attention
 from repro.distributed import sharding as shd
 from repro.models import model as M
@@ -47,8 +48,10 @@ __all__ = [
     "make_serve_fns",
     "make_mixed_fn",
     "make_slot_chunk_fn",
+    "make_paged_fns",
     "cache_shardings",
     "abstract_cache",
+    "PagePool",
     "Request",
     "ServeLoop",
 ]
@@ -264,6 +267,166 @@ def make_slot_chunk_fn(
     return chunk_fn
 
 
+def make_paged_fns(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    n_pages: int,
+    page: int,
+    chunk: int,
+    attn_impl: str | None = None,
+    attn_pattern: str | None = None,
+):
+    """Compiled entry points of the PAGED serve engine: ``(prefill, decode,
+    chunk_fn)`` over one global page pool instead of per-slot ``cache_len``
+    reservations.
+
+    * ``prefill(params, caches, b, lengths, pt_row)`` — batch-1 admission
+      prefill scattered through the request's page-table row (retraces per
+      prompt bucket, like the ragged contiguous prefill).
+    * ``decode(params, caches, tokens (B,1), pos (B,), pt (B,nv), kv_live)``
+      — the ragged decode wave; every row reads the pool through its own
+      page-table row, bucketed per ``kv_live``.
+    * ``chunk_fn(params, caches, tokens (1,C), pt_row (1,nv), pos, ntok,
+      kv_live)`` — one prompt chunk streamed straight into the pool.  No
+      slot slice/insert dance: the pool is already shared, the page table IS
+      the slot.
+
+    All three donate the pools; the page tables are tiny replicated int32
+    arrays refreshed from host state every call."""
+    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
+    rt = M.resolve_runtime(cfg, mesh)
+    p_shard = shd.sharding_tree(M.build_specs(cfg), mesh, M.rules_for(cfg))
+    pool_shard = shd.sharding_tree(
+        tf.paged_pool_specs(cfg, n_pages, page), mesh, M.rules_for(cfg)
+    )
+    tok_shard = NamedSharding(
+        mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+    )
+    rep = NamedSharding(mesh, P())
+
+    prefill = jax.jit(
+        lambda params, caches, b, lengths, pt: tf.paged_prefill(
+            params, cfg, b, rt, caches=caches, page_table=pt, page=page,
+            lengths=lengths,
+        ),
+        in_shardings=(p_shard, pool_shard, None, rep, rep),
+        out_shardings=(tok_shard, pool_shard),
+        donate_argnums=(1,),
+    )
+
+    dec_jit: dict[int | None, object] = {}
+
+    def decode(params, caches, tokens, pos, pt, kv_live: int | None = None):
+        fn = dec_jit.get(kv_live)
+        if fn is None:
+            fn = jax.jit(
+                lambda params, caches, tokens, pos, pt: tf.decode_step(
+                    params, cfg, caches, tokens, pos, rt, kv_live=kv_live,
+                    page_table=pt, page=page,
+                ),
+                in_shardings=(p_shard, pool_shard, tok_shard, rep, rep),
+                out_shardings=(tok_shard, pool_shard),
+                donate_argnums=(1,),
+            )
+            dec_jit[kv_live] = fn
+        return fn(params, caches, tokens, pos, pt)
+
+    chk_jit: dict[int | None, object] = {}
+
+    def chunk_fn(params, caches, tokens, pt, pos, ntok,
+                 kv_live: int | None = None):
+        if tokens.shape != (1, chunk):
+            raise ValueError(
+                f"tokens {tokens.shape} vs compiled chunk shape {(1, chunk)}"
+            )
+        fn = chk_jit.get(kv_live)
+        if fn is None:
+            def _step(params, caches, tokens, pt, pos, ntok):
+                logits, caches = tf.mixed_step(
+                    params, cfg, caches, tokens, jnp.reshape(pos, (1,)),
+                    jnp.reshape(ntok, (1,)), rt, kv_live=kv_live,
+                    page_table=pt, page=page,
+                )
+                return logits[0], caches
+
+            fn = jax.jit(
+                _step,
+                in_shardings=(p_shard, pool_shard, rep, rep, rep, rep),
+                out_shardings=(rep, pool_shard),
+                donate_argnums=(1,),
+            )
+            chk_jit[kv_live] = fn
+        return fn(params, caches, tokens, pt, pos, ntok)
+
+    return prefill, decode, chunk_fn
+
+
+class PagePool:
+    """Host-side free-list allocator over the global KV page pool.
+
+    Pages are unit-granular (one kv tile each), so there is no external
+    fragmentation by construction: ``alloc`` succeeds whenever ``in_use <
+    n_pages`` — the fragmentation bound the tests pin down.  The engine
+    layers a *reservation* discipline on top (each active request commits its
+    worst-case future residency, :func:`repro.core.sparsity.
+    page_peak_resident`), which makes ``alloc`` infallible at every reachable
+    state and turns pool exhaustion into admission backpressure instead of a
+    mid-stream deadlock."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"pool needs >= 1 page, got {n_pages}")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))
+        self._held = [False] * n_pages
+        self.in_use = 0
+        self.peak_in_use = 0
+        self.alloc_count = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                "page pool exhausted — the reservation invariant was broken "
+                "(engine bug), admission should have backpressured"
+            )
+        pid = self._free.pop()
+        self._held[pid] = True
+        self.in_use += 1
+        self.alloc_count += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pid
+
+    def release(self, pid: int) -> None:
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        if not self._held[pid]:
+            # a double free would put the page on the free list twice and
+            # later hand it to two requests — silent cross-request KV
+            # corruption; fail loudly at the bug site instead
+            raise ValueError(f"page id {pid} is not allocated (double free?)")
+        self._held[pid] = False
+        self._free.append(pid)
+        self.in_use -= 1
+
+
+@dataclasses.dataclass
+class _PagedSlot:
+    """Host bookkeeping for one active request's pages: the retention
+    schedule (from the block maps) plus its allocated tiles."""
+
+    last_reader: np.ndarray  # (n_tiles,) last query position reading tile j
+    peak_from: np.ndarray  # (L,) max future residency from frontier p
+    length: int  # written-position horizon: plen + max_new - 1
+
+    def remaining_peak(self, pos: int) -> int:
+        return int(self.peak_from[min(pos, self.length - 1)])
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -363,7 +526,8 @@ class ServeLoop:
         batch: int, cache_len: int, attn_impl: str | None = None,
         attn_pattern: str | None = None, static_batching: bool = False,
         chunked: bool = False, chunk_size: int = 32,
-        chunk_budget: int | None = None,
+        chunk_budget: int | None = None, paged: bool = False,
+        page: int | None = None, pool_pages: int | None = None,
     ):
         cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
         if cfg.sliding_window and cache_len < cfg.sliding_window:
@@ -401,12 +565,53 @@ class ServeLoop:
                     f"chunk_budget must be >= 1, got {chunk_budget} — a "
                     "zero budget would starve prefill rows forever"
                 )
+        if paged:
+            if static_batching:
+                raise ValueError("paged and static_batching are exclusive")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "paged caches index absolute positions; sliding-window "
+                    "ring caches keep the contiguous admission path"
+                )
+            if cfg.family == "encdec" or cfg.n_img_tokens:
+                raise ValueError(
+                    "paged serving has no encoder/extras path; use the "
+                    "contiguous admission engine"
+                )
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.batch, self.cache_len = batch, cache_len
         self.static_batching = static_batching
         self.chunked = chunked
         self.chunk_size = chunk_size
         self.chunk_budget = chunk_budget if chunk_budget is not None else chunk_size
+        self.paged = paged
+        if paged:
+            spec = cfg.attention_spec
+            # one page == one kv tile of the effective grid, so the packed
+            # live tables ARE the page-table domain (tile-granular paging)
+            self.page = page if page is not None else sparsity.pick_pattern_tiles(
+                1, cache_len, spec.q_tile, spec.kv_tile
+            )[1]
+            if self.page < 1:
+                raise ValueError(f"page must be >= 1 token, got {self.page}")
+            self.n_vtiles = -(-cache_len // self.page)
+            # default pool budget == the dense reservation the contiguous
+            # engine would make (batch x cache_len rows) — benchmarks shrink
+            # it to demonstrate the capacity win
+            self.pool_pages = (
+                pool_pages if pool_pages is not None else batch * self.n_vtiles
+            )
+            if self.pool_pages < 1:
+                raise ValueError(
+                    f"pool_pages must be >= 1, got {self.pool_pages}"
+                )
+            self._sched_cache: dict[tuple[int, int], _PagedSlot] = {}
+            self.p_prefill_fn, self.p_decode_fn, self.p_chunk_fn = make_paged_fns(
+                cfg, mesh, n_pages=self.pool_pages, page=self.page,
+                chunk=chunk_size,
+            )
+            self.stats = {}
+            return
         if chunked:
             # ONE entry point (tf.mixed_step), two ragged shapes: the (B, 1)
             # decode wave advances every decoding row each iteration at the
@@ -485,6 +690,15 @@ class ServeLoop:
                     f"request {r.uid}: prompt+max_new needs {need} cache rows "
                     f"> cache_len {self.cache_len}"
                 )
+            if self.paged:
+                span = self.chunk_size if self.chunked else len(r.prompt)
+                peak = self._paged_schedule(need, span).remaining_peak(0)
+                if peak > self.pool_pages:
+                    raise ValueError(
+                        f"request {r.uid}: needs {peak} resident pages at its "
+                        f"peak > pool of {self.pool_pages} — unservable at "
+                        "this page budget"
+                    )
             r.generated.clear()
 
     # -- engine loops -----------------------------------------------------
@@ -492,9 +706,85 @@ class ServeLoop:
     def run(self, requests: list[Request]) -> list[Request]:
         """Serve every request to completion; returns them in input order."""
         self._validate(requests)
+        if self.paged:
+            if self.chunked:
+                return self._run_paged_chunked(requests)
+            return self._run_paged_admission(requests)
         if self.chunked:
             return self._run_chunked(requests)
         return self._run_admission(requests)
+
+    # -- paged engine: page pool + per-request tile-granular page tables ----
+
+    def _zero_pools(self):
+        specs = tf.paged_pool_specs(self.cfg, self.pool_pages, self.page)
+        dt = jnp.dtype(self.cfg.dtype)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, dt),
+            specs,
+            is_leaf=lambda x: isinstance(x, shd.ParamSpec),
+        )
+
+    def _paged_schedule(self, length: int, step_span: int) -> _PagedSlot:
+        """Retention schedule for one request whose written positions span
+        ``0..length-1``: per-tile last-reader positions (the union over every
+        attention slot's pattern — one page table serves all layers) and the
+        max-future-residency curve that backs the reservation discipline.
+        ``step_span`` is the engine's largest single advance (chunk size, or
+        the whole prompt for a monolithic admission prefill) — tiles
+        allocated mid-step widen residency by that much."""
+        key = (length, step_span)
+        sc = self._sched_cache.get(key)
+        if sc is not None:
+            return sc
+        spec = self.cfg.attention_spec
+        pats = {
+            s.attn_pattern or spec.pattern
+            for s in self.cfg.period_slots
+            if s.mixer == "attn"
+        }
+        last = sparsity.page_last_reader_union(
+            pats, length, spec.q_tile, self.page, pattern_arg=spec.pattern_arg
+        )
+        res = sparsity.page_residency(last, length, self.page, step_span)
+        peak_from = np.maximum.accumulate(res[::-1])[::-1]
+        sc = _PagedSlot(last_reader=last, peak_from=peak_from, length=length)
+        self._sched_cache[key] = sc
+        return sc
+
+    def _committed(self, active, sched, pos) -> int:
+        """Sum of active requests' worst-case future residency — admission
+        reserves against this so `PagePool.alloc` can never fail mid-stream
+        (out-of-pages becomes FIFO backpressure at admission instead)."""
+        return sum(
+            sched[s].remaining_peak(int(pos[s]))
+            for s in range(self.batch)
+            if active[s] is not None
+        )
+
+    def _alloc_tiles(self, pool, pt, slot: int, lo_pos: int, hi_pos: int):
+        """Ensure every virtual tile overlapping positions [lo_pos, hi_pos)
+        is backed by a physical page before the step that writes it."""
+        for t in range(lo_pos // self.page, (hi_pos - 1) // self.page + 1):
+            if pt[slot, t] == self.pool_pages:
+                pt[slot, t] = pool.alloc()
+
+    def _free_dead(self, pool, pt, slot: int, sc: _PagedSlot, frontier: int):
+        """Release pages whose last possible reader is behind the request's
+        next query position — dense-causal never frees until retirement,
+        window frees the out-of-window tail, butterfly frees every tile its
+        remaining O(log n) stride pairs can no longer touch."""
+        nt = len(sc.last_reader)
+        for t in range(nt):
+            if pt[slot, t] != self.pool_pages and sc.last_reader[t] < frontier:
+                pool.release(int(pt[slot, t]))
+                pt[slot, t] = self.pool_pages
+
+    def _free_all(self, pool, pt, slot: int):
+        for t in range(pt.shape[1]):
+            if pt[slot, t] != self.pool_pages:
+                pool.release(int(pt[slot, t]))
+                pt[slot, t] = self.pool_pages
 
     def _run_admission(self, requests: list[Request]) -> list[Request]:
         """Admission-prefill engine: per-slot prefill + cache insert, then
@@ -713,4 +1003,287 @@ class ServeLoop:
                         if remaining[slot] <= 0:
                             active[slot] = None
         fetch.flush()
+        return requests
+
+    def _run_paged_admission(self, requests: list[Request]) -> list[Request]:
+        """Admission-by-pages engine: per-request batch-1 prefill scattered
+        straight into the page pool through the request's page-table row,
+        then ragged paged decode waves.  A free SLOT no longer suffices for
+        admission — the request must also reserve its worst-case resident
+        page count; otherwise it backpressures in FIFO order until decode
+        frees pages.  Resident HBM is the pool, not batch x cache_len."""
+        B = self.batch
+        queue = list(requests)
+        qi = 0
+        active: list[Request | None] = [None] * B
+        sched: list[_PagedSlot | None] = [None] * B
+        pos = np.zeros(B, np.int32)
+        remaining = np.zeros(B, np.int32)
+        nxt = jnp.zeros((B,), jnp.int32)
+        pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
+        pool = PagePool(self.pool_pages)
+        self.pool = pool
+        fetch = _AsyncTokens(lag=1)
+        self.stats = {
+            "prefill_calls": 0, "decode_steps": 0, "admission_stall_steps": 0,
+            "admission_backpressure": 0, "max_concurrent": 0,
+        }
+        clock = 0
+        with self.mesh:
+            caches = self._zero_pools()
+            while qi < len(queue) or any(r is not None for r in active):
+                for slot in range(B):
+                    if qi >= len(queue) or queue[qi].arrival > clock:
+                        break  # FIFO: the head hasn't arrived yet
+                    if active[slot] is not None:
+                        continue
+                    r = queue[qi]
+                    plen = len(r.prompt)
+                    L = plen + r.max_new - 1
+                    sc = self._paged_schedule(L, step_span=plen)
+                    committed = self._committed(active, sched, pos)
+                    if committed + sc.remaining_peak(0) > self.pool_pages:
+                        # out of pages: the head waits for decode to free
+                        # some — backpressure, not an error
+                        self.stats["admission_backpressure"] += 1
+                        break
+                    qi += 1
+                    if any(a is not None for a in active):
+                        self.stats["admission_stall_steps"] += 1
+                    self._alloc_tiles(pool, pt, slot, 0, plen)
+                    bucket = _next_bucket(plen, self.cache_len)
+                    toks = np.zeros((1, bucket), np.int32)
+                    toks[0, :plen] = r.prompt
+                    logits, caches = self.p_prefill_fn(
+                        self.params, caches, {"tokens": jnp.asarray(toks)},
+                        jnp.asarray([plen], jnp.int32),
+                        jnp.asarray(pt[slot : slot + 1]),
+                    )
+                    self.stats["prefill_calls"] += 1
+                    tok = jnp.argmax(logits[0]).astype(jnp.int32)
+                    fetch.push(tok, [(r, 0)])
+                    if r.max_new <= 1:
+                        self._free_all(pool, pt, slot)
+                        continue  # done at prefill; slot and pages free
+                    self._free_dead(pool, pt, slot, sc, plen)
+                    active[slot] = r
+                    sched[slot] = sc
+                    pos[slot] = plen
+                    remaining[slot] = r.max_new - 1
+                    nxt = nxt.at[slot].set(tok)
+                self.stats["max_concurrent"] = max(
+                    self.stats["max_concurrent"],
+                    sum(a is not None for a in active),
+                )
+                if not any(r is not None for r in active):
+                    clock += 1
+                    continue
+                # ragged paged decode wave: allocate each row's write tile,
+                # then every row streams its own live pages through its
+                # page-table row at the bucketed virtual depth
+                for slot in range(B):
+                    if active[slot] is not None:
+                        self._alloc_tiles(
+                            pool, pt, slot, int(pos[slot]), int(pos[slot]) + 1
+                        )
+                hot = max(int(pos[s]) for s in range(B)
+                          if active[s] is not None) + 1
+                kv_live = _next_bucket(hot, self.cache_len)
+                self.stats["decode_kv_live_max"] = max(
+                    self.stats.get("decode_kv_live_max", 0), kv_live
+                )
+                logits, caches = self.p_decode_fn(
+                    self.params, caches, nxt[:, None], jnp.asarray(pos),
+                    jnp.asarray(pt), kv_live,
+                )
+                self.stats["decode_steps"] += 1
+                clock += 1
+                toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                sinks = []
+                for slot in range(B):
+                    r = active[slot]
+                    if r is None:
+                        continue
+                    sinks.append((r, slot))
+                    pos[slot] += 1
+                    remaining[slot] -= 1
+                    if remaining[slot] <= 0:
+                        self._free_all(pool, pt, slot)
+                        active[slot] = None
+                        sched[slot] = None
+                    else:
+                        self._free_dead(
+                            pool, pt, slot, sched[slot], int(pos[slot])
+                        )
+                fetch.push(toks, sinks)
+                nxt = toks
+        fetch.flush()
+        self.stats["pool_pages"] = self.pool_pages
+        self.stats["pool_peak_pages"] = pool.peak_in_use
+        self.stats["page_allocs"] = pool.alloc_count
+        return requests
+
+    def _run_paged_chunked(self, requests: list[Request]) -> list[Request]:
+        """Mixed-step engine over the page pool: the decode wave and the
+        per-row prompt chunks of the chunked scheduler, with cache writes and
+        reads indirected through per-request page tables.  Pages allocate
+        lazily at each row's write frontier and free as soon as the
+        retention schedule says no future query can read them — a butterfly
+        prompt releases most of its tiles WHILE it streams in, which is the
+        capacity win the paged_capacity benchmark measures."""
+        B, C = self.batch, self.chunk_size
+        queue = list(requests)
+        qi = 0
+        active: list[Request | None] = [None] * B
+        sched: list[_PagedSlot | None] = [None] * B
+        pos = np.zeros(B, np.int32)
+        consumed = np.zeros(B, np.int32)
+        remaining = np.zeros(B, np.int32)
+        nxt = jnp.zeros((B,), jnp.int32)
+        pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
+        pool = PagePool(self.pool_pages)
+        self.pool = pool
+        fetch = _AsyncTokens(lag=1)
+        self.stats = {
+            "prefill_calls": 0, "mixed_steps": 0, "chunk_calls": 0,
+            "decode_steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+            "decode_stall_steps": 0, "overlap_steps": 0,
+            "admission_backpressure": 0, "max_concurrent": 0,
+        }
+        clock = 0
+        rr = 0
+        with self.mesh:
+            caches = self._zero_pools()
+            while qi < len(queue) or any(r is not None for r in active):
+                # admission: a free slot AND a page reservation — the page
+                # budget, not the slot count, is the capacity limit
+                for slot in range(B):
+                    if qi >= len(queue) or queue[qi].arrival > clock:
+                        break
+                    if active[slot] is not None:
+                        continue
+                    r = queue[qi]
+                    L = len(r.prompt) + r.max_new - 1
+                    sc = self._paged_schedule(L, step_span=C)
+                    committed = self._committed(active, sched, pos)
+                    if committed + sc.remaining_peak(0) > self.pool_pages:
+                        self.stats["admission_backpressure"] += 1
+                        break
+                    qi += 1
+                    active[slot] = r
+                    sched[slot] = sc
+                    pos[slot] = 0
+                    consumed[slot] = 0
+                    remaining[slot] = r.max_new
+                self.stats["max_concurrent"] = max(
+                    self.stats["max_concurrent"],
+                    sum(a is not None for a in active),
+                )
+                if not any(r is not None for r in active):
+                    clock += 1
+                    continue
+                eligible = [
+                    s for s in range(B)
+                    if active[s] is not None
+                    and len(active[s].prompt) - consumed[s] <= 0
+                ]
+                use_nxt = np.zeros(B, bool)
+                chunk_t = np.zeros(B, np.int32)
+                budget = self.chunk_budget
+                for k in range(B):
+                    slot = (rr + k) % B
+                    r = active[slot]
+                    if r is None:
+                        continue
+                    rem_prompt = len(r.prompt) - consumed[slot]
+                    if rem_prompt > 0:
+                        t = min(C, rem_prompt, budget)
+                        if t <= 0:
+                            continue
+                        chunk_t[slot] = t
+                        budget -= t
+                    else:
+                        use_nxt[slot] = True
+                rr = (rr + 1) % B
+                clock += 1
+                self.stats["mixed_steps"] += 1
+                dec_rows = [s for s in range(B) if use_nxt[s]]
+                chunk_rows = [s for s in range(B) if chunk_t[s] > 0]
+                if any(s not in dec_rows for s in eligible):
+                    self.stats["decode_stall_steps"] += 1
+                if dec_rows and chunk_rows:
+                    self.stats["overlap_steps"] += 1
+                # (a) paged decode wave: every decoding row advances through
+                # the decode grid; non-decoding rows' writes drop on their
+                # sentinel page tables (retired) or are overwritten by their
+                # own next chunk (mid-prompt)
+                if dec_rows:
+                    for slot in dec_rows:
+                        self._alloc_tiles(
+                            pool, pt, slot, int(pos[slot]), int(pos[slot]) + 1
+                        )
+                    hot = max(int(pos[s]) + 1 for s in dec_rows)
+                    kv_live = _next_bucket(hot, self.cache_len)
+                    self.stats["decode_kv_live_max"] = max(
+                        self.stats.get("decode_kv_live_max", 0), kv_live
+                    )
+                    logits, caches = self.p_decode_fn(
+                        self.params, caches, nxt[:, None], jnp.asarray(pos),
+                        jnp.asarray(pt), kv_live,
+                    )
+                    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                    self.stats["decode_steps"] += 1
+                    self.stats["decode_tokens"] += len(dec_rows)
+                    sinks = []
+                    for slot in dec_rows:
+                        r = active[slot]
+                        sinks.append((r, slot))
+                        pos[slot] += 1
+                        remaining[slot] -= 1
+                        if remaining[slot] <= 0:
+                            self._free_all(pool, pt, slot)
+                            active[slot] = None
+                            sched[slot] = None
+                        else:
+                            self._free_dead(
+                                pool, pt, slot, sched[slot], int(pos[slot])
+                            )
+                    fetch.push(toks, sinks)
+                    nxt = jnp.where(jnp.asarray(use_nxt), toks, nxt)
+                # (b) prompt chunks through the paged chunk grid: allocate
+                # the chunk's tiles, stream it into the pool, then free
+                # whatever the pattern says is already dead
+                for slot in chunk_rows:
+                    r = active[slot]
+                    t = int(chunk_t[slot])
+                    self._alloc_tiles(
+                        pool, pt, slot, int(pos[slot]), int(pos[slot]) + t
+                    )
+                    ctoks = np.zeros((1, C), np.int32)
+                    ctoks[0, :t] = r.prompt[consumed[slot] : consumed[slot] + t]
+                    kv_live = _next_bucket(int(pos[slot]) + t, self.cache_len)
+                    logits1, caches = self.p_chunk_fn(
+                        self.params, caches, jnp.asarray(ctoks),
+                        jnp.asarray(pt[slot : slot + 1]),
+                        jnp.int32(pos[slot]), jnp.int32(t), kv_live,
+                    )
+                    self.stats["chunk_calls"] += 1
+                    self.stats["prefill_tokens"] += t
+                    pos[slot] += t
+                    consumed[slot] += t
+                    if consumed[slot] == len(r.prompt):
+                        tok1 = jnp.argmax(logits1).astype(jnp.int32)
+                        fetch.push(tok1, [(r, 0)])
+                        nxt = nxt.at[slot].set(tok1)
+                        remaining[slot] -= 1
+                        if remaining[slot] <= 0:
+                            self._free_all(pool, pt, slot)
+                            active[slot] = None
+                            sched[slot] = None
+                            continue
+                    self._free_dead(pool, pt, slot, sched[slot], int(pos[slot]))
+        fetch.flush()
+        self.stats["pool_pages"] = self.pool_pages
+        self.stats["pool_peak_pages"] = pool.peak_in_use
+        self.stats["page_allocs"] = pool.alloc_count
         return requests

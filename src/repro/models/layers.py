@@ -42,6 +42,10 @@ __all__ = [
     "run_attention",
     "run_decode_attention",
     "run_chunk_attention",
+    "gather_pages",
+    "run_paged_prefill_attention",
+    "run_paged_decode_attention",
+    "run_paged_chunk_attention",
     "silu",
     "gelu",
 ]
@@ -364,6 +368,119 @@ def run_decode_attention(
         if window is not None:  # fine window edge (matches the prefill mask)
             pmask &= jnp.arange(skv)[None, :] > cl[:, None] - 1 - window
     return decode_attention(q, k_cache, v_cache, cur_len, pattern_mask=pmask)
+
+
+# --------------------------------------------------------------------------
+# Paged cache dispatch: the fused kernels stream the pool through translated
+# physical-page tables; the XLA forms gather the virtual cache back from the
+# pool and run the SAME masked forms — parity with the contiguous engine by
+# construction (one liveness map, two address spaces).
+# --------------------------------------------------------------------------
+
+
+def gather_pages(
+    pool: jax.Array, page_table: jax.Array, n_rows: int, page: int
+) -> jax.Array:
+    """Materialise rows ``0..n_rows-1`` of each request's VIRTUAL cache from
+    the shared page pool.  pool: (n_pages * page, KV, hd); page_table:
+    (B, n_vtiles) physical page ids (sentinel ``n_pages`` = unallocated) ->
+    (B, n_rows, KV, hd).  Unallocated tiles gather clamped garbage — every
+    consumer masks them (causal frontier / cur_len / pattern), exactly as the
+    contiguous engine masks its unwritten rows."""
+    n_pages = pool.shape[0] // page
+    rows = jnp.arange(n_rows, dtype=jnp.int32)
+    vt = rows // page  # (n_rows,)
+    phys = jnp.clip(page_table[:, vt], 0, n_pages - 1)  # (B, n_rows)
+    flat = phys * page + (rows % page)[None, :]
+    return pool[flat]
+
+
+def run_paged_prefill_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    *,
+    page: int,
+    spec: AttentionSpec = AttentionSpec(),
+    rt: Runtime = Runtime(),
+) -> jax.Array:
+    """Admission prefill over a paged cache: q/k_new/v_new are the (1, S)
+    prompt's projections (already scattered into the pool by the caller).
+    The fused kernel reads the KV back *through the page table* — the
+    physical-page indexing proof for the prefill grid; the XLA form attends
+    the in-flight projections directly (the gather would reproduce them)."""
+    if spec.fused and _fused_ok(rt):
+        from repro.kernels import ops
+
+        return ops.flash_paged_prefill(
+            q, k_pool, v_pool, page_table, page=page, spec=spec
+        )
+    return run_attention(q, k_new, v_new, spec=spec, causal=True, rt=rt)
+
+
+def run_paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    cur_len: jax.Array,
+    page_table: jax.Array,
+    *,
+    page: int,
+    spec: AttentionSpec = AttentionSpec(),
+    rt: Runtime = Runtime(),
+    kv_live: int | None = None,
+) -> jax.Array:
+    """One-token attention over the paged pool: q (B, H, hd), per-row
+    ``cur_len`` live lengths in virtual token space.  ``kv_live`` buckets the
+    virtual extent (compile-per-bucket, like the contiguous engine)."""
+    if spec.fused and _fused_ok(rt):
+        from repro.kernels import ops
+
+        return ops.flash_paged_decode(
+            q, k_pool, v_pool, cur_len, page_table, page=page, spec=spec,
+            kv_live=kv_live,
+        )
+    n_rows = page_table.shape[1] * page
+    if kv_live is not None:
+        n_rows = min(n_rows, max(int(kv_live), 1))
+    kg = gather_pages(k_pool, page_table, n_rows, page)
+    vg = gather_pages(v_pool, page_table, n_rows, page)
+    return run_decode_attention(q, kg, vg, cur_len, spec=spec, rt=rt)
+
+
+def run_paged_chunk_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    start: jax.Array,
+    ntok: jax.Array,
+    page_table: jax.Array,
+    *,
+    page: int,
+    spec: AttentionSpec = AttentionSpec(),
+    rt: Runtime = Runtime(),
+    kv_live: int | None = None,
+) -> jax.Array:
+    """Mixed chunked-prefill attention over the paged pool (the paged form of
+    :func:`run_chunk_attention`): q (B, C, H, hd) rows at absolute positions
+    ``start[b]..``, per-row page tables, per-row live-tile tables translated
+    to physical pages."""
+    if spec.fused and _fused_ok(rt):
+        from repro.kernels import ops
+
+        return ops.flash_paged_chunk(
+            q, k_pool, v_pool, start, ntok, page_table, page=page, spec=spec,
+            kv_live=kv_live,
+        )
+    n_rows = page_table.shape[1] * page
+    if kv_live is not None:
+        n_rows = min(n_rows, max(int(kv_live), 1))
+    kg = gather_pages(k_pool, page_table, n_rows, page)
+    vg = gather_pages(v_pool, page_table, n_rows, page)
+    return run_chunk_attention(q, kg, vg, start, ntok, spec=spec, rt=rt)
 
 
 def run_chunk_attention(

@@ -33,6 +33,9 @@ from repro.models.layers import (
     run_attention,
     run_chunk_attention,
     run_decode_attention,
+    run_paged_chunk_attention,
+    run_paged_decode_attention,
+    run_paged_prefill_attention,
     silu,
 )
 
@@ -171,6 +174,30 @@ def _ring_place(c: jax.Array, lengths: jax.Array, klen: int) -> jax.Array:
     return jnp.take_along_axis(c, p[:, :, None, None], axis=1)
 
 
+def _paged_kv_write(
+    pool: jax.Array,
+    new: jax.Array,
+    rows: jax.Array,
+    valid: jax.Array,
+    page_table: jax.Array,
+    page: int,
+) -> jax.Array:
+    """Page-table-indirected masked scatter: token KV at absolute positions
+    ``rows`` (B, C) lands at ``page_table[b, rows // page] * page + rows %
+    page`` of the flat pool (n_pages * page, KV, hd).  Rows that are invalid
+    (beyond ``ntok`` / ``lengths``) or whose virtual tile is unallocated
+    (sentinel id) scatter out of bounds and are dropped — a row can never
+    clobber a page it does not own."""
+    n_pages = pool.shape[0] // page
+    vt = jnp.clip(rows // page, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, vt, axis=1)
+    flat = phys * page + rows % page
+    flat = jnp.where(valid & (phys < n_pages), flat, pool.shape[0])
+    return pool.at[flat.reshape(-1)].set(
+        new.astype(pool.dtype).reshape(-1, *new.shape[2:]), mode="drop"
+    )
+
+
 def apply_attention(
     aparams: dict,
     cfg: ModelConfig,
@@ -189,6 +216,8 @@ def apply_attention(
     attn_pattern: str | None = None,  # per-slot sparsity override (hybrid stacks)
     kv_live: int | None = None,  # static live-cache bound (sparse serve decode)
     ntok: jax.Array | None = None,  # (B,) valid chunk tokens (mixed step)
+    page_table: jax.Array | None = None,  # (B, n_vtiles) paged-cache indirection
+    page: int | None = None,  # tokens per page (static; = the kv tile)
 ):
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -219,7 +248,64 @@ def apply_attention(
             k_new = apply_rope(k_new, positions, cfg.rope_theta)
 
     new_cache = None
-    if mode == "mixed":
+    if page_table is not None:
+        # paged KV cache: ``cache`` is the GLOBAL page pool (n_pages * page,
+        # KV, hd) shared by every batch row; ``page_table`` (B, n_vtiles)
+        # maps each row's virtual kv tiles to physical pages.  Writes are
+        # page-table-indirected masked scatters (invalid / unallocated rows
+        # drop), reads go through the translated live-tile tables — the same
+        # liveness maps as the contiguous engine, one extra indirection.
+        assert cache is not None and pos is not None and page is not None
+        assert not is_cross, "paged caches are self-attention only"
+        assert not cfg.sliding_window, (
+            "paged caches index absolute positions; ring caches keep the "
+            "contiguous admission path"
+        )
+        kc, vc = cache["k"], cache["v"]
+        if mode == "mixed":
+            assert ntok is not None
+            rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, C)
+            valid = jnp.arange(s)[None, :] < ntok[:, None]
+            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page)
+            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page)
+            new_cache = {"k": kc, "v": vc}
+            out = run_paged_chunk_attention(
+                q, kc, vc, pos, ntok, page_table, page=page, spec=spec,
+                rt=rt, kv_live=kv_live,
+            )
+        elif mode == "decode":
+            # every row writes at its own position; a retired slot's page
+            # table is all-sentinel so its (garbage) write drops, and a
+            # mid-prompt row's write is overwritten by its next chunk before
+            # any consequential read — same discipline as the contiguous
+            # wave, with the page table enforcing ownership
+            rows = pos[:, None]  # (B, 1)
+            valid = jnp.ones_like(rows, bool)
+            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page)
+            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page)
+            new_cache = {"k": kc, "v": vc}
+            out = run_paged_decode_attention(
+                q[:, 0], kc, vc, pos + 1, page_table, page=page, spec=spec,
+                rt=rt, kv_live=kv_live,
+            )[:, None]
+        elif mode == "prefill":
+            rows = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (b, s)
+            )
+            ln = (
+                lengths if lengths is not None else jnp.full((b,), s, jnp.int32)
+            )
+            valid = jnp.arange(s)[None, :] < ln[:, None]
+            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page)
+            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page)
+            new_cache = {"k": kc, "v": vc}
+            out = run_paged_prefill_attention(
+                q, k_new, v_new, kc, vc, page_table, page=page, spec=spec,
+                rt=rt,
+            )
+        else:
+            raise ValueError(f"paged caches have no {mode!r} mode")
+    elif mode == "mixed":
         # mixed chunked-prefill step: row b consumes ntok[b] tokens at
         # absolute positions pos[b] .. pos[b]+ntok[b]-1 (0 = idle slot,
         # 1 = decode, >1 = prompt chunk) — the chunk KV is scattered straight
@@ -329,6 +415,8 @@ def apply_slot(
     lengths: jax.Array | None = None,
     kv_live: int | None = None,
     ntok: jax.Array | None = None,
+    page_table: jax.Array | None = None,
+    page: int | None = None,
 ):
     """One layer: pre-norm mixer + (optional cross-attn) + pre-norm FFN."""
     aux = jnp.zeros((), jnp.float32)
@@ -339,7 +427,7 @@ def apply_slot(
             sparams["attn"], cfg, hmix, rt, causal=causal, positions=positions,
             mode=mode, cache=None if cache is None else cache.get("attn"), pos=pos,
             lengths=lengths, attn_pattern=slot.attn_pattern, kv_live=kv_live,
-            ntok=ntok,
+            ntok=ntok, page_table=page_table, page=page,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -407,6 +495,8 @@ def run_stack(
     lengths: jax.Array | None = None,  # (B,) ragged prompt lengths (prefill)
     kv_live: int | None = None,  # static live-cache bound (sparse serve decode)
     ntok: jax.Array | None = None,  # (B,) valid chunk tokens (mixed step)
+    page_table: jax.Array | None = None,  # (B, n_vtiles) paged-cache tables
+    page: int | None = None,  # tokens per page (static)
 ):
     """Scan the periodic layer pattern.  Returns (x, new_caches, aux_sum)."""
 
@@ -421,7 +511,7 @@ def run_stack(
                 slot, p_params[key], cfg, x, rt, mode=mode, positions=positions,
                 cache=None if p_cache is None else p_cache[key], pos=pos,
                 enc_out=enc_out, causal=causal, lengths=lengths, kv_live=kv_live,
-                ntok=ntok,
+                ntok=ntok, page_table=page_table, page=page,
             )
             new_cache[key] = c
             aux = aux + a
@@ -645,6 +735,71 @@ def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
     return out
 
 
+def paged_pool_specs(cfg: ModelConfig, n_pages: int, page: int) -> dict:
+    """ParamSpec tree for the paged KV cache: one GLOBAL page pool per
+    attention slot, (n_periods, n_pages * page, KV, hd) — no batch axis, no
+    per-slot ``cache_len`` reservation.  Resident HBM is the pool; per-request
+    footprint is the pages its page table holds, so capacity prices at live
+    tiles instead of ``batch x cache_len``.  Pools shard KV heads over the
+    model axis; pages stay replicated (sharding the page axis is the
+    ROADMAP's sharded-paged-cache item)."""
+    n = cfg.n_periods
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.sliding_window:
+        raise ValueError("paged pools have no ring layout; use cache_specs")
+    if cfg.family == "encdec":
+        raise ValueError("paged pools have no cross-attention caches")
+    out: dict = {}
+    for j, slot in enumerate(cfg.period_slots):
+        sc: dict = {}
+        if slot.mixer == "attn":
+            kvspec = ParamSpec(
+                (n, n_pages * page, kv, hd), (None, None, "tp", None)
+            )
+            sc["attn"] = {"k": kvspec, "v": kvspec}
+        elif slot.mixer == "mamba":
+            raise ValueError("paged serving requires attention-only stacks")
+        out[f"slot{j:02d}"] = sc
+    return out
+
+
+def paged_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    rt: Runtime,
+    *,
+    caches: dict,
+    page_table: jax.Array,
+    page: int,
+    lengths: jax.Array | None = None,
+):
+    """Admission prefill into a PAGED cache: the prompt's KV is scattered
+    through the page table into the global pool and attention reads it back
+    through the translated block map (batch-1; the page table is one row).
+    Returns (last-real-token logits, updated pools) — no contiguous wave, no
+    cache insert: the pool already holds the request's pages."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, rt)
+    positions = jnp.arange(x.shape[1])
+    x = _boundary(x, rt, cfg)
+    x, caches, _ = run_stack(
+        params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="prefill",
+        positions=positions, caches=caches, causal=cfg.causal, lengths=lengths,
+        page_table=page_table, page=page,
+        pos=jnp.zeros((tokens.shape[0],), jnp.int32),
+    )
+    nf = jax.tree.map(lambda a: a[0], params["final_norm"])
+    x = _norm(nf, cfg, x)
+    if lengths is None:
+        last = x[:, -1]
+    else:
+        idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = last @ params["head"].astype(x.dtype)
+    return logits, caches
+
+
 def decode_step(
     params: Params,
     cfg: ModelConfig,
@@ -654,6 +809,8 @@ def decode_step(
     rt: Runtime,
     *,
     kv_live: int | None = None,
+    page_table: jax.Array | None = None,
+    page: int | None = None,
 ):
     """One token for the whole batch.  tokens: (B, 1); pos: scalar int32
     (static batch) or (B,) int32 per-request positions (ragged batch —
@@ -671,7 +828,7 @@ def decode_step(
     x, new_caches, _ = run_stack(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="decode",
         positions=positions, caches=caches, pos=pos, causal=cfg.causal,
-        kv_live=kv_live,
+        kv_live=kv_live, page_table=page_table, page=page,
     )
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)
@@ -689,6 +846,8 @@ def mixed_step(
     rt: Runtime,
     *,
     kv_live: int | None = None,
+    page_table: jax.Array | None = None,
+    page: int | None = None,
 ):
     """One mixed chunked-prefill/decode step for the whole batch.
 
@@ -714,7 +873,7 @@ def mixed_step(
     x, new_caches, _ = run_stack(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="mixed",
         positions=positions, caches=caches, pos=pos, causal=cfg.causal,
-        kv_live=kv_live, ntok=ntok,
+        kv_live=kv_live, ntok=ntok, page_table=page_table, page=page,
     )
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)

@@ -1,0 +1,268 @@
+"""Paged KV cache: allocator invariants, page-table translation, retention
+schedules, and paged-vs-contiguous token parity across patterns x backends x
+scheduling modes.
+
+The contract under test: one more level of indirection (live virtual tile ->
+physical page) must never change a single token — the packed live tables the
+kernels prefetch are the SAME liveness maps, translated — while resident
+memory becomes proportional to live pages instead of batch x cache_len.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import sparsity
+from repro.core.attention import AttentionSpec
+from repro.launch.serve import PagePool, Request, ServeLoop
+from repro.models import model as M
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32", capacity_factor=8.0)
+
+
+# --------------------------------------------------------------------------
+# PagePool: alloc/free/reuse under churn, fragmentation bound, exhaustion
+# --------------------------------------------------------------------------
+
+
+def test_page_pool_churn_invariants():
+    """Admit/evict storm: pages stay unique, free+in_use is conserved, and —
+    the fragmentation bound — alloc succeeds whenever in_use < n_pages
+    (pages are unit-granular, so there is no external fragmentation)."""
+    rng = np.random.default_rng(0)
+    pool = PagePool(13)
+    held: list[int] = []
+    for _ in range(500):
+        if held and rng.random() < 0.45:
+            pool.release(held.pop(rng.integers(len(held))))
+        elif pool.in_use < pool.n_pages:
+            held.append(pool.alloc())
+        assert pool.in_use == len(held)
+        assert pool.free_pages + pool.in_use == pool.n_pages
+        assert len(set(held)) == len(held), "double-allocated page"
+        assert all(0 <= p < pool.n_pages for p in held)
+    assert pool.peak_in_use <= pool.n_pages
+    # reuse: drain and refill — every page id comes back
+    for p in held:
+        pool.release(p)
+    got = sorted(pool.alloc() for _ in range(pool.n_pages))
+    assert got == list(range(pool.n_pages))
+
+
+def test_page_pool_exhaustion_raises():
+    pool = PagePool(2)
+    a, _ = pool.alloc(), pool.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc()
+    with pytest.raises(ValueError):
+        PagePool(0)
+    # double free must fail loudly: a page on the free list twice would be
+    # handed to two requests — silent cross-request KV corruption
+    pool.release(a)
+    with pytest.raises(ValueError, match="double free"):
+        pool.release(a)
+
+
+# --------------------------------------------------------------------------
+# Translation + retention schedules
+# --------------------------------------------------------------------------
+
+
+def test_translate_tables_sentinel_and_clamp():
+    kvi = np.array([[0, 1, 2], [1, 2, 0]], np.int32)
+    lv = np.array([[1, 1, 1], [1, 1, 0]], np.int32)
+    pt = np.array([[5, 9, 3], [7, 16, 2]], np.int32)  # 16 == sentinel
+    phys, virt, live = sparsity.translate_tables(kvi, lv, pt, 16)
+    assert np.asarray(phys).tolist() == [[5, 9, 3], [15, 2, 7]]
+    assert np.asarray(virt).tolist() == kvi.tolist()
+    # row 1 entry 0 hits the sentinel: masked dead, clamped in bounds
+    assert np.asarray(live).tolist() == [[1, 1, 1], [0, 1, 0]]
+    # 1-D page table (batch-1 prefill form) broadcasts over table rows
+    phys1, _, live1 = sparsity.translate_tables(kvi, lv, pt[0], 16)
+    assert np.asarray(phys1).tolist() == [[5, 9, 3], [9, 3, 5]]
+    assert np.asarray(live1).tolist() == lv.tolist()
+
+
+def test_page_last_reader_dense_retains_everything():
+    last = sparsity.page_last_reader("dense", 512, 128, 128)
+    assert last.tolist() == [511] * 4  # causal: every tile read to the end
+
+
+def test_page_last_reader_window_frees_tail():
+    last = sparsity.page_last_reader("dense", 1024, 128, 128, window=128)
+    # tile 0 (positions 0..127) is out of every window past position ~255
+    assert last[0] < 300
+    assert last[-1] == 1023
+
+
+def test_page_peak_resident_orders():
+    """dense retains all tiles; window caps at ~window/page; butterfly sits
+    strictly between at scale — the capacity ordering the paper's routed
+    sparsity predicts."""
+    s, t = 2048, 128
+    dense = sparsity.page_peak_resident("dense", s, t, t)
+    bfly = sparsity.page_peak_resident("butterfly", s, t, t)
+    win = sparsity.page_peak_resident("dense", s, t, t, window=256)
+    assert dense == s // t
+    assert win <= 3
+    assert win < bfly < dense
+    # the decode-phase tail is O(log n): with the frontier in the last tile,
+    # the live row itself is the resident set
+    assert sparsity.decode_max_live("butterfly", s, t, t) <= 12
+
+
+def test_page_last_reader_covers_traced_tables():
+    """Soundness of freeing: any tile a traced decode table marks live at
+    cur_len must have last_reader >= cur_len - 1 (the query's position)."""
+    s, t = 1024, 128
+    for pattern in ("butterfly", "strided", "global_window"):
+        last = sparsity.page_last_reader(pattern, s, t, t)
+        for cl in (1, 129, 256, 513, 777, 1024):
+            kvi, lv = sparsity.decode_live_tables(
+                pattern, jnp.asarray([cl]), s, t, t
+            )
+            for j, alive in zip(np.asarray(kvi)[0], np.asarray(lv)[0]):
+                if alive:
+                    assert last[j] >= cl - 1, (pattern, cl, j)
+
+
+# --------------------------------------------------------------------------
+# Engine parity: paged vs contiguous across patterns x impls x modes
+# --------------------------------------------------------------------------
+
+# pattern, pattern_arg, impl, scheduling mode, cache_len, (plen, max_new)*, chunk
+PARITY_CASES = [
+    ("dense", None, "xla_chunked", "admission", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("dense", None, "flash_kernel", "admission", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("dense", None, "xla_chunked", "chunked", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("dense", None, "flash_kernel", "chunked", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("window", 16, "xla_chunked", "admission", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("window", 16, "flash_kernel", "admission", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("window", 16, "xla_chunked", "chunked", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("window", 16, "flash_kernel", "chunked", 64, [(17, 6), (3, 5), (41, 3)], 8),
+    ("butterfly", None, "xla_chunked", "admission", 512, [(200, 3), (7, 3)], 32),
+    ("butterfly", None, "flash_kernel", "admission", 512, [(200, 3), (7, 3)], 32),
+    ("butterfly", None, "xla_chunked", "chunked", 512, [(200, 3), (7, 3)], 32),
+    ("butterfly", None, "flash_kernel", "chunked", 512, [(200, 3), (7, 3)], 32),
+]
+
+
+@pytest.mark.parametrize("pattern,arg,impl,mode,cache_len,lens,chunk", PARITY_CASES)
+def test_paged_matches_contiguous(pattern, arg, impl, mode, cache_len, lens, chunk):
+    """The paged engine must be token-identical to the contiguous engine in
+    BOTH scheduling modes (decode-grid admission and chunk-grid streaming),
+    for every pattern and both backends — GQA included (qwen3 is 4 heads
+    over 2 kv heads reduced).  After the run the pool must be fully drained
+    (every page freed exactly once)."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = dataclasses.replace(
+        _f32(registry.get("qwen3-0.6b", reduced=True)),
+        attention=AttentionSpec(impl=impl, pattern=pattern, pattern_arg=arg),
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32) for ln, _ in lens]
+
+    def mk():
+        return [
+            Request(uid=i, prompt=p, max_new=mn)
+            for i, (p, (_, mn)) in enumerate(zip(prompts, lens))
+        ]
+
+    mesh = make_local_mesh()
+    chunked = mode == "chunked"
+    ref = ServeLoop(
+        cfg, mesh, params, batch=2, cache_len=cache_len, chunked=chunked,
+        chunk_size=chunk,
+    ).run(mk())
+    loop = ServeLoop(
+        cfg, mesh, params, batch=2, cache_len=cache_len, chunked=chunked,
+        chunk_size=chunk, paged=True,
+    )
+    pag = loop.run(mk())
+    for r1, r2 in zip(ref, pag):
+        assert r2.generated == r1.generated, f"uid {r1.uid}"
+    assert loop.pool.in_use == 0, "pages leaked after the run"
+    assert loop.stats["pool_peak_pages"] <= loop.stats["pool_pages"]
+
+
+def test_paged_out_of_pages_backpressure():
+    """A pool sized for ONE request's peak must serialize admissions (FIFO
+    backpressure, counted in stats), still complete every request, and stay
+    token-identical — out-of-pages is scheduling pressure, never corruption."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = _f32(registry.get("qwen3-0.6b", reduced=True))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32)
+               for ln in (150, 140, 130)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=3) for i, p in enumerate(prompts)]
+
+    mesh = make_local_mesh()
+    ref = ServeLoop(cfg, mesh, params, batch=3, cache_len=512).run(mk())
+    # each request needs ceil((150+2)/128)+ = 2 pages; pool of 2 forces
+    # one-at-a-time service through 3 slots
+    loop = ServeLoop(
+        cfg, mesh, params, batch=3, cache_len=512, paged=True, pool_pages=2,
+    )
+    done = loop.run(mk())
+    assert loop.stats["admission_backpressure"] > 0
+    assert loop.stats["max_concurrent"] == 1
+    for r1, r2 in zip(ref, done):
+        assert r2.generated == r1.generated, f"uid {r1.uid}"
+    assert loop.pool.in_use == 0
+
+
+def test_paged_unservable_request_rejected():
+    """A request whose peak residency exceeds the whole pool must be refused
+    up front, not deadlock the engine."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = _f32(registry.get("qwen3-0.6b", reduced=True))
+    loop = ServeLoop(
+        cfg, make_local_mesh(), None, batch=1, cache_len=512, paged=True,
+        pool_pages=1,
+    )
+    big = Request(uid=0, prompt=np.arange(300, dtype=np.int32) % cfg.vocab,
+                  max_new=2)
+    with pytest.raises(ValueError, match="unservable"):
+        loop.run([big])
+
+
+def test_paged_butterfly_peak_below_dense_reservation():
+    """The capacity claim at test scale: a butterfly request's peak resident
+    pages stay strictly below the contiguous engine's dense reservation
+    (batch x cache tiles), because mid-prompt tiles free as the pattern's
+    remaining stride pairs move past them."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = dataclasses.replace(
+        _f32(registry.get("qwen3-0.6b", reduced=True)),
+        attention=AttentionSpec(impl="flash_kernel", pattern="butterfly"),
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    reqs = [
+        Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab, size=300).astype(np.int32),
+                max_new=3)
+        for i in range(2)
+    ]
+    loop = ServeLoop(
+        cfg, make_local_mesh(), params, batch=2, cache_len=512, chunked=True,
+        chunk_size=32, paged=True,
+    )
+    loop.run(reqs)
+    dense_reservation = 2 * loop.n_vtiles
+    assert loop.stats["pool_peak_pages"] < dense_reservation
+    assert loop.stats["page_allocs"] >= loop.stats["pool_peak_pages"]
