@@ -92,13 +92,14 @@ def rows(attn: str | None, pattern: str | None):
                 # fused Pallas flash attention (scores VMEM-resident)
                 flash_rows.append(
                     _flash_analytic(f"fig15/{name}/attn-flash-fused", b, s, h, hd)
+                    + (False,)
                 )
                 if pattern:
                     # block-sparse flash: the grid iterates only live tiles
                     flash_rows.append(_flash_analytic(
                         f"fig15/{name}/attn-flash-{pattern}", b, s, h, hd,
                         pattern=pattern,
-                    ))
+                    ) + (True,))
         else:
             x = sds((b * s, d))
             w = sds((d, 3 * d))
@@ -112,11 +113,19 @@ def rows(attn: str | None, pattern: str | None):
         speed = m_dense.t / m_fused.t
         out.append((m_dense, f"bound={m_dense.bound}"))
         out.append((m_fused, f"speedup_vs_dense={speed:.2f}x"))
-        for m, density in flash_rows:
-            out.append((
-                m,
-                f"speedup_vs_dense={m_dense.t / m.t:.2f}x density={density:.4f}",
-            ))
+        for m, density, is_sparse in flash_rows:
+            if is_sparse and density >= 1.0:
+                # the tile map degenerated to dense at this shape (e.g.
+                # butterfly on a 2x2 grid at s=256 keeps every block live):
+                # a "speedup_vs_dense" here would compare dense to itself
+                # and mislead the trajectory diffs — mark it instead
+                out.append((m, f"degenerate=dense density={density:.4f}"))
+            else:
+                out.append((
+                    m,
+                    f"speedup_vs_dense={m_dense.t / m.t:.2f}x "
+                    f"density={density:.4f}",
+                ))
     return out
 
 

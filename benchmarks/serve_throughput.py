@@ -107,6 +107,31 @@ def burst_workload(cfg, n: int, cache_len: int, seed: int, batch: int) -> list[R
     return reqs
 
 
+def shared_prefix_workload(cfg, n: int, cache_len: int, seed: int) -> list[Request]:
+    """Every request = one long shared prefix (half the cache) + a short
+    unique suffix — the system-prompt/few-shot-template traffic shape the
+    radix prefix cache exists for.  Under the paged engine the first request
+    prefills and caches the prefix; every later admission aliases it and
+    prefills only its suffix (the ``prefix_cache`` BENCH section records the
+    hit tokens and FLOPs saved).  The contiguous modes run the same workload
+    cold, so the row doubles as the no-sharing reference."""
+    rng = np.random.default_rng(seed)
+    page = 128  # effective kv tile of the default spec
+    prefix_len = max((cache_len // 2 // page) * page, page)
+    prefix_len = min(prefix_len, max(cache_len - 2 * page, page))
+    if cache_len < 2 * page:  # smoke shapes below one page: plain ragged
+        return mixed_workload(cfg, n, cache_len, seed)
+    shared = rng.integers(0, cfg.vocab, size=prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        slen = int(rng.integers(1, page // 2))
+        prompt = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab, size=slen).astype(np.int32)]
+        )
+        reqs.append(Request(uid=i, prompt=prompt, max_new=int(rng.integers(2, 5))))
+    return reqs
+
+
 def make_workload(cfg, scenario: str, n: int, cache_len: int, seed: int, batch: int):
     if scenario == "mixed":
         return mixed_workload(cfg, n, cache_len, seed)
@@ -114,6 +139,8 @@ def make_workload(cfg, scenario: str, n: int, cache_len: int, seed: int, batch: 
         return long_prompt_workload(cfg, n, cache_len, seed)
     if scenario == "burst":
         return burst_workload(cfg, n, cache_len, seed, batch)
+    if scenario == "shared_prefix":
+        return shared_prefix_workload(cfg, n, cache_len, seed)
     raise ValueError(f"unknown scenario {scenario!r}")
 
 
@@ -156,7 +183,7 @@ def main() -> None:
     ap.add_argument("--pattern", default="dense",
                     choices=["dense", "butterfly", "strided", "global_window"])
     ap.add_argument("--scenario", default="mixed",
-                    choices=["mixed", "long_prompt", "burst"])
+                    choices=["mixed", "long_prompt", "burst", "shared_prefix"])
     ap.add_argument("--modes", default="all",
                     help="comma list of static,continuous,chunked (or 'all')")
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -176,6 +203,13 @@ def main() -> None:
                          "requests at a fixed page-pool budget (deterministic "
                          "capacity sub-benchmark; emits the paged_capacity "
                          "BENCH section)")
+    ap.add_argument("--check-prefix", action="store_true",
+                    help="CI gate: 4 requests sharing a 4k-token prefix must "
+                         "cost >= 3x less admission prefill FLOPs and peak "
+                         "resident pages with the radix prefix cache than "
+                         "without, token-identically, pool fully drained "
+                         "(deterministic sub-benchmark; emits the "
+                         "prefix_cache BENCH section)")
     ap.add_argument("--json", default="BENCH_attention.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
@@ -211,6 +245,7 @@ def main() -> None:
     print("-" * len(hdr))
     json_rows = []
     cap_json = []
+    prefix_json = []
     failures = []
     for impl in impls:
         cfg = dataclasses.replace(
@@ -275,6 +310,30 @@ def main() -> None:
             )
             cap_json += cap_rows
             failures += cap_fail
+        if args.check_prefix:
+            pre_rows, pre_fail = check_prefix(
+                cfg, mesh, params, impl=impl, pattern=args.pattern,
+            )
+            prefix_json += pre_rows
+            failures += pre_fail
+        if args.scenario == "shared_prefix" and "paged" in per_mode:
+            # the scenario's paged run doubles as the prefix-cache BENCH row:
+            # how much admission work the radix tree absorbed on this shape
+            _, _, pstats, _ = per_mode["paged"]
+            prefix_json.append({
+                "attn": impl,
+                "pattern": args.pattern,
+                "scenario": args.scenario,
+                "requests": args.requests,
+                "prefix_hits": pstats.get("prefix_hits"),
+                "prefix_hit_tokens": pstats.get("prefix_hit_tokens"),
+                "prefill_tokens": pstats.get("prefill_tokens"),
+                "prefill_flops": pstats.get("prefill_flops"),
+                "cow_forks": pstats.get("cow_forks"),
+                "pool_peak_pages": pstats.get("pool_peak_pages"),
+                "prefix_inserted_pages": pstats.get("prefix_inserted_pages"),
+                "prefix_evicted_pages": pstats.get("prefix_evicted_pages"),
+            })
     if args.json:
         # one section per (scenario, pattern): CI's butterfly smoke row and
         # the chunked-scheduler gate both survive in the artifact
@@ -284,6 +343,8 @@ def main() -> None:
         )
         if cap_json:
             write_bench_json(args.json, "paged_capacity", cap_json)
+        if prefix_json:
+            write_bench_json(args.json, "prefix_cache", prefix_json)
     if failures:
         for f in failures:
             print(f"CHECK FAILED: {f}", file=sys.stderr)
@@ -292,6 +353,8 @@ def main() -> None:
         print("check-chunked: all assertions passed")
     if args.check_paged:
         print("check-paged: all assertions passed")
+    if args.check_prefix:
+        print("check-prefix: all assertions passed")
 
 
 def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
@@ -381,6 +444,114 @@ def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
         f"paged_capacity[{impl}/{pattern}]: {conc}x concurrent vs "
         f"{contig_batch} contiguous at {budget_pages} pages "
         f"(peak resident {peak}, {row['capacity_x']}x)"
+    )
+    return [row], failures
+
+
+def check_prefix(cfg, mesh, params, *, impl: str, pattern: str):
+    """The prefix-cache CI gate: 4 requests sharing a 4k-token prefix, run
+    through the paged admission engine twice — radix cache ON vs OFF (the
+    no-sharing baseline).  Deterministic assertions: (a) generations are
+    token-identical between the two runs, (b) admission prefill FLOPs drop
+    >= 3x (the first request pays the full prefix once; the other three
+    prefill only their short unique suffixes), (c) peak resident pages drop
+    >= 3x (one shared copy of the prefix tiles instead of four private
+    ones), (d) both pools fully drain — every refcount back to zero.
+    Returns (bench rows, failures)."""
+    page = 128  # the effective kv tile of the default spec
+    prefix_len = 4096  # 32 shared pages
+    cache_len = prefix_len + 2 * page  # room for suffix + generation
+    n_req = 4
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab, size=prefix_len).astype(np.int32)
+    prompts = [
+        np.concatenate(
+            [shared, rng.integers(0, cfg.vocab, size=int(sl)).astype(np.int32)]
+        )
+        for sl in rng.integers(8, page // 2, size=n_req)
+    ]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=2)
+                for i, p in enumerate(prompts)]
+
+    # pool sized so the cold run can hold all four requests' dense prefixes
+    # concurrently — the baseline the sharing win is measured against
+    pool = n_req * (cache_len // page)
+    runs = {}
+    for warm in (False, True):
+        loop = ServeLoop(
+            cfg, mesh, params, batch=n_req, cache_len=cache_len,
+            chunk_size=512, paged=True, pool_pages=pool, prefix_cache=warm,
+        )
+        assert loop.page == page, (
+            f"prefix gate sized its prefix in {page}-token pages but the "
+            f"engine derived {loop.page}-token pages"
+        )
+        t0 = time.perf_counter()
+        done = loop.run(mk())
+        runs[warm] = (done, dict(loop.stats), loop.pool.in_use,
+                      time.perf_counter() - t0)
+
+    failures = []
+    done_c, stats_c, inuse_c, dt_c = runs[False]
+    done_w, stats_w, inuse_w, dt_w = runs[True]
+    for rc, rw in zip(done_c, done_w):
+        if rc.generated != rw.generated:
+            failures.append(
+                f"{impl}/{pattern}: uid {rc.uid} generations diverge with "
+                f"the prefix cache on — sharing corrupted tokens"
+            )
+            break
+    flops_x = stats_c["prefill_flops"] / max(stats_w["prefill_flops"], 1.0)
+    if flops_x < 3.0:
+        failures.append(
+            f"{impl}/{pattern}: admission prefill FLOPs only dropped "
+            f"{flops_x:.2f}x (< 3x) with 4 requests sharing a "
+            f"{prefix_len}-token prefix"
+        )
+    pages_x = stats_c["pool_peak_pages"] / max(stats_w["pool_peak_pages"], 1)
+    if pages_x < 3.0:
+        failures.append(
+            f"{impl}/{pattern}: peak resident pages only dropped "
+            f"{pages_x:.2f}x (< 3x): {stats_c['pool_peak_pages']} cold vs "
+            f"{stats_w['pool_peak_pages']} shared"
+        )
+    if stats_w["prefix_hits"] != n_req - 1:
+        failures.append(
+            f"{impl}/{pattern}: {stats_w['prefix_hits']} prefix hits, "
+            f"expected {n_req - 1} (every request after the first)"
+        )
+    for tag, inuse in (("cold", inuse_c), ("warm", inuse_w)):
+        if inuse != 0:
+            failures.append(
+                f"{impl}/{pattern}: {tag} run left {inuse} pages referenced "
+                f"after completion — refcount leak"
+            )
+    row = {
+        "attn": impl,
+        "pattern": pattern,
+        "prefix_tokens": prefix_len,
+        "requests": n_req,
+        "prefill_flops_cold": stats_c["prefill_flops"],
+        "prefill_flops_shared": stats_w["prefill_flops"],
+        "prefill_flops_x": round(flops_x, 2),
+        "prefill_tokens_cold": stats_c["prefill_tokens"],
+        "prefill_tokens_shared": stats_w["prefill_tokens"],
+        "peak_pages_cold": stats_c["pool_peak_pages"],
+        "peak_pages_shared": stats_w["pool_peak_pages"],
+        "peak_pages_x": round(pages_x, 2),
+        "prefix_hits": stats_w["prefix_hits"],
+        "prefix_hit_tokens": stats_w["prefix_hit_tokens"],
+        "cow_forks": stats_w["cow_forks"],
+        "wall_s_cold": round(dt_c, 3),
+        "wall_s_shared": round(dt_w, 3),
+    }
+    print(
+        f"prefix_cache[{impl}/{pattern}]: prefill FLOPs {flops_x:.1f}x "
+        f"lower, peak pages {stats_c['pool_peak_pages']} -> "
+        f"{stats_w['pool_peak_pages']} ({pages_x:.1f}x) across {n_req} "
+        f"requests sharing {prefix_len} tokens"
     )
     return [row], failures
 

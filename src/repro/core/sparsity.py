@@ -627,6 +627,7 @@ def page_residency(
     length: int,
     kv_tile: int,
     step_span: int = 1,
+    start_tile: int = 0,
 ) -> np.ndarray:
     """Resident page count at every frontier position, given the per-tile
     last-reader schedule.  A tile is resident from its first write (position
@@ -636,9 +637,17 @@ def page_residency(
     ``step_span - 1`` on the left.  This one curve is shared by the serve
     engine's admission reservation (its suffix max is the remaining-peak
     commitment that makes ``PagePool.alloc`` infallible) and by the
-    dry-run/benchmark accounting — the invariant math has exactly one home."""
+    dry-run/benchmark accounting — the invariant math has exactly one home.
+
+    ``start_tile`` restricts the curve to tiles ``j >= start_tile``: the
+    UNIQUE-SUFFIX residency of a request whose first ``start_tile * kv_tile``
+    positions alias radix-cached prefix pages.  Aliased tiles cost the
+    request no allocations (the cache's refcount carries them), and the
+    divergence-frontier tile — start_tile itself when the match ends
+    mid-page — IS counted, because a copy-on-write fork allocates a private
+    page there."""
     diff = np.zeros(length + 1, np.int64)
-    for j in range(len(last_reader)):
+    for j in range(start_tile, len(last_reader)):
         lo = max(j * kv_tile - (max(step_span, 1) - 1), 0)
         diff[lo] += 1
         diff[min(int(last_reader[j]), length - 1) + 1] -= 1
@@ -654,16 +663,19 @@ def page_peak_resident(
     window: int | None = None,
     pattern_arg: int | None = None,
     step_span: int = 1,
+    start_tile: int = 0,
 ) -> int:
     """Worst-case simultaneously-resident page count over a request's whole
     lifetime (the max of :func:`page_residency` over the
     :func:`page_last_reader` schedule) — the sound admission reservation for
     the paged serve engine, and the per-request page price the dry-run's
-    ``kv_cache`` record reports."""
+    ``kv_cache`` record reports.  With ``start_tile > 0`` this is the
+    unique-suffix reservation of a prefix-cache hit: only the pages the
+    request itself allocates (beyond the shared, refcounted prefix)."""
     last = page_last_reader(
         pattern, length, q_tile, kv_tile, window=window, pattern_arg=pattern_arg
     )
-    res = page_residency(last, length, kv_tile, step_span)
+    res = page_residency(last, length, kv_tile, step_span, start_tile)
     return int(res.max()) if length else 0
 
 

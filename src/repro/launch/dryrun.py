@@ -184,7 +184,13 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
     per-slot patterns' last-reader schedules (``Slot.attn_pattern``
     overrides included) — exactly what ``ServeLoop._paged_schedule``
     reserves: a hybrid stack with one dense-causal slot prices at dense
-    retention, not at the sparse slots' optimism."""
+    retention, not at the sparse slots' optimism.
+
+    The ``prefix_*`` fields price the radix prefix cache under an assumed
+    share ratio (half the prompt shared batch-wide): shared tiles resident
+    once + per-request unique-suffix peaks, and the fraction of admission
+    prefill FLOPs the cache absorbs — the analytic counterpart of the
+    ``--check-prefix`` gate in ``benchmarks.serve_throughput``."""
     import math
 
     from repro.core import sparsity
@@ -218,6 +224,35 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
     per_layer_dense = shape.batch * s * row_bytes
     per_layer_paged = shape.batch * peak_pages * page * row_bytes
     live_read = shape.batch * max(math.ceil(density * n_tiles), 1) * page * row_bytes
+
+    # --- prefix sharing (radix cache) under an assumed share ratio -------
+    # Model the ROADMAP's system-prompt traffic shape: every request in the
+    # batch shares the first ``share`` of its prompt.  Shared prefix tiles
+    # are resident ONCE (the tree + every sharer alias one physical copy);
+    # each request adds only its unique-suffix peak
+    # (page_residency(start_tile) — the same quantity warm admission
+    # reserves).  Prefill FLOPs saved uses the engine's analytic pricing:
+    # after the first request, each sharer prefills only its suffix, whose
+    # attention term starts at the divergence position.
+    share = 0.5
+    shared_tiles = int(share * s) // page
+    shared_tokens = shared_tiles * page
+    uniq_peak = (
+        int(sparsity.page_residency(last, s, page, start_tile=shared_tiles).max())
+        if shared_tiles < len(last) else 0
+    )
+    per_layer_shared = (
+        shared_tiles * page + shape.batch * uniq_peak * page
+    ) * row_bytes
+    b = shape.batch
+    per_tok = M.model_flops_per_token(cfg, 1, "fwd")
+    attn_c = 4 * cfg.n_heads * cfg.head_dim * n_attn
+
+    def _pf(t, pos0):  # analytic prefill FLOPs for t tokens at offset pos0
+        return t * per_tok + attn_c * (t * pos0 + t * (t + 1) / 2)
+
+    cold = b * _pf(s, 0)
+    warm = _pf(s, 0) + (b - 1) * _pf(s - shared_tokens, shared_tokens)
     return {
         "pattern": pattern,
         "retention_patterns": sorted(pats),
@@ -228,6 +263,15 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
         "paged_resident_bytes": float(n_attn * per_layer_paged),
         "paged_live_read_bytes": float(n_attn * live_read),
         "capacity_ratio": float(per_layer_dense / max(per_layer_paged, 1)),
+        "prefix_share_ratio": share,
+        "shared_prefix_tokens": shared_tokens,
+        "shared_resident_pages": shared_tiles,
+        "unique_peak_pages_per_request": uniq_peak,
+        "prefix_resident_bytes": float(n_attn * per_layer_shared),
+        "prefix_capacity_ratio": float(
+            per_layer_paged / max(per_layer_shared, 1)
+        ),
+        "prefill_flops_saved_frac": float(1.0 - warm / max(cold, 1.0)),
     }
 
 
@@ -390,6 +434,9 @@ def _summ(rec: dict) -> str:
     kv_s = (
         f" kv_cap={kv['capacity_ratio']:.1f}x"
         f"({kv['peak_resident_pages']}/{kv['n_tiles']}pg)"
+        f" px@{kv['prefix_share_ratio']:.0%}="
+        f"{kv['prefix_capacity_ratio']:.1f}x"
+        f"(-{kv['prefill_flops_saved_frac']:.0%}flops)"
         if kv else ""
     )
     return (

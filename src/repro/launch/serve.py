@@ -52,6 +52,7 @@ __all__ = [
     "cache_shardings",
     "abstract_cache",
     "PagePool",
+    "RadixCache",
     "Request",
     "ServeLoop",
 ]
@@ -278,8 +279,8 @@ def make_paged_fns(
     attn_pattern: str | None = None,
 ):
     """Compiled entry points of the PAGED serve engine: ``(prefill, decode,
-    chunk_fn)`` over one global page pool instead of per-slot ``cache_len``
-    reservations.
+    chunk_fn, copy_fn)`` over one global page pool instead of per-slot
+    ``cache_len`` reservations.
 
     * ``prefill(params, caches, b, lengths, pt_row)`` — batch-1 admission
       prefill scattered through the request's page-table row (retraces per
@@ -291,8 +292,12 @@ def make_paged_fns(
       kv_live)`` — one prompt chunk streamed straight into the pool.  No
       slot slice/insert dance: the pool is already shared, the page table IS
       the slot.
+    * ``copy_fn(caches, src, dst)`` — copy-on-write page duplication
+      (:func:`repro.models.transformer.paged_copy_page`); src/dst are traced
+      page ids, so the whole prefix-sharing machinery compiles exactly one
+      extra program.
 
-    All three donate the pools; the page tables are tiny replicated int32
+    All four donate the pools; the page tables are tiny replicated int32
     arrays refreshed from host state every call."""
     cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
     rt = M.resolve_runtime(cfg, mesh)
@@ -359,11 +364,18 @@ def make_paged_fns(
             chk_jit[kv_live] = fn
         return fn(params, caches, tokens, pt, pos, ntok)
 
-    return prefill, decode, chunk_fn
+    copy_fn = jax.jit(
+        lambda caches, src, dst: tf.paged_copy_page(caches, src, dst, page),
+        in_shardings=(pool_shard, rep, rep),
+        out_shardings=pool_shard,
+        donate_argnums=(0,),
+    )
+
+    return prefill, decode, chunk_fn, copy_fn
 
 
 class PagePool:
-    """Host-side free-list allocator over the global KV page pool.
+    """Host-side refcounted free-list allocator over the global KV page pool.
 
     Pages are unit-granular (one kv tile each), so there is no external
     fragmentation by construction: ``alloc`` succeeds whenever ``in_use <
@@ -372,21 +384,36 @@ class PagePool:
     worst-case future residency, :func:`repro.core.sparsity.
     page_peak_resident`), which makes ``alloc`` infallible at every reachable
     state and turns pool exhaustion into admission backpressure instead of a
-    mid-stream deadlock."""
+    mid-stream deadlock.
+
+    Prefix sharing adds reference counting: a physical page can back the
+    same virtual tile of many requests plus the radix cache.  Every sharer
+    holds one reference (``retain``); ``release`` drops one, and the page
+    returns to the free list only when the LAST reference across all sharers
+    is gone — dead-tile freeing from the retention schedules composes with
+    sharing for free.  ``fork`` is the allocator half of copy-on-write: a
+    writer that holds a page jointly trades its reference for a fresh
+    private page (the engine copies the device rows)."""
 
     def __init__(self, n_pages: int):
         if n_pages < 1:
             raise ValueError(f"pool needs >= 1 page, got {n_pages}")
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
-        self._held = [False] * n_pages
+        self._refs = [0] * n_pages
         self.in_use = 0
         self.peak_in_use = 0
         self.alloc_count = 0
+        self.fork_count = 0
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    def page_refs(self, pid: int) -> int:
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        return self._refs[pid]
 
     def alloc(self) -> int:
         if not self._free:
@@ -395,23 +422,237 @@ class PagePool:
                 "(engine bug), admission should have backpressured"
             )
         pid = self._free.pop()
-        self._held[pid] = True
+        if self._refs[pid]:
+            # the free list must never hand out a page somebody still reads
+            # — this is the invariant the churn property test hammers
+            raise AssertionError(
+                f"free list handed out page {pid} with {self._refs[pid]} "
+                "live refs — refcount bookkeeping is corrupt"
+            )
+        self._refs[pid] = 1
         self.in_use += 1
         self.alloc_count += 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pid
 
+    def retain(self, pid: int) -> None:
+        """Add a sharer's reference to an allocated page (prefix aliasing)."""
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        if self._refs[pid] == 0:
+            raise ValueError(f"retain of free page {pid} — it could be "
+                             "reallocated under the new reader")
+        self._refs[pid] += 1
+
+    def fork(self, pid: int) -> int:
+        """Copy-on-write: move the caller's reference off shared page ``pid``
+        onto a freshly allocated private page (returned).  The caller owns
+        the device copy of the rows.  Forking an exclusively-held page is an
+        engine bug — the write could have gone in place."""
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        if self._refs[pid] == 0:
+            raise ValueError(f"fork of free page {pid}")
+        if self._refs[pid] == 1:
+            raise ValueError(
+                f"fork of exclusively-held page {pid} — write in place"
+            )
+        new = self.alloc()
+        self._refs[pid] -= 1  # never reaches zero here: refs were >= 2
+        self.fork_count += 1
+        return new
+
     def release(self, pid: int) -> None:
         if not 0 <= pid < self.n_pages:
             raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
-        if not self._held[pid]:
+        if self._refs[pid] == 0:
             # a double free would put the page on the free list twice and
             # later hand it to two requests — silent cross-request KV
             # corruption; fail loudly at the bug site instead
             raise ValueError(f"page id {pid} is not allocated (double free?)")
-        self._held[pid] = False
-        self._free.append(pid)
-        self.in_use -= 1
+        self._refs[pid] -= 1
+        if self._refs[pid] == 0:
+            self._free.append(pid)
+            self.in_use -= 1
+
+
+class _RadixNode:
+    """One edge of the prefix tree: a token run (length a multiple of the
+    page size, so ownership never tears a page) plus the physical pages
+    backing it.  ``children`` maps first-token -> LIST of nodes: when two
+    cached sequences diverge inside a page we cannot split at the true
+    divergence point, so sub-page-divergent siblings share a bucket instead
+    (bounded duplication, exact matching)."""
+
+    __slots__ = ("tokens", "pages", "children", "parent", "last_use")
+
+    def __init__(self, tokens: np.ndarray, pages: list[int], parent):
+        self.tokens = tokens
+        self.pages = pages
+        self.children: dict[int, list[_RadixNode]] = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+class RadixCache:
+    """SGLang-style radix tree over prompt token ids, owning KV pages of the
+    paged pool at tile granularity.
+
+    Every page a node owns carries ONE tree reference in the
+    :class:`PagePool`; requests that alias a cached prefix retain their own
+    references, so a page outlives the tree node (eviction) and the
+    requests (retirement) independently — it frees exactly when the last
+    reader across all sharers lets go.  ``match`` may extend partway into a
+    node's last page (the divergence frontier can sit mid-tile); the aliased
+    boundary page is then shared, and the engine CoW-forks it on the first
+    divergent write.  Eviction is LRU over leaves whose pages hold no
+    reference but the tree's — evicting a still-read node would free
+    nothing and orphan the sharers' accounting."""
+
+    def __init__(self, pool: PagePool, page: int):
+        self.pool = pool
+        self.page = page
+        self.root = _RadixNode(np.empty(0, np.int32), [], None)
+        self.clock = 0
+        self.held_pages = 0  # pages currently carrying a tree reference
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    @staticmethod
+    def _common(a: np.ndarray, b: np.ndarray) -> int:
+        n = min(len(a), len(b))
+        if n == 0:
+            return 0
+        eq = a[:n] == b[:n]
+        return int(eq.argmin()) if not eq.all() else n
+
+    def _best_child(self, node: _RadixNode, tokens: np.ndarray):
+        best, bk = None, 0
+        if len(tokens):
+            for child in node.children.get(int(tokens[0]), []):
+                k = self._common(tokens, child.tokens)
+                if k > bk:
+                    best, bk = child, k
+        return best, bk
+
+    def match(self, prompt: np.ndarray, cap: int) -> tuple[int, list[int]]:
+        """Longest cached prefix of ``prompt[:cap]``: returns (matched token
+        count m, physical pages covering positions 0..m-1).  The last page is
+        only partially matched when m lands mid-tile — aliasing it anyway is
+        what lets chunked prefill start exactly at the divergence frontier;
+        the engine must treat it as shared (fork before writing).  Touches
+        the walked path's LRU clocks."""
+        prompt = np.asarray(prompt, np.int32)
+        self.clock += 1
+        node, m, pages = self.root, 0, []
+        node.last_use = self.clock
+        while m < cap:
+            best, bk = self._best_child(node, prompt[m:cap])
+            if best is None or bk == 0:
+                break
+            best.last_use = self.clock
+            pages += best.pages[: -(-bk // self.page)]
+            m += bk
+            if bk < len(best.tokens):
+                break  # diverged (or cap) inside this edge
+            node = best
+        return m, pages
+
+    def insert(self, tokens: np.ndarray, pages: list[int]) -> None:
+        """Cache ``pages`` (full pages backing ``tokens``; len(tokens) ==
+        len(pages) * page) — the tree retains the pages not already covered
+        by an existing cached prefix."""
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) != len(pages) * self.page:
+            raise ValueError(
+                f"insert of {len(tokens)} tokens over {len(pages)} pages of "
+                f"{self.page} — only whole pages are cacheable"
+            )
+        self.clock += 1
+        node = self.root
+        node.last_use = self.clock
+        i = 0
+        while i < len(tokens):
+            best, bk = self._best_child(node, tokens[i:])
+            kp = (bk // self.page) * self.page  # page-aligned match depth
+            if best is not None and kp == len(best.tokens):
+                best.last_use = self.clock
+                node = best
+                i += kp
+                continue
+            if best is not None and kp > 0:
+                # diverges past a page boundary inside the edge: split there
+                best = self._split(best, kp)
+                best.last_use = self.clock
+                node = best
+                i += kp
+                continue
+            # no child, or divergence inside the first page: new sibling
+            new = _RadixNode(tokens[i:].copy(), list(pages[i // self.page:]), node)
+            new.last_use = self.clock
+            for p in new.pages:
+                self.pool.retain(p)
+            self.held_pages += len(new.pages)
+            self.inserted_pages += len(new.pages)
+            node.children.setdefault(int(tokens[i]), []).append(new)
+            return
+        # the whole run is already cached — nothing new to own
+
+    def _split(self, node: _RadixNode, kp: int) -> _RadixNode:
+        head = _RadixNode(node.tokens[:kp], node.pages[: kp // self.page],
+                          node.parent)
+        head.last_use = node.last_use
+        bucket = node.parent.children[int(node.tokens[0])]
+        bucket[bucket.index(node)] = head
+        node.tokens = node.tokens[kp:]
+        node.pages = node.pages[kp // self.page:]
+        node.parent = head
+        head.children = {int(node.tokens[0]): [node]}
+        return head
+
+    def _walk(self):
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for kids in n.children.values():
+                stack.extend(kids)
+            yield n
+
+    def evict(self, need: int) -> int:
+        """Free >= ``need`` pool pages by dropping least-recently-used cached
+        prefixes whose pages nobody else references; returns pages freed
+        (possibly fewer — everything left is either shared or interior)."""
+        freed = 0
+        while freed < need:
+            victim = None
+            for n in self._walk():
+                if n is self.root or n.children:
+                    continue  # interior nodes keep their prefix chain intact
+                if any(self.pool.page_refs(p) > 1 for p in n.pages):
+                    continue  # shared with an active request: frees nothing
+                if victim is None or n.last_use < victim.last_use:
+                    victim = n
+            if victim is None:
+                break
+            for p in victim.pages:
+                self.pool.release(p)
+            freed += len(victim.pages)
+            self.held_pages -= len(victim.pages)
+            self.evicted_pages += len(victim.pages)
+            bucket = victim.parent.children[int(victim.tokens[0])]
+            bucket.remove(victim)
+            if not bucket:
+                del victim.parent.children[int(victim.tokens[0])]
+        return freed
+
+    def clear(self) -> None:
+        """Drop every tree reference (end of run): pages shared with live
+        readers survive until those readers release."""
+        for n in self._walk():
+            for p in n.pages:
+                self.pool.release(p)
+        self.root = _RadixNode(np.empty(0, np.int32), [], None)
+        self.held_pages = 0
 
 
 @dataclasses.dataclass
@@ -519,6 +760,18 @@ class ServeLoop:
     so RoPE angles, cache writes and live-KV masks are all per-request.
     Prompts are *right*-padded / chunk-aligned — real tokens at positions
     0..L-1, positions and causal masks exact, pad keys never attended.
+
+    ``paged=True`` additionally runs a radix-tree **prefix cache**
+    (``prefix_cache=False`` disables it): completed prompts donate their
+    full KV pages to a :class:`RadixCache`, admission longest-prefix
+    matches new prompts against it, and a hit aliases the matched physical
+    pages into the request's page table — prefill then starts at the
+    divergence frontier and the admission reservation covers only the
+    unique suffix.  Shared pages are refcounted in the :class:`PagePool`
+    and copy-on-write forked before any divergent write.  Prefix caching
+    is inherently a no-op on the contiguous engines (ring caches and
+    encoder-decoder stacks own per-slot rows — there is no indirection
+    layer to alias).
     """
 
     def __init__(
@@ -528,6 +781,7 @@ class ServeLoop:
         chunked: bool = False, chunk_size: int = 32,
         chunk_budget: int | None = None, paged: bool = False,
         page: int | None = None, pool_pages: int | None = None,
+        prefix_cache: bool = True,
     ):
         cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
         if cfg.sliding_window and cache_len < cfg.sliding_window:
@@ -605,8 +859,12 @@ class ServeLoop:
                 raise ValueError(
                     f"pool_pages must be >= 1, got {self.pool_pages}"
                 )
-            self._sched_cache: dict[tuple[int, int], _PagedSlot] = {}
-            self.p_prefill_fn, self.p_decode_fn, self.p_chunk_fn = make_paged_fns(
+            # prefix sharing: radix cache built per run (it owns pool pages)
+            self.prefix_cache = prefix_cache
+            self.radix: RadixCache | None = None
+            self._sched_cache: dict[tuple[int, int, int], _PagedSlot] = {}
+            (self.p_prefill_fn, self.p_decode_fn, self.p_chunk_fn,
+             self.p_copy_fn) = make_paged_fns(
                 cfg, mesh, n_pages=self.pool_pages, page=self.page,
                 chunk=chunk_size,
             )
@@ -725,15 +983,20 @@ class ServeLoop:
             is_leaf=lambda x: isinstance(x, shd.ParamSpec),
         )
 
-    def _paged_schedule(self, length: int, step_span: int) -> _PagedSlot:
+    def _paged_schedule(
+        self, length: int, step_span: int, start_tile: int = 0
+    ) -> _PagedSlot:
         """Retention schedule for one request whose written positions span
         ``0..length-1``: per-tile last-reader positions (the union over every
         attention slot's pattern — one page table serves all layers) and the
         max-future-residency curve that backs the reservation discipline.
         ``step_span`` is the engine's largest single advance (chunk size, or
         the whole prompt for a monolithic admission prefill) — tiles
-        allocated mid-step widen residency by that much."""
-        key = (length, step_span)
+        allocated mid-step widen residency by that much.  ``start_tile > 0``
+        prices only the unique suffix of a prefix-cache hit: aliased tiles
+        are carried by the radix cache's references, the request allocates
+        nothing below its divergence tile."""
+        key = (length, step_span, start_tile)
         sc = self._sched_cache.get(key)
         if sc is not None:
             return sc
@@ -746,7 +1009,9 @@ class ServeLoop:
         last = sparsity.page_last_reader_union(
             pats, length, spec.q_tile, self.page, pattern_arg=spec.pattern_arg
         )
-        res = sparsity.page_residency(last, length, self.page, step_span)
+        res = sparsity.page_residency(
+            last, length, self.page, step_span, start_tile
+        )
         peak_from = np.maximum.accumulate(res[::-1])[::-1]
         sc = _PagedSlot(last_reader=last, peak_from=peak_from, length=length)
         self._sched_cache[key] = sc
@@ -762,12 +1027,24 @@ class ServeLoop:
             if active[s] is not None
         )
 
-    def _alloc_tiles(self, pool, pt, slot: int, lo_pos: int, hi_pos: int):
-        """Ensure every virtual tile overlapping positions [lo_pos, hi_pos)
-        is backed by a physical page before the step that writes it."""
+    def _ensure_writable(self, pool, pt, slot: int, lo_pos: int, hi_pos: int,
+                         caches):
+        """Back every virtual tile overlapping positions [lo_pos, hi_pos)
+        with a page this request may WRITE before the step that writes it:
+        unbacked tiles allocate; tiles whose physical page is shared (an
+        aliased prefix boundary, or a page the radix cache still owns)
+        copy-on-write fork — pool fork + device row copy + table repoint —
+        so the divergent write lands in a private copy instead of corrupting
+        siblings.  Returns the (possibly copied-into) pools."""
         for t in range(lo_pos // self.page, (hi_pos - 1) // self.page + 1):
-            if pt[slot, t] == self.pool_pages:
+            pid = int(pt[slot, t])
+            if pid == self.pool_pages:
                 pt[slot, t] = pool.alloc()
+            elif pool.page_refs(pid) > 1:
+                new = pool.fork(pid)
+                caches = self.p_copy_fn(caches, jnp.int32(pid), jnp.int32(new))
+                pt[slot, t] = new
+        return caches
 
     def _free_dead(self, pool, pt, slot: int, sc: _PagedSlot, frontier: int):
         """Release pages whose last possible reader is behind the request's
@@ -785,6 +1062,111 @@ class ServeLoop:
             if pt[slot, t] != self.pool_pages:
                 pool.release(int(pt[slot, t]))
                 pt[slot, t] = self.pool_pages
+
+    # -- prefix cache (radix tree over the page pool) ---------------------
+
+    def _prefill_flop_count(self, pos0: int, t: int) -> float:
+        """Analytic admission-side prefill work for ``t`` prompt tokens
+        entering at absolute position ``pos0``: linear stack FLOPs plus the
+        exact causal attention term.  This is what the --check-prefix gate
+        compares — prefix hits skip the matched positions entirely, so the
+        number scales with unique suffixes, not requests."""
+        cfg = self.cfg
+        n_attn = sum(
+            1 for s in cfg.period_slots if s.mixer == "attn"
+        ) * cfg.n_periods
+        attn = 4.0 * cfg.n_heads * cfg.head_dim * n_attn * (
+            t * pos0 + t * (t + 1) / 2.0
+        )
+        return t * M.model_flops_per_token(cfg, 1, mode="fwd") + attn
+
+    def _match_prefix(self, r: Request) -> tuple[int, list[int]]:
+        """Longest-prefix match at admission.  Caps the match at plen-1 (the
+        last prompt token must run to produce first-token logits) and skips
+        sub-page matches (no page to alias).  The caller must retain the
+        returned pages before anything else can evict them."""
+        if self.radix is None:
+            return 0, []
+        plen = len(r.prompt)
+        m, pages = self.radix.match(np.asarray(r.prompt, np.int32), plen - 1)
+        if m < self.page:
+            return 0, []
+        return m, pages
+
+    def _fits(self, need: int) -> int:
+        """Reservation check against the pool, counting the radix cache's
+        held pages; under pressure, LRU-evicts unreferenced cached prefixes.
+        Returns the residual gap (<= 0 means the reservation fits)."""
+        held = self.radix.held_pages if self.radix is not None else 0
+        gap = need + held - self.pool_pages
+        if gap > 0 and self.radix is not None:
+            self.radix.evict(gap)
+            gap = need + self.radix.held_pages - self.pool_pages
+        return gap
+
+    def _cache_prefix(self, r: Request, pt, slot: int) -> None:
+        """On prompt completion, hand the prompt's full, still-resident pages
+        to the radix cache (shared ownership).  Retention may already have
+        freed mid-prompt tiles (butterfly streams past them) — only the
+        contiguous resident run from tile 0 is cacheable."""
+        if self.radix is None:
+            return
+        k = len(r.prompt) // self.page
+        run = 0
+        while run < k and pt[slot, run] != self.pool_pages:
+            run += 1
+        if run:
+            self.radix.insert(
+                np.asarray(r.prompt[: run * self.page], np.int32),
+                [int(pt[slot, t]) for t in range(run)],
+            )
+
+    def _suffix_prefill(self, r: Request, m: int, sc: _PagedSlot, pool, pt,
+                        slot: int, caches):
+        """Admission-mode prefill of a prefix-cache hit: stream ONLY the
+        unique suffix (positions m..plen-1) through the paged chunk entry
+        point — prefill starts at the divergence frontier, attending the
+        aliased prefix pages through the page table.  The first chunk
+        CoW-forks the partially-shared boundary tile.  Dead tiles free
+        between chunks (the unique-suffix reservation is priced at
+        chunk-size spans, so the stream must keep that schedule).  Returns
+        (first sampled token — device scalar, pools)."""
+        C = self.chunk_size
+        plen = len(r.prompt)
+        p = m
+        logits1 = None
+        while p < plen:
+            t = min(C, plen - p)
+            caches = self._ensure_writable(pool, pt, slot, p, p + t, caches)
+            ctoks = np.zeros((1, C), np.int32)
+            ctoks[0, :t] = r.prompt[p : p + t]
+            kv_live = _next_bucket(p + t, self.cache_len)
+            logits1, caches = self.p_chunk_fn(
+                self.params, caches, jnp.asarray(ctoks),
+                jnp.asarray(pt[slot : slot + 1]), jnp.int32(p), jnp.int32(t),
+                kv_live,
+            )
+            self.stats["chunk_calls"] = self.stats.get("chunk_calls", 0) + 1
+            self.stats["prefill_tokens"] += t
+            self.stats["prefill_flops"] += self._prefill_flop_count(p, t)
+            p += t
+            self._free_dead(pool, pt, slot, sc, p)
+        return jnp.argmax(logits1).astype(jnp.int32), caches
+
+    def _finish_paged_run(self, pool) -> None:
+        """End-of-run bookkeeping shared by both paged loops: surface the
+        prefix-cache counters, then drop the tree's references — the pool
+        must drain to zero (every refcount released)."""
+        self.stats["pool_pages"] = self.pool_pages
+        self.stats["pool_peak_pages"] = pool.peak_in_use
+        self.stats["page_allocs"] = pool.alloc_count
+        self.stats["cow_forks"] = pool.fork_count
+        if self.radix is not None:
+            self.stats["prefix_cached_pages_end"] = self.radix.held_pages
+            self.stats["prefix_inserted_pages"] = self.radix.inserted_pages
+            self.stats["prefix_evicted_pages"] = self.radix.evicted_pages
+            self.radix.clear()
+            self.radix = None
 
     def _run_admission(self, requests: list[Request]) -> list[Request]:
         """Admission-prefill engine: per-slot prefill + cache insert, then
@@ -1011,7 +1393,12 @@ class ServeLoop:
         then ragged paged decode waves.  A free SLOT no longer suffices for
         admission — the request must also reserve its worst-case resident
         page count; otherwise it backpressures in FIFO order until decode
-        frees pages.  Resident HBM is the pool, not batch x cache_len."""
+        frees pages.  Resident HBM is the pool, not batch x cache_len.
+
+        With the radix prefix cache on, admission first longest-prefix
+        matches the prompt: a hit aliases the cached pages into the page
+        table, reserves only the unique-suffix peak, and prefills JUST the
+        suffix from the divergence frontier (via the chunk entry point)."""
         B = self.batch
         queue = list(requests)
         qi = 0
@@ -1023,10 +1410,13 @@ class ServeLoop:
         pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
         pool = PagePool(self.pool_pages)
         self.pool = pool
+        self.radix = RadixCache(pool, self.page) if self.prefix_cache else None
         fetch = _AsyncTokens(lag=1)
         self.stats = {
             "prefill_calls": 0, "decode_steps": 0, "admission_stall_steps": 0,
             "admission_backpressure": 0, "max_concurrent": 0,
+            "prefill_tokens": 0, "prefill_flops": 0.0,
+            "prefix_hits": 0, "prefix_hit_tokens": 0,
         }
         clock = 0
         with self.mesh:
@@ -1040,28 +1430,61 @@ class ServeLoop:
                     r = queue[qi]
                     plen = len(r.prompt)
                     L = plen + r.max_new - 1
-                    sc = self._paged_schedule(L, step_span=plen)
-                    committed = self._committed(active, sched, pos)
-                    if committed + sc.remaining_peak(0) > self.pool_pages:
-                        # out of pages: the head waits for decode to free
-                        # some — backpressure, not an error
-                        self.stats["admission_backpressure"] += 1
-                        break
+                    # prefix hit: alias cached pages, reserve the unique
+                    # suffix only; fall back to a cold admission if even
+                    # that reservation cannot fit
+                    m, spages = self._match_prefix(r)
+                    if m:
+                        for p in spages:
+                            pool.retain(p)
+                        sc = self._paged_schedule(
+                            L, step_span=self.chunk_size,
+                            start_tile=m // self.page,
+                        )
+                        committed = self._committed(active, sched, pos)
+                        if self._fits(committed + sc.remaining_peak(m)) > 0:
+                            for p in spages:
+                                pool.release(p)
+                            m, spages = 0, []
+                    if not m:
+                        sc = self._paged_schedule(L, step_span=plen)
+                        committed = self._committed(active, sched, pos)
+                        if self._fits(committed + sc.remaining_peak(0)) > 0:
+                            # out of pages: the head waits for decode to free
+                            # some — backpressure, not an error
+                            self.stats["admission_backpressure"] += 1
+                            break
                     qi += 1
                     if any(a is not None for a in active):
                         self.stats["admission_stall_steps"] += 1
-                    self._alloc_tiles(pool, pt, slot, 0, plen)
-                    bucket = _next_bucket(plen, self.cache_len)
-                    toks = np.zeros((1, bucket), np.int32)
-                    toks[0, :plen] = r.prompt
-                    logits, caches = self.p_prefill_fn(
-                        self.params, caches, {"tokens": jnp.asarray(toks)},
-                        jnp.asarray([plen], jnp.int32),
-                        jnp.asarray(pt[slot : slot + 1]),
-                    )
-                    self.stats["prefill_calls"] += 1
-                    tok = jnp.argmax(logits[0]).astype(jnp.int32)
+                    if m:
+                        for i, p in enumerate(spages):
+                            pt[slot, i] = p
+                        self.stats["prefix_hits"] += 1
+                        self.stats["prefix_hit_tokens"] += m
+                        tok, caches = self._suffix_prefill(
+                            r, m, sc, pool, pt, slot, caches
+                        )
+                    else:
+                        caches = self._ensure_writable(
+                            pool, pt, slot, 0, plen, caches
+                        )
+                        bucket = _next_bucket(plen, self.cache_len)
+                        toks = np.zeros((1, bucket), np.int32)
+                        toks[0, :plen] = r.prompt
+                        logits, caches = self.p_prefill_fn(
+                            self.params, caches, {"tokens": jnp.asarray(toks)},
+                            jnp.asarray([plen], jnp.int32),
+                            jnp.asarray(pt[slot : slot + 1]),
+                        )
+                        self.stats["prefill_calls"] += 1
+                        self.stats["prefill_tokens"] += plen
+                        self.stats["prefill_flops"] += (
+                            self._prefill_flop_count(0, plen)
+                        )
+                        tok = jnp.argmax(logits[0]).astype(jnp.int32)
                     fetch.push(tok, [(r, 0)])
+                    self._cache_prefix(r, pt, slot)
                     if r.max_new <= 1:
                         self._free_all(pool, pt, slot)
                         continue  # done at prefill; slot and pages free
@@ -1078,13 +1501,15 @@ class ServeLoop:
                 if not any(r is not None for r in active):
                     clock += 1
                     continue
-                # ragged paged decode wave: allocate each row's write tile,
-                # then every row streams its own live pages through its
-                # page-table row at the bucketed virtual depth
+                # ragged paged decode wave: back each row's write tile (CoW-
+                # forking a still-shared boundary tile), then every row
+                # streams its own live pages through its page-table row at
+                # the bucketed virtual depth
                 for slot in range(B):
                     if active[slot] is not None:
-                        self._alloc_tiles(
-                            pool, pt, slot, int(pos[slot]), int(pos[slot]) + 1
+                        caches = self._ensure_writable(
+                            pool, pt, slot, int(pos[slot]),
+                            int(pos[slot]) + 1, caches,
                         )
                 hot = max(int(pos[s]) for s in range(B)
                           if active[s] is not None) + 1
@@ -1118,9 +1543,7 @@ class ServeLoop:
                 fetch.push(toks, sinks)
                 nxt = toks
         fetch.flush()
-        self.stats["pool_pages"] = self.pool_pages
-        self.stats["pool_peak_pages"] = pool.peak_in_use
-        self.stats["page_allocs"] = pool.alloc_count
+        self._finish_paged_run(pool)
         return requests
 
     def _run_paged_chunked(self, requests: list[Request]) -> list[Request]:
@@ -1130,7 +1553,13 @@ class ServeLoop:
         lazily at each row's write frontier and free as soon as the
         retention schedule says no future query can read them — a butterfly
         prompt releases most of its tiles WHILE it streams in, which is the
-        capacity win the paged_capacity benchmark measures."""
+        capacity win the paged_capacity benchmark measures.
+
+        A radix prefix-cache hit admits at the divergence frontier: the
+        matched pages alias into the slot's page table, ``pos``/``consumed``
+        start at the matched length, and the reservation covers only the
+        unique suffix — chunk streaming then picks up mid-prompt exactly as
+        if the prefix had already streamed."""
         B, C = self.batch, self.chunk_size
         queue = list(requests)
         qi = 0
@@ -1143,12 +1572,14 @@ class ServeLoop:
         pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
         pool = PagePool(self.pool_pages)
         self.pool = pool
+        self.radix = RadixCache(pool, self.page) if self.prefix_cache else None
         fetch = _AsyncTokens(lag=1)
         self.stats = {
             "prefill_calls": 0, "mixed_steps": 0, "chunk_calls": 0,
             "decode_steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
             "decode_stall_steps": 0, "overlap_steps": 0,
             "admission_backpressure": 0, "max_concurrent": 0,
+            "prefill_flops": 0.0, "prefix_hits": 0, "prefix_hit_tokens": 0,
         }
         clock = 0
         rr = 0
@@ -1164,16 +1595,34 @@ class ServeLoop:
                         continue
                     r = queue[qi]
                     L = len(r.prompt) + r.max_new - 1
-                    sc = self._paged_schedule(L, step_span=C)
-                    committed = self._committed(active, sched, pos)
-                    if committed + sc.remaining_peak(0) > self.pool_pages:
-                        self.stats["admission_backpressure"] += 1
-                        break
+                    m, spages = self._match_prefix(r)
+                    if m:
+                        for p in spages:
+                            pool.retain(p)
+                        sc = self._paged_schedule(
+                            L, step_span=C, start_tile=m // self.page
+                        )
+                        committed = self._committed(active, sched, pos)
+                        if self._fits(committed + sc.remaining_peak(m)) > 0:
+                            for p in spages:
+                                pool.release(p)
+                            m, spages = 0, []
+                    if not m:
+                        sc = self._paged_schedule(L, step_span=C)
+                        committed = self._committed(active, sched, pos)
+                        if self._fits(committed + sc.remaining_peak(0)) > 0:
+                            self.stats["admission_backpressure"] += 1
+                            break
                     qi += 1
+                    if m:
+                        for i, p in enumerate(spages):
+                            pt[slot, i] = p
+                        self.stats["prefix_hits"] += 1
+                        self.stats["prefix_hit_tokens"] += m
                     active[slot] = r
                     sched[slot] = sc
-                    pos[slot] = 0
-                    consumed[slot] = 0
+                    pos[slot] = m
+                    consumed[slot] = m
                     remaining[slot] = r.max_new
                 self.stats["max_concurrent"] = max(
                     self.stats["max_concurrent"],
@@ -1214,22 +1663,28 @@ class ServeLoop:
                 if dec_rows and chunk_rows:
                     self.stats["overlap_steps"] += 1
                 # (a) paged decode wave: every decoding row advances through
-                # the decode grid; non-decoding rows' writes drop on their
-                # sentinel page tables (retired) or are overwritten by their
-                # own next chunk (mid-prompt)
+                # the decode grid; non-decoding rows run with a sentinel
+                # page-table row so their garbage write DROPS — a mid-prompt
+                # row's frontier tile may alias a shared prefix page, which
+                # an unmasked write would corrupt for every sibling
                 if dec_rows:
                     for slot in dec_rows:
-                        self._alloc_tiles(
-                            pool, pt, slot, int(pos[slot]), int(pos[slot]) + 1
+                        caches = self._ensure_writable(
+                            pool, pt, slot, int(pos[slot]),
+                            int(pos[slot]) + 1, caches,
                         )
                     hot = max(int(pos[s]) + 1 for s in dec_rows)
                     kv_live = _next_bucket(hot, self.cache_len)
                     self.stats["decode_kv_live_max"] = max(
                         self.stats.get("decode_kv_live_max", 0), kv_live
                     )
+                    use = np.asarray(use_nxt)
+                    pt_wave = np.where(
+                        use[:, None], pt, np.int32(self.pool_pages)
+                    ).astype(np.int32)
                     logits, caches = self.p_decode_fn(
                         self.params, caches, nxt[:, None], jnp.asarray(pos),
-                        jnp.asarray(pt), kv_live,
+                        jnp.asarray(pt_wave), kv_live,
                     )
                     toks = jnp.argmax(logits, -1).astype(jnp.int32)
                     self.stats["decode_steps"] += 1
@@ -1256,8 +1711,9 @@ class ServeLoop:
                 for slot in chunk_rows:
                     r = active[slot]
                     t = int(chunk_t[slot])
-                    self._alloc_tiles(
-                        pool, pt, slot, int(pos[slot]), int(pos[slot]) + t
+                    caches = self._ensure_writable(
+                        pool, pt, slot, int(pos[slot]), int(pos[slot]) + t,
+                        caches,
                     )
                     ctoks = np.zeros((1, C), np.int32)
                     ctoks[0, :t] = r.prompt[consumed[slot] : consumed[slot] + t]
@@ -1269,9 +1725,13 @@ class ServeLoop:
                     )
                     self.stats["chunk_calls"] += 1
                     self.stats["prefill_tokens"] += t
+                    self.stats["prefill_flops"] += self._prefill_flop_count(
+                        int(pos[slot]), t
+                    )
                     pos[slot] += t
                     consumed[slot] += t
                     if consumed[slot] == len(r.prompt):
+                        self._cache_prefix(r, pt, slot)
                         tok1 = jnp.argmax(logits1).astype(jnp.int32)
                         fetch.push(tok1, [(r, 0)])
                         nxt = nxt.at[slot].set(tok1)
@@ -1283,7 +1743,5 @@ class ServeLoop:
                             continue
                     self._free_dead(pool, pt, slot, sched[slot], int(pos[slot]))
         fetch.flush()
-        self.stats["pool_pages"] = self.pool_pages
-        self.stats["pool_peak_pages"] = pool.peak_in_use
-        self.stats["page_allocs"] = pool.alloc_count
+        self._finish_paged_run(pool)
         return requests

@@ -386,7 +386,13 @@ def gather_pages(
     (B, n_vtiles) physical page ids (sentinel ``n_pages`` = unallocated) ->
     (B, n_rows, KV, hd).  Unallocated tiles gather clamped garbage — every
     consumer masks them (causal frontier / cur_len / pattern), exactly as the
-    contiguous engine masks its unwritten rows."""
+    contiguous engine masks its unwritten rows.
+
+    Aliasing is transparent here: with the radix prefix cache, SEVERAL rows'
+    tables (and several virtual tiles, in principle) may name the same
+    physical page — a pure read-side gather returns each row its own view of
+    the shared rows, bit-identical to a private copy, so the XLA forms need
+    no CoW awareness (the host engine forks pages before any write)."""
     n_pages = pool.shape[0] // page
     rows = jnp.arange(n_rows, dtype=jnp.int32)
     vt = rows // page  # (n_rows,)

@@ -187,7 +187,15 @@ def _paged_kv_write(
     page`` of the flat pool (n_pages * page, KV, hd).  Rows that are invalid
     (beyond ``ntok`` / ``lengths``) or whose virtual tile is unallocated
     (sentinel id) scatter out of bounds and are dropped — a row can never
-    clobber a page it does not own."""
+    clobber a page it does not own.
+
+    Copy-on-write contract: with prefix sharing, a page table entry may
+    alias a physical page other requests (or the host radix cache) also
+    read.  The scatter itself cannot know refcounts, so the HOST must
+    guarantee every tile overlapping a write range is exclusively held
+    before the step — ``ServeLoop._ensure_writable`` forks shared pages
+    (``PagePool.fork`` + :func:`paged_copy_page`) and repoints the table
+    entry, making the first divergent write land in a private copy."""
     n_pages = pool.shape[0] // page
     vt = jnp.clip(rows // page, 0, page_table.shape[1] - 1)
     phys = jnp.take_along_axis(page_table, vt, axis=1)
@@ -196,6 +204,21 @@ def _paged_kv_write(
     return pool.at[flat.reshape(-1)].set(
         new.astype(pool.dtype).reshape(-1, *new.shape[2:]), mode="drop"
     )
+
+
+def paged_copy_page(caches: dict, src: jax.Array, dst: jax.Array, page: int) -> dict:
+    """Copy physical page ``src``'s rows onto page ``dst`` in every pool leaf
+    — the device half of a copy-on-write fork.  ``src``/``dst`` are traced
+    scalars so the host engine compiles this once; positions the copied page
+    holds that the forking request has not written yet are either identical
+    prefix KV (shared tokens) or masked by the causal frontier until the
+    request overwrites them."""
+
+    def cp(c):  # (n_periods, n_pages * page, KV, hd)
+        rows = jax.lax.dynamic_slice_in_dim(c, src * page, page, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(c, rows, dst * page, axis=1)
+
+    return jax.tree.map(cp, caches)
 
 
 def apply_attention(

@@ -69,6 +69,55 @@ def test_page_pool_exhaustion_raises():
         pool.release(a)
 
 
+def test_page_pool_refcount_sharing():
+    """Refcounted sharing semantics behind the radix cache: retain adds a
+    reader, release drops one (page frees only at zero), fork moves the
+    caller's ref onto a fresh private page, and misuse — retain/fork of a
+    free page, fork of an exclusively-held page — fails loudly instead of
+    corrupting a sibling's KV."""
+    pool = PagePool(4)
+    a = pool.alloc()
+    pool.retain(a)  # second reader (e.g. radix cache holds the page)
+    pool.retain(a)
+    assert pool.page_refs(a) == 3
+    pool.release(a)
+    pool.release(a)
+    assert pool.page_refs(a) == 1 and pool.in_use == 1
+    # exclusively held -> fork is an engine bug (write could go in place)
+    with pytest.raises(ValueError, match="exclusively"):
+        pool.fork(a)
+    pool.retain(a)
+    b = pool.fork(a)  # CoW: caller's ref moves to the private copy
+    assert b != a
+    assert pool.page_refs(a) == 1 and pool.page_refs(b) == 1
+    assert pool.fork_count == 1
+    pool.release(a)
+    pool.release(b)
+    assert pool.in_use == 0
+    with pytest.raises(ValueError, match="retain of free"):
+        pool.retain(a)
+    with pytest.raises(ValueError, match="fork of free"):
+        pool.fork(a)
+    with pytest.raises(ValueError):
+        pool.page_refs(99)
+
+
+def test_page_pool_shared_page_survives_one_readers_exit():
+    """The retention contract prefix sharing needs: with two readers on one
+    page, the first reader's full release path must NOT return the page to
+    the free list — a fresh alloc gets a different page id."""
+    pool = PagePool(2)
+    shared = pool.alloc()
+    pool.retain(shared)  # second request aliases the prefix page
+    pool.release(shared)  # first request finishes
+    assert pool.page_refs(shared) == 1
+    other = pool.alloc()  # must not be `shared` — it still has a reader
+    assert other != shared
+    pool.release(other)
+    pool.release(shared)
+    assert pool.in_use == 0 and pool.free_pages == 2
+
+
 # --------------------------------------------------------------------------
 # Translation + retention schedules
 # --------------------------------------------------------------------------

@@ -1,0 +1,109 @@
+"""PagePool refcount churn: the free list never hands out a referenced page.
+
+Property test over random alloc/retain/fork/release storms.  The invariant
+under attack is the one prefix sharing leans on: a physical page backing N
+readers (request page tables + the radix cache) must stay off the free list
+until the LAST reference is released — otherwise two requests silently share
+KV rows that one of them is about to overwrite.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade to skips without it
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.serve import PagePool
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_pages=st.integers(min_value=1, max_value=17),
+    ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "retain", "fork", "release"]),
+                  st.integers(min_value=0, max_value=10**6)),
+        min_size=1, max_size=300,
+    ),
+)
+def test_pool_churn_never_leaks_referenced_pages(n_pages, ops):
+    """Model-based check: mirror the pool with a plain dict of refcounts and
+    a multiset of outstanding references; after every op the pool's view must
+    match the model, and alloc must only ever return pages the model says are
+    free.  fork() conserves total references (caller's ref moves)."""
+    pool = PagePool(n_pages)
+    refs: dict[int, int] = {}  # model: pid -> live refcount
+    held: list[int] = []  # outstanding references, one entry each
+
+    for op, pick in ops:
+        if op == "alloc":
+            if pool.free_pages:
+                pid = pool.alloc()
+                assert refs.get(pid, 0) == 0, "free list handed out a referenced page"
+                refs[pid] = 1
+                held.append(pid)
+        elif op == "retain" and held:
+            pid = held[pick % len(held)]
+            pool.retain(pid)
+            refs[pid] += 1
+            held.append(pid)
+        elif op == "fork" and held:
+            i = pick % len(held)
+            pid = held[i]
+            if refs[pid] >= 2 and pool.free_pages:
+                new = pool.fork(pid)
+                assert refs.get(new, 0) == 0, "fork returned a referenced page"
+                assert new != pid
+                refs[pid] -= 1
+                refs[new] = 1
+                held[i] = new
+            else:
+                with pytest.raises((ValueError, RuntimeError)):
+                    pool.fork(pid)
+        elif op == "release" and held:
+            pid = held.pop(pick % len(held))
+            pool.release(pid)
+            refs[pid] -= 1
+            if refs[pid] == 0:
+                del refs[pid]
+        # conservation + agreement with the model after every step
+        assert pool.in_use == len(refs)
+        assert pool.in_use + pool.free_pages == n_pages
+        for pid, r in refs.items():
+            assert pool.page_refs(pid) == r
+        assert sum(refs.values()) == len(held)
+
+    # drain: after all outstanding refs go, every page id is allocatable again
+    for pid in held:
+        pool.release(pid)
+    assert pool.in_use == 0
+    got = sorted(pool.alloc() for _ in range(n_pages))
+    assert got == list(range(n_pages))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pool_random_walk_free_list_integrity(seed):
+    """Unstructured storm driven by a PRNG: interleave all four ops with
+    whatever arguments are currently legal and check the free list and the
+    refcount vector never disagree (the alloc-time assert stays silent)."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(int(rng.integers(2, 12)))
+    held: list[int] = []
+    for _ in range(400):
+        r = rng.random()
+        if r < 0.35 and pool.free_pages:
+            held.append(pool.alloc())
+        elif r < 0.55 and held:
+            pid = held[int(rng.integers(len(held)))]
+            pool.retain(pid)
+            held.append(pid)
+        elif r < 0.7 and held and pool.free_pages:
+            i = int(rng.integers(len(held)))
+            if pool.page_refs(held[i]) >= 2:
+                held[i] = pool.fork(held[i])
+        elif held:
+            pool.release(held.pop(int(rng.integers(len(held)))))
+        assert pool.in_use + pool.free_pages == pool.n_pages
+    for pid in held:
+        pool.release(pid)
+    assert pool.in_use == 0
