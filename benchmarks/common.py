@@ -79,10 +79,34 @@ def emit(rows: list[tuple[str, float, str]]):
         print(f"{name},{us:.3f},{derived}")
 
 
+def _bench_stamp() -> dict:
+    """Provenance stamp for a BENCH section: the repo HEAD sha and an ISO
+    UTC timestamp, so every row in the perf trajectory is attributable to
+    the commit that produced it.  Outside a git checkout sha is None."""
+    import datetime
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    now = datetime.datetime.now(datetime.timezone.utc)
+    return {
+        "git_sha": sha,
+        "written_at": now.isoformat(timespec="seconds"),
+    }
+
+
 def write_bench_json(path: str, section: str, rows: list[dict]) -> None:
     """Merge ``rows`` under ``section`` into the machine-readable perf file
     (``BENCH_attention.json``): each benchmark owns one section, re-runs
-    replace it, other sections survive — the cross-PR perf trajectory."""
+    replace it, other sections survive — the cross-PR perf trajectory.
+    Each section is stamped with the producing commit's sha and an ISO
+    timestamp (``meta``); the measurements live under ``rows``."""
     data: dict = {}
     if os.path.exists(path):
         try:
@@ -90,7 +114,7 @@ def write_bench_json(path: str, section: str, rows: list[dict]) -> None:
                 data = json.load(f)
         except (OSError, json.JSONDecodeError):
             data = {}
-    data[section] = rows
+    data[section] = {"meta": _bench_stamp(), "rows": rows}
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
         f.write("\n")

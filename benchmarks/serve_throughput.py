@@ -16,6 +16,10 @@ Scenarios (``--scenario``):
 * ``long_prompt``  short decoders in flight when one near-cache-length
                    prompt arrives mid-decode — the admission-stall showcase
 * ``burst``        arrivals in bursts of batch-size groups
+* ``sliding_window``  ragged traffic under a sliding-window config (the
+                   contiguous modes serve the seed per-slot ring; chunked/
+                   paged serve mod-window ring page tables; ``--window``
+                   overrides the default cache_len // 4)
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--attn both]
         [--pattern butterfly] [--scenario long_prompt] [--modes all]
@@ -132,6 +136,21 @@ def shared_prefix_workload(cfg, n: int, cache_len: int, seed: int) -> list[Reque
     return reqs
 
 
+def sliding_window_workload(cfg, n: int, cache_len: int, seed: int) -> list[Request]:
+    """Ragged traffic for a sliding-window config (``main`` applies the
+    window to the model): prompts deep enough that decode laps the
+    mod-window ring, so static/continuous exercise the seed contiguous ring
+    while chunked/paged stream the same requests through ring page tables."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(cache_len // 4, 3), max(3 * cache_len // 4, 4)))
+        max_new = int(rng.integers(3, max(4, cache_len // 4)))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        reqs.append(Request(uid=i, prompt=prompt, max_new=max_new))
+    return reqs
+
+
 def make_workload(cfg, scenario: str, n: int, cache_len: int, seed: int, batch: int):
     if scenario == "mixed":
         return mixed_workload(cfg, n, cache_len, seed)
@@ -141,6 +160,8 @@ def make_workload(cfg, scenario: str, n: int, cache_len: int, seed: int, batch: 
         return burst_workload(cfg, n, cache_len, seed, batch)
     if scenario == "shared_prefix":
         return shared_prefix_workload(cfg, n, cache_len, seed)
+    if scenario == "sliding_window":
+        return sliding_window_workload(cfg, n, cache_len, seed)
     raise ValueError(f"unknown scenario {scenario!r}")
 
 
@@ -183,7 +204,11 @@ def main() -> None:
     ap.add_argument("--pattern", default="dense",
                     choices=["dense", "butterfly", "strided", "global_window"])
     ap.add_argument("--scenario", default="mixed",
-                    choices=["mixed", "long_prompt", "burst", "shared_prefix"])
+                    choices=["mixed", "long_prompt", "burst", "shared_prefix",
+                             "sliding_window"])
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding window for the sliding_window scenario "
+                         "(default cache_len // 4)")
     ap.add_argument("--modes", default="all",
                     help="comma list of static,continuous,chunked (or 'all')")
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -203,6 +228,14 @@ def main() -> None:
                          "requests at a fixed page-pool budget (deterministic "
                          "capacity sub-benchmark; emits the paged_capacity "
                          "BENCH section)")
+    ap.add_argument("--check-ring", action="store_true",
+                    help="CI gate: paged mod-window ring token-identical to "
+                         "the seed contiguous ring engine on prompts that "
+                         "lap the ring, with peak resident pages <= the "
+                         "window reservation (batch x ring_tiles) and below "
+                         "the dense reservation (deterministic "
+                         "sub-benchmark; emits the ring_capacity BENCH "
+                         "section)")
     ap.add_argument("--check-prefix", action="store_true",
                     help="CI gate: 4 requests sharing a 4k-token prefix must "
                          "cost >= 3x less admission prefill FLOPs and peak "
@@ -215,6 +248,10 @@ def main() -> None:
     args = ap.parse_args()
 
     base = dataclasses.replace(registry.get(args.arch, reduced=True), dtype="float32")
+    if args.scenario == "sliding_window":
+        base = dataclasses.replace(
+            base, sliding_window=args.window or max(args.cache_len // 4, 2)
+        )
     mesh = make_local_mesh()
     params = M.init_params(base, jax.random.PRNGKey(0))
     reqs = make_workload(
@@ -246,6 +283,7 @@ def main() -> None:
     json_rows = []
     cap_json = []
     prefix_json = []
+    ring_json = []
     failures = []
     for impl in impls:
         cfg = dataclasses.replace(
@@ -316,6 +354,12 @@ def main() -> None:
             )
             prefix_json += pre_rows
             failures += pre_fail
+        if args.check_ring:
+            ring_rows, ring_fail = check_ring(
+                cfg, mesh, params, impl=impl, pattern=args.pattern,
+            )
+            ring_json += ring_rows
+            failures += ring_fail
         if args.scenario == "shared_prefix" and "paged" in per_mode:
             # the scenario's paged run doubles as the prefix-cache BENCH row:
             # how much admission work the radix tree absorbed on this shape
@@ -345,6 +389,8 @@ def main() -> None:
             write_bench_json(args.json, "paged_capacity", cap_json)
         if prefix_json:
             write_bench_json(args.json, "prefix_cache", prefix_json)
+        if ring_json:
+            write_bench_json(args.json, "ring_capacity", ring_json)
     if failures:
         for f in failures:
             print(f"CHECK FAILED: {f}", file=sys.stderr)
@@ -355,6 +401,8 @@ def main() -> None:
         print("check-paged: all assertions passed")
     if args.check_prefix:
         print("check-prefix: all assertions passed")
+    if args.check_ring:
+        print("check-ring: all assertions passed")
 
 
 def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
@@ -448,6 +496,101 @@ def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
     return [row], failures
 
 
+def check_ring(cfg, mesh, params, *, impl: str, pattern: str):
+    """The mod-window ring CI gate: prompts deep enough that decode laps the
+    ring, served by the seed contiguous ring engine (admission-prefill over
+    per-slot rows) and by the paged engine's mod-window page tables (chunked
+    auto-upgrades).  Deterministic assertions: (a) paged-ring generations
+    are token-identical to the contiguous ring, (b) peak resident pages stay
+    within the window reservation (batch x ring_tiles — ring requests hold a
+    FIXED page set), (c) that reservation undercuts the dense one
+    (cache_len's tiles per slot), i.e. paging a window actually caps
+    residency.  Returns (bench rows, failures) and emits the
+    ``ring_capacity`` BENCH section."""
+    page = 128  # the effective kv tile of the default spec
+    window = 2 * page
+    cache_len = 8 * page  # dense reservation: 8 tiles per slot
+    chunk = 64
+    batch = 3
+    wcfg = dataclasses.replace(cfg, sliding_window=window)
+    rng = np.random.default_rng(13)
+    # prompts past ring_tiles * page positions: the ring wraps mid-prefill,
+    # and every request decodes past its prompt (more laps)
+    lens = [(int(rng.integers(4 * page, 7 * page)), int(rng.integers(3, 7)))
+            for _ in range(5)]
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32)
+               for ln, _ in lens]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=mn)
+                for i, (p, (_, mn)) in enumerate(zip(prompts, lens))]
+
+    contig = ServeLoop(wcfg, mesh, params, batch=batch, cache_len=cache_len)
+    t0 = time.perf_counter()
+    done_c = contig.run(mk())
+    dt_c = time.perf_counter() - t0
+    paged = ServeLoop(
+        wcfg, mesh, params, batch=batch, cache_len=cache_len,
+        chunked=True, chunk_size=chunk,
+    )
+    assert paged.paged and paged.ring_tiles is not None, (
+        "a chunked sliding-window loop must auto-upgrade to the paged ring"
+    )
+    assert paged.page == page, (
+        f"ring gate sized its reservation in {page}-token pages but the "
+        f"engine derived {paged.page}-token pages"
+    )
+    t0 = time.perf_counter()
+    done_p = paged.run(mk())
+    dt_p = time.perf_counter() - t0
+    paged.close()
+
+    failures = []
+    for rc, rp in zip(done_c, done_p):
+        if rc.generated != rp.generated:
+            failures.append(
+                f"{impl}/{pattern}: uid {rc.uid} paged-ring generations "
+                f"diverge from the contiguous ring engine"
+            )
+            break
+    reservation = batch * paged.ring_tiles
+    dense = batch * (cache_len // page)
+    peak = paged.stats["pool_peak_pages"]
+    if peak > reservation:
+        failures.append(
+            f"{impl}/{pattern}: peak resident pages {peak} > window "
+            f"reservation {reservation} ({batch} slots x {paged.ring_tiles} "
+            f"ring tiles) — a ring request leaked past its fixed page set"
+        )
+    if reservation >= dense:
+        failures.append(
+            f"{impl}/{pattern}: window reservation {reservation} >= dense "
+            f"reservation {dense} — the mod-window table saves nothing at "
+            f"window {window} / cache_len {cache_len}"
+        )
+    row = {
+        "attn": impl,
+        "pattern": pattern,
+        "window": window,
+        "cache_len": cache_len,
+        "page_tokens": page,
+        "ring_tiles": paged.ring_tiles,
+        "window_reservation_pages": reservation,
+        "dense_reservation_pages": dense,
+        "pool_peak_pages": peak,
+        "page_allocs": paged.stats["page_allocs"],
+        "tokens": sum(len(r.generated) for r in done_p),
+        "wall_s_contiguous": round(dt_c, 3),
+        "wall_s_paged": round(dt_p, 3),
+    }
+    print(
+        f"ring_capacity[{impl}/{pattern}]: peak {peak} pages within the "
+        f"{reservation}-page window reservation (dense would hold {dense}) "
+        f"at window {window}, ring_tiles {paged.ring_tiles}"
+    )
+    return [row], failures
+
+
 def check_prefix(cfg, mesh, params, *, impl: str, pattern: str):
     """The prefix-cache CI gate: 4 requests sharing a 4k-token prefix, run
     through the paged admission engine twice — radix cache ON vs OFF (the
@@ -490,8 +633,13 @@ def check_prefix(cfg, mesh, params, *, impl: str, pattern: str):
         )
         t0 = time.perf_counter()
         done = loop.run(mk())
-        runs[warm] = (done, dict(loop.stats), loop.pool.in_use,
-                      time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        stats = dict(loop.stats)
+        try:  # the radix tree legitimately holds pages until close()
+            loop.close()
+        except RuntimeError:
+            pass  # leave the leak visible in in_use below
+        runs[warm] = (done, stats, loop.pool.in_use, dt)
 
     failures = []
     done_c, stats_c, inuse_c, dt_c = runs[False]

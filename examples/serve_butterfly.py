@@ -4,7 +4,9 @@ admit, evict, re-admit mid-stream), the chunked mixed-step engine (prompts
 stream in chunks while decode rows keep sampling; zero decode stalls), and
 the paged engine (one global page pool, per-request tile-granular page
 tables; capacity priced at live pages instead of batch x cache_len) — and
-must generate identical tokens.
+must generate identical tokens.  A fourth run serves a SLIDING-WINDOW
+config through the paged engine's mod-window ring tables and must match
+the contiguous ring engine token for token.
 
     PYTHONPATH=src python examples/serve_butterfly.py
 """
@@ -67,3 +69,21 @@ print(f"paged engine:     {paged.stats['mixed_steps']} mixed steps, "
       f"{paged.stats['pool_peak_pages']}/{paged.stats['pool_pages']} peak "
       f"pages resident ({paged.stats['page_allocs']} allocs) — "
       f"token-identical across all three engines")
+paged.close()
+
+# sliding window: the XLA reference (contiguous per-slot ring rows) vs the
+# paged engine's mod-window ring page table — absolute tile j lives in page-
+# table slot j % ring_tiles, decode laps the ring, tokens must not move
+wcfg = dataclasses.replace(cfg, sliding_window=10)
+wparams = M.init_params(wcfg, jax.random.PRNGKey(0))
+wref = ServeLoop(wcfg, mesh, wparams, batch=2, cache_len=32)
+done_wr = wref.run(requests())
+wring = ServeLoop(wcfg, mesh, wparams, batch=2, cache_len=32, paged=True)
+done_wp = wring.run(requests())
+assert [r.generated for r in done_wp] == [r.generated for r in done_wr], \
+    "mod-window ring paging changed the tokens"
+print(f"windowed paged:   window={wcfg.sliding_window}, "
+      f"ring_tiles={wring.ring_tiles}, "
+      f"{wring.stats['pool_peak_pages']}/{wring.stats['pool_pages']} peak "
+      f"pages resident — token-identical to the contiguous ring reference")
+wring.close()

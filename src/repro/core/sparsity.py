@@ -525,7 +525,9 @@ def chunk_live_tables(
 # --------------------------------------------------------------------------
 
 
-def translate_tables(kv_index, step_live, page_table, n_pages: int):
+def translate_tables(
+    kv_index, step_live, page_table, n_pages: int, *, ring_tiles: int | None = None
+):
     """Compose packed live *virtual* kv-tile tables with a page table.
 
     ``kv_index`` / ``step_live``: (R, max_live) the packed tables
@@ -535,25 +537,116 @@ def translate_tables(kv_index, step_live, page_table, n_pages: int):
     virtual tile -> physical page id in a global pool of ``n_pages`` pages;
     unallocated tiles hold the sentinel ``n_pages``.
 
+    ``ring_tiles`` is the mod-window modulus: when set, the page table has
+    only ``ring_tiles`` slots and virtual tile ``j`` lives in slot
+    ``j % ring_tiles`` — a sliding-window request reuses a window-sized page
+    set in phase instead of allocating one page per absolute tile.  The
+    returned ``kv_virt`` stays ABSOLUTE either way: the kernels' fine masks
+    index token positions, which never wrap.
+
     Returns ``(kv_phys, kv_virt, step_live')``: the same packed layout with
     physical page ids (clamped in-bounds so dead steps still DMA a real page),
-    the untouched virtual ids (the kernels' fine masks index token positions,
-    which are virtual), and liveness ANDed with "the tile is allocated" — a
-    live-but-freed tile can only arise from a retention-schedule bug, and
-    masking it keeps the failure a parity miss instead of reading another
-    request's keys.  The kernel grid shape is unchanged: dead tiles were
-    already absent, translation only redirects the DMA."""
+    the untouched virtual ids, and liveness ANDed with "the tile is
+    allocated" — a live-but-freed tile can only arise from a
+    retention-schedule bug, and masking it keeps the failure a parity miss
+    instead of reading another request's keys.  The kernel grid shape is
+    unchanged: dead tiles were already absent, translation only redirects the
+    DMA."""
     import jax.numpy as jnp
 
     kv_index = jnp.asarray(kv_index, jnp.int32)
     step_live = jnp.asarray(step_live, jnp.int32)
     pt = jnp.asarray(page_table, jnp.int32)
+    slot = kv_index % ring_tiles if ring_tiles else kv_index
     if pt.ndim == 1:
-        phys = pt[kv_index]
+        phys = pt[slot]
     else:
-        phys = jnp.take_along_axis(pt, kv_index, axis=1)
+        phys = jnp.take_along_axis(pt, slot, axis=1)
     live = step_live * (phys < n_pages).astype(jnp.int32)
     return jnp.minimum(phys, n_pages - 1), kv_index, live
+
+
+# --------------------------------------------------------------------------
+# Mod-window rings: sliding-window caches as phase-reused page tables
+# --------------------------------------------------------------------------
+
+
+def ring_tiles_for(window: int, step_span: int, kv_tile: int) -> int:
+    """Ring modulus (page-table slot count) for a sliding-window cache.
+
+    During one engine step of up to ``step_span`` query positions, the live
+    key span is ``window + step_span - 1`` tokens (the step's first query
+    still reads back ``window``, its last query writes ``step_span - 1``
+    ahead), plus one tile of alignment slack — so ``R`` distinct slots
+    guarantee no two simultaneously-live absolute tiles collide mod ``R``,
+    and a partially-overwritten frontier slot only ever shadows positions the
+    window mask already rejects (``R * kv_tile >= window + kv_tile``)."""
+    return -(-(window + max(step_span, 1) - 1) // kv_tile) + 1
+
+
+def ring_decode_tables(cur_len, window: int, kv_tile: int, ring_tiles: int):
+    """Per-row live ABSOLUTE kv-tile tables for mod-window flash-decode.
+
+    Returns (kv_index (B, max_live) int32, step_live (B, max_live) int32)
+    in the same packed layout as :func:`decode_live_tables`, but the indices
+    are absolute virtual tiles that may exceed any cache bound — decode under
+    a sliding window is unbounded in position; only the most recent
+    ``window`` keys are live, and those sit in the ``ring_tiles`` tiles
+    trailing the frontier.  Feed through :func:`translate_tables` with the
+    same ``ring_tiles`` to reach physical pages."""
+    import jax.numpy as jnp
+
+    max_live = min(ring_tiles, (window - 1) // kv_tile + 2)
+    cl = jnp.asarray(cur_len, jnp.int32).reshape(-1, 1)  # (B, 1)
+    ft = jnp.maximum(cl - 1, 0) // kv_tile  # frontier tile
+    vt = ft - jnp.arange(max_live, dtype=jnp.int32)[None, :]
+    live = (vt >= 0) & (vt * kv_tile < cl)
+    live &= (vt + 1) * kv_tile - 1 > cl - 1 - window
+    return vt, live.astype(jnp.int32)
+
+
+def ring_chunk_tables(
+    start, ntok, chunk: int, window: int, kv_tile: int, ring_tiles: int
+):
+    """Per-row live ABSOLUTE kv-tile tables for a mod-window mixed chunk.
+
+    Row b's queries sit at ``start[b] .. start[b] + ntok[b] - 1``; its live
+    tiles run from the first query's window edge to the last query's write
+    frontier — at most ``window + chunk - 1`` tokens, which is exactly the
+    span :func:`ring_tiles_for` sizes the ring to hold without collision.
+    Same packed layout and :func:`translate_tables` contract as
+    :func:`ring_decode_tables`."""
+    import jax.numpy as jnp
+
+    max_live = min(ring_tiles, (window + max(chunk, 1) - 2) // kv_tile + 2)
+    start = jnp.asarray(start, jnp.int32).reshape(-1, 1)  # (B, 1)
+    ntok = jnp.asarray(ntok, jnp.int32).reshape(-1, 1)
+    fr = start + jnp.maximum(ntok, 1) - 1  # last query position per row
+    ft = fr // kv_tile
+    vt = ft - jnp.arange(max_live, dtype=jnp.int32)[None, :]
+    live = (vt >= 0) & (vt * kv_tile <= fr)
+    live &= (vt + 1) * kv_tile - 1 > start - window
+    return vt, live.astype(jnp.int32)
+
+
+def ring_slot_tiles(frontier, kv_tile: int, ring_tiles: int):
+    """Which ABSOLUTE virtual tile each ring slot currently holds.
+
+    ``frontier``: (B,) highest written position per row.  Slot ``s`` holds
+    the largest tile ``j <= frontier_tile`` with ``j % ring_tiles == s``, or
+    -1 when no such tile has been written yet.  This is the XLA gather
+    forms' position base: slot s's r-th row is absolute position
+    ``slot_tile * kv_tile + r`` (stale rows beyond the frontier inside the
+    frontier slot carry the PREVIOUS lap's positions, but claiming the
+    current lap is safe — those positions are ``> frontier`` and every
+    caller masks ``kpos <= frontier``).  Returns (B, ring_tiles) int32."""
+    import jax.numpy as jnp
+
+    fr = jnp.asarray(frontier, jnp.int32).reshape(-1, 1)  # (B, 1)
+    ft = jnp.maximum(fr, 0) // kv_tile
+    s = jnp.arange(ring_tiles, dtype=jnp.int32)[None, :]
+    vt = ft - (ft - s) % ring_tiles
+    return jnp.where((vt >= 0) & (fr >= 0), vt, -1)
 
 
 def page_last_reader(
@@ -628,6 +721,7 @@ def page_residency(
     kv_tile: int,
     step_span: int = 1,
     start_tile: int = 0,
+    ring_tiles: int | None = None,
 ) -> np.ndarray:
     """Resident page count at every frontier position, given the per-tile
     last-reader schedule.  A tile is resident from its first write (position
@@ -645,13 +739,21 @@ def page_residency(
     request no allocations (the cache's refcount carries them), and the
     divergence-frontier tile — start_tile itself when the match ends
     mid-page — IS counted, because a copy-on-write fork allocates a private
-    page there."""
+    page there.
+
+    ``ring_tiles`` caps the curve at the mod-window reservation: a
+    sliding-window request recycles a fixed ``ring_tiles``-slot page set in
+    phase (see :func:`translate_tables`), so its residency can never exceed
+    the ring, whatever the last-reader schedule says."""
     diff = np.zeros(length + 1, np.int64)
     for j in range(start_tile, len(last_reader)):
         lo = max(j * kv_tile - (max(step_span, 1) - 1), 0)
         diff[lo] += 1
         diff[min(int(last_reader[j]), length - 1) + 1] -= 1
-    return np.cumsum(diff)[:length]
+    res = np.cumsum(diff)[:length]
+    if ring_tiles is not None:
+        res = np.minimum(res, ring_tiles)
+    return res
 
 
 def page_peak_resident(

@@ -487,6 +487,8 @@ def flash_paged_chunk(
     page: int,
     spec: AttentionSpec | None = None,
     kv_live: int | None = None,
+    ring_window: int | None = None,
+    ring_tiles: int | None = None,
 ) -> jax.Array:
     """Paged form of :func:`flash_chunk`: q (B, C, H, hd) mixed rows over the
     shared pool (n_pages * page, KV, hd), each row reading through its own
@@ -494,7 +496,12 @@ def flash_paged_chunk(
     VIRTUAL tile space (identical liveness to the contiguous engine) and
     translated to physical pages — the kernel grid never visits a dead or
     unallocated tile, and ``kv_live`` buckets the virtual extent exactly as
-    the contiguous path buckets its cache truncation."""
+    the contiguous path buckets its cache truncation.
+
+    ``ring_window`` / ``ring_tiles`` select the mod-window form: the page
+    table has ``ring_tiles`` slots reused in phase, the live tables hold
+    ABSOLUTE tiles trailing each row's frontier, and the fine mask windows on
+    absolute positions — a sliding-window cache in ``ring_tiles`` pages."""
     spec = spec or AttentionSpec(impl="flash_kernel")
     pattern, arg, _, window = canonical_pattern(
         spec.pattern, spec.pattern_arg, True, None
@@ -503,16 +510,26 @@ def flash_paged_chunk(
     kvh = k_pool.shape[1]
     g = h // kvh
     kt, vt, n_pages, d = _pool_layout(k_pool, v_pool, page)
-    skv = _virtual_extent(page_table, page, kv_live)
     cp = _round_up(c, 8)
 
     start = jnp.asarray(start, jnp.int32).reshape(-1)
-    kv_index, step_live = sparsity.chunk_live_tables(
-        pattern, start, ntok, c, skv, spec.q_tile, page,
-        window=window, pattern_arg=arg,
-    )
+    if ring_tiles is not None:
+        # ring rows mask purely by causal frontier + absolute window; the
+        # virtual extent must cover absolute positions, not the ring span
+        pattern, arg = "dense", None
+        window = ring_window if window is None else min(window, ring_window)
+        skv = _round_up(max(int(kv_live or 1), 1), page)
+        kv_index, step_live = sparsity.ring_chunk_tables(
+            start, ntok, c, window, page, ring_tiles
+        )
+    else:
+        skv = _virtual_extent(page_table, page, kv_live)
+        kv_index, step_live = sparsity.chunk_live_tables(
+            pattern, start, ntok, c, skv, spec.q_tile, page,
+            window=window, pattern_arg=arg,
+        )
     kv_phys, kv_virt, step_live = sparsity.translate_tables(
-        kv_index, step_live, page_table, n_pages
+        kv_index, step_live, page_table, n_pages, ring_tiles=ring_tiles
     )
 
     qt = q.reshape(b, c, kvh, g, hd).transpose(0, 2, 3, 1, 4)
@@ -538,6 +555,8 @@ def flash_paged_decode(
     page: int,
     spec: AttentionSpec | None = None,
     kv_live: int | None = None,
+    ring_window: int | None = None,
+    ring_tiles: int | None = None,
 ) -> jax.Array:
     """Paged form of :func:`flash_decode`: q (B, H, hd) over the shared pool.
 
@@ -545,7 +564,12 @@ def flash_paged_decode(
     :func:`repro.core.sparsity.decode_live_tables` the contiguous kernel
     prefetches) is translated to physical page ids; the fine mask runs on
     the virtual positions, so a freed or never-allocated tile is simply
-    absent and the softmax matches the contiguous engine bit-for-bit."""
+    absent and the softmax matches the contiguous engine bit-for-bit.
+
+    ``ring_window`` / ``ring_tiles`` select the mod-window form: positions
+    are unbounded (``cur_len`` may exceed any cache extent), the live tables
+    hold the absolute tiles trailing the frontier, and the same-modulus page
+    table hands back the phase-reused physical pages."""
     spec = spec or AttentionSpec(impl="flash_kernel")
     pattern, arg, _, window = canonical_pattern(
         spec.pattern, spec.pattern_arg, True, None
@@ -554,15 +578,21 @@ def flash_paged_decode(
     kvh = k_pool.shape[1]
     g = h // kvh
     kt, vt, n_pages, d = _pool_layout(k_pool, v_pool, page)
-    skv = _virtual_extent(page_table, page, kv_live)
     gp = _round_up(g, 8)
 
     cl_rows = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
-    kv_index, step_live = sparsity.decode_live_tables(
-        pattern, cl_rows, skv, spec.q_tile, page, window=window, pattern_arg=arg
-    )
+    if ring_tiles is not None:
+        window = ring_window if window is None else min(window, ring_window)
+        kv_index, step_live = sparsity.ring_decode_tables(
+            cl_rows, window, page, ring_tiles
+        )
+    else:
+        skv = _virtual_extent(page_table, page, kv_live)
+        kv_index, step_live = sparsity.decode_live_tables(
+            pattern, cl_rows, skv, spec.q_tile, page, window=window, pattern_arg=arg
+        )
     kv_phys, kv_virt, step_live = sparsity.translate_tables(
-        kv_index, step_live, page_table, n_pages
+        kv_index, step_live, page_table, n_pages, ring_tiles=ring_tiles
     )
 
     qt = jnp.pad(q.reshape(b, kvh, g, hd), ((0, 0), (0, 0), (0, gp - g), (0, d - hd)))

@@ -23,9 +23,21 @@ streams in.  A per-step chunk *budget* bounds prefill work per iteration
 dispatch overlaps device compute.
 
 ``chunked=False`` keeps the admission-prefill engine (bucketed batch-1
-prefill inserted into the shared cache) — still the right mode for
-sliding-window ring caches and encoder-decoder stacks, whose cache layout a
-mixed chunk cannot stream into.
+prefill inserted into the shared cache) — the seed contiguous path, kept as
+the parity baseline for every other mode.
+
+The page table is the ONLY serve-time cache abstraction beyond that
+baseline: sliding-window ring caches become **mod-window page tables** (a
+``ring_tiles``-slot table reused in phase — absolute tile ``j`` lives in
+slot ``j % ring_tiles``, positions stay absolute, decode is unbounded) and
+encoder-decoder cross KV becomes **read-only shared page ranges** (the
+encoder output is prefilled ONCE into refcounted pages via
+:func:`repro.models.transformer.paged_encode` and aliased into every
+decoder request's table — decode never writes a cross page, so CoW never
+triggers and cross-attention prefix sharing falls out of the refcounts).
+A chunked request for either family upgrades to the paged engine
+automatically — there is no contiguous chunked ring/encdec path to fall
+back to, by design.
 """
 
 from __future__ import annotations
@@ -277,10 +289,11 @@ def make_paged_fns(
     chunk: int,
     attn_impl: str | None = None,
     attn_pattern: str | None = None,
+    cross_pages: int | None = None,
 ):
     """Compiled entry points of the PAGED serve engine: ``(prefill, decode,
-    chunk_fn, copy_fn)`` over one global page pool instead of per-slot
-    ``cache_len`` reservations.
+    chunk_fn, copy_fn, encode_fn)`` over one global page pool instead of
+    per-slot ``cache_len`` reservations.
 
     * ``prefill(params, caches, b, lengths, pt_row)`` — batch-1 admission
       prefill scattered through the request's page-table row (retraces per
@@ -297,13 +310,24 @@ def make_paged_fns(
       page ids, so the whole prefix-sharing machinery compiles exactly one
       extra program.
 
-    All four donate the pools; the page tables are tiny replicated int32
-    arrays refreshed from host state every call."""
+    With ``cross_pages`` (encoder-decoder stacks) the pools grow per-slot
+    read-only cross pools; ``decode`` / ``chunk_fn`` then take a trailing
+    cross-table argument and a fifth entry point appears:
+
+    * ``encode_fn(params, caches, frames (1, S, D), ct_row (1, n_ct))`` —
+      run the encoder ONCE and scatter every decoder slot's cross KV into
+      the cross pool through ``ct_row``
+      (:func:`repro.models.transformer.paged_encode`); the written pages
+      are read-only for the rest of their life and alias freely.
+
+    All entry points donate the pools; the page tables are tiny replicated
+    int32 arrays refreshed from host state every call."""
     cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
     rt = M.resolve_runtime(cfg, mesh)
     p_shard = shd.sharding_tree(M.build_specs(cfg), mesh, M.rules_for(cfg))
     pool_shard = shd.sharding_tree(
-        tf.paged_pool_specs(cfg, n_pages, page), mesh, M.rules_for(cfg)
+        tf.paged_pool_specs(cfg, n_pages, page, cross_pages=cross_pages),
+        mesh, M.rules_for(cfg),
     )
     tok_shard = NamedSharding(
         mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
@@ -322,46 +346,72 @@ def make_paged_fns(
 
     dec_jit: dict[int | None, object] = {}
 
-    def decode(params, caches, tokens, pos, pt, kv_live: int | None = None):
+    def decode(params, caches, tokens, pos, pt, kv_live: int | None = None,
+               ct=None):
         fn = dec_jit.get(kv_live)
         if fn is None:
-            fn = jax.jit(
-                lambda params, caches, tokens, pos, pt: tf.decode_step(
-                    params, cfg, caches, tokens, pos, rt, kv_live=kv_live,
-                    page_table=pt, page=page,
-                ),
-                in_shardings=(p_shard, pool_shard, tok_shard, rep, rep),
-                out_shardings=(tok_shard, pool_shard),
-                donate_argnums=(1,),
-            )
+            if cross_pages is not None:
+                fn = jax.jit(
+                    lambda params, caches, tokens, pos, pt, ct: tf.decode_step(
+                        params, cfg, caches, tokens, pos, rt, kv_live=kv_live,
+                        page_table=pt, page=page, cross_table=ct,
+                    ),
+                    in_shardings=(p_shard, pool_shard, tok_shard, rep, rep,
+                                  rep),
+                    out_shardings=(tok_shard, pool_shard),
+                    donate_argnums=(1,),
+                )
+            else:
+                fn = jax.jit(
+                    lambda params, caches, tokens, pos, pt: tf.decode_step(
+                        params, cfg, caches, tokens, pos, rt, kv_live=kv_live,
+                        page_table=pt, page=page,
+                    ),
+                    in_shardings=(p_shard, pool_shard, tok_shard, rep, rep),
+                    out_shardings=(tok_shard, pool_shard),
+                    donate_argnums=(1,),
+                )
             dec_jit[kv_live] = fn
+        if cross_pages is not None:
+            return fn(params, caches, tokens, pos, pt, ct)
         return fn(params, caches, tokens, pos, pt)
 
     chk_jit: dict[int | None, object] = {}
 
     def chunk_fn(params, caches, tokens, pt, pos, ntok,
-                 kv_live: int | None = None):
+                 kv_live: int | None = None, ct=None):
         if tokens.shape != (1, chunk):
             raise ValueError(
                 f"tokens {tokens.shape} vs compiled chunk shape {(1, chunk)}"
             )
         fn = chk_jit.get(kv_live)
         if fn is None:
-            def _step(params, caches, tokens, pt, pos, ntok):
+            def _step(params, caches, tokens, pt, pos, ntok, ct=None):
                 logits, caches = tf.mixed_step(
                     params, cfg, caches, tokens, jnp.reshape(pos, (1,)),
                     jnp.reshape(ntok, (1,)), rt, kv_live=kv_live,
-                    page_table=pt, page=page,
+                    page_table=pt, page=page, cross_table=ct,
                 )
                 return logits[0], caches
 
-            fn = jax.jit(
-                _step,
-                in_shardings=(p_shard, pool_shard, rep, rep, rep, rep),
-                out_shardings=(rep, pool_shard),
-                donate_argnums=(1,),
-            )
+            if cross_pages is not None:
+                fn = jax.jit(
+                    _step,
+                    in_shardings=(p_shard, pool_shard, rep, rep, rep, rep,
+                                  rep),
+                    out_shardings=(rep, pool_shard),
+                    donate_argnums=(1,),
+                )
+            else:
+                fn = jax.jit(
+                    _step,
+                    in_shardings=(p_shard, pool_shard, rep, rep, rep, rep),
+                    out_shardings=(rep, pool_shard),
+                    donate_argnums=(1,),
+                )
             chk_jit[kv_live] = fn
+        if cross_pages is not None:
+            return fn(params, caches, tokens, pt, pos, ntok, ct)
         return fn(params, caches, tokens, pt, pos, ntok)
 
     copy_fn = jax.jit(
@@ -371,7 +421,19 @@ def make_paged_fns(
         donate_argnums=(0,),
     )
 
-    return prefill, decode, chunk_fn, copy_fn
+    encode_fn = None
+    if cross_pages is not None:
+        encode_fn = jax.jit(
+            lambda params, caches, frames, ct: tf.paged_encode(
+                params, cfg, frames, rt, caches=caches, cross_table=ct,
+                page=page,
+            ),
+            in_shardings=(p_shard, pool_shard, None, rep),
+            out_shardings=pool_shard,
+            donate_argnums=(1,),
+        )
+
+    return prefill, decode, chunk_fn, copy_fn, encode_fn
 
 
 class PagePool:
@@ -745,8 +807,8 @@ class ServeLoop:
     **Admission-prefill** (``chunked=False``) — the slot admit/evict engine:
     each admission runs a bucketed batch-1 prefill and inserts the caches at
     the slot index; all live decode slots idle for that prefill
-    (``stats["admission_stall_steps"]`` counts them).  Required for
-    sliding-window ring caches and encoder-decoder stacks; with
+    (``stats["admission_stall_steps"]`` counts them).  This is the seed
+    contiguous engine, kept as the parity baseline; with
     ``static_batching=True`` it degrades admission to wave scheduling (the
     serve_throughput baseline).
 
@@ -768,10 +830,25 @@ class ServeLoop:
     pages into the request's page table — prefill then starts at the
     divergence frontier and the admission reservation covers only the
     unique suffix.  Shared pages are refcounted in the :class:`PagePool`
-    and copy-on-write forked before any divergent write.  Prefix caching
-    is inherently a no-op on the contiguous engines (ring caches and
-    encoder-decoder stacks own per-slot rows — there is no indirection
-    layer to alias).
+    and copy-on-write forked before any divergent write.
+
+    The page table is the ONLY cache substrate beyond the contiguous
+    baseline: a **sliding-window** config serves through a mod-window ring
+    table (``ring_tiles`` slots reused in phase, unbounded decode length,
+    a fixed page set held per request) and an **encoder-decoder** config
+    serves through read-only shared cross page ranges (the encoder output
+    prefills once per distinct ``frames`` input; repeat inputs alias the
+    cached range, counted as ``prefix_hits``; decode never writes cross
+    pages so copy-on-write never triggers).  ``chunked=True`` requests for
+    either family upgrade to ``paged=True`` automatically.  The token
+    radix tree is disabled for those two families (ring slots are reused
+    in phase; encdec decoder KV depends on the frames through
+    cross-attention) — the encoder cache is their sharing layer.
+
+    The :class:`PagePool`, the radix tree, and the encoder cache PERSIST
+    across ``run()`` calls — a warm second run hits the first run's
+    prefixes.  Call :meth:`close` to release the engine-held references;
+    it raises if the pools do not drain to zero.
     """
 
     def __init__(
@@ -801,17 +878,6 @@ class ServeLoop:
             if static_batching:
                 raise ValueError("chunked and static_batching are exclusive: "
                                  "chunked scheduling IS continuous")
-            if cfg.sliding_window:
-                raise ValueError(
-                    "chunked prefill writes at absolute cache positions; "
-                    "sliding-window ring caches need the admission-prefill "
-                    "path (chunked=False)"
-                )
-            if cfg.family == "encdec" or cfg.n_img_tokens:
-                raise ValueError(
-                    "chunked prefill has no encoder/extras path; use the "
-                    "admission-prefill engine (chunked=False)"
-                )
             if chunk_size < 1:
                 raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
             if chunk_budget is not None and chunk_budget < 1:
@@ -819,19 +885,23 @@ class ServeLoop:
                     f"chunk_budget must be >= 1, got {chunk_budget} — a "
                     "zero budget would starve prefill rows forever"
                 )
-        if paged:
-            if static_batching:
-                raise ValueError("paged and static_batching are exclusive")
-            if cfg.sliding_window:
-                raise ValueError(
-                    "paged caches index absolute positions; sliding-window "
-                    "ring caches keep the contiguous admission path"
-                )
-            if cfg.family == "encdec" or cfg.n_img_tokens:
-                raise ValueError(
-                    "paged serving has no encoder/extras path; use the "
-                    "contiguous admission engine"
-                )
+        if paged and static_batching:
+            raise ValueError("paged and static_batching are exclusive")
+        if (chunked or paged) and cfg.n_img_tokens:
+            # the ONE remaining extras rejection: stub image-patch tokens are
+            # prepended inside prefill and have no chunk/page write path yet
+            raise ValueError(
+                "image-token extras have no chunked/paged path; use the "
+                "admission-prefill engine (chunked=False, paged=False)"
+            )
+        if chunked and not paged and (
+            cfg.sliding_window or cfg.family == "encdec"
+        ):
+            # one cache substrate: a chunked request for a ring or encoder-
+            # decoder cache upgrades to the paged engine — the mod-window /
+            # read-only page tables ARE the streaming layout for these
+            # families (there is no contiguous chunked ring/encdec path)
+            paged = True
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.batch, self.cache_len = batch, cache_len
         self.static_batching = static_batching
@@ -848,10 +918,20 @@ class ServeLoop:
             )[1]
             if self.page < 1:
                 raise ValueError(f"page must be >= 1 token, got {self.page}")
-            self.n_vtiles = -(-cache_len // self.page)
+            self.ring_tiles: int | None = None
+            if cfg.sliding_window:
+                # mod-window ring: the table has exactly ring_tiles slots and
+                # absolute tile j lives in slot j % ring_tiles — a window-
+                # sized page set reused in phase, positions unbounded
+                self.ring_tiles = sparsity.ring_tiles_for(
+                    cfg.sliding_window, chunk_size, self.page
+                )
+                self.n_vtiles = self.ring_tiles
+            else:
+                self.n_vtiles = -(-cache_len // self.page)
             # default pool budget == the dense reservation the contiguous
-            # engine would make (batch x cache_len rows) — benchmarks shrink
-            # it to demonstrate the capacity win
+            # engine would make (batch x cache_len rows; batch rings for a
+            # window config) — benchmarks shrink it to show the capacity win
             self.pool_pages = (
                 pool_pages if pool_pages is not None else batch * self.n_vtiles
             )
@@ -859,14 +939,37 @@ class ServeLoop:
                 raise ValueError(
                     f"pool_pages must be >= 1, got {self.pool_pages}"
                 )
-            # prefix sharing: radix cache built per run (it owns pool pages)
-            self.prefix_cache = prefix_cache
-            self.radix: RadixCache | None = None
-            self._sched_cache: dict[tuple[int, int, int], _PagedSlot] = {}
+            # encoder-decoder: a SEPARATE read-only cross pool — encoder
+            # outputs prefill once, decoders alias; sized for one distinct
+            # encoder input per slot (the frames cache shares below that)
+            self.cross_pages: int | None = None
+            if cfg.family == "encdec":
+                self.cross_tiles = -(-cfg.enc_seq // self.page)
+                self.cross_pages = batch * self.cross_tiles
+                self.cross_pool = PagePool(self.cross_pages)
+                self._cross_cache: collections.OrderedDict[
+                    str, list[int]
+                ] = collections.OrderedDict()
+            # prefix sharing: the radix tree is token-keyed, so it is OFF for
+            # rings (slots are reused in phase — nothing stable to alias) and
+            # for encdec decoders (self-KV depends on the encoder output
+            # through cross-attention, not on tokens alone); encdec gets the
+            # frames-keyed encoder cache instead.  Both the tree and the page
+            # pool PERSIST across run() calls — drain checks live in close().
+            self.prefix_cache = (
+                prefix_cache and not cfg.sliding_window
+                and cfg.family != "encdec"
+            )
+            self.pool = PagePool(self.pool_pages)
+            self.radix: RadixCache | None = (
+                RadixCache(self.pool, self.page) if self.prefix_cache else None
+            )
+            self._pools = None  # device pools, lazily built, persist too
+            self._sched_cache: dict[tuple, _PagedSlot] = {}
             (self.p_prefill_fn, self.p_decode_fn, self.p_chunk_fn,
-             self.p_copy_fn) = make_paged_fns(
+             self.p_copy_fn, self.p_encode_fn) = make_paged_fns(
                 cfg, mesh, n_pages=self.pool_pages, page=self.page,
-                chunk=chunk_size,
+                chunk=chunk_size, cross_pages=self.cross_pages,
             )
             self.stats = {}
             return
@@ -949,13 +1052,29 @@ class ServeLoop:
                     f"> cache_len {self.cache_len}"
                 )
             if self.paged:
-                span = self.chunk_size if self.chunked else len(r.prompt)
-                peak = self._paged_schedule(need, span).remaining_peak(0)
+                if self.ring_tiles is not None:
+                    # a ring request holds a FIXED page set to retirement
+                    peak = min(self.ring_tiles, -(-need // self.page))
+                elif self.chunked or self.cfg.family == "encdec":
+                    # encdec admission streams the decoder prompt through
+                    # the chunk entry point, so its spans are chunk-sized
+                    peak = self._paged_schedule(
+                        need, self.chunk_size
+                    ).remaining_peak(0)
+                else:
+                    peak = self._paged_schedule(
+                        need, len(r.prompt)
+                    ).remaining_peak(0)
                 if peak > self.pool_pages:
                     raise ValueError(
                         f"request {r.uid}: needs {peak} resident pages at its "
                         f"peak > pool of {self.pool_pages} — unservable at "
                         "this page budget"
+                    )
+                if self.cross_pages is not None and "frames" not in r.extras:
+                    raise ValueError(
+                        f"request {r.uid}: encoder-decoder serving needs "
+                        "'frames' extras (the encoder input)"
                     )
             r.generated.clear()
 
@@ -1017,6 +1136,23 @@ class ServeLoop:
         self._sched_cache[key] = sc
         return sc
 
+    def _ring_schedule(self, length: int) -> _PagedSlot:
+        """Retention schedule of a mod-window ring request: a FIXED set of
+        ``min(ring_tiles, ceil(length / page))`` pages allocated at admission
+        and held to retirement — slots are reused in phase, so no tile ever
+        frees early and the reservation is exact by construction."""
+        key = ("ring", length)
+        sc = self._sched_cache.get(key)
+        if sc is None:
+            n = min(self.ring_tiles, -(-length // self.page))
+            sc = _PagedSlot(
+                last_reader=np.full(self.n_vtiles, length - 1, np.int64),
+                peak_from=np.full(max(length, 1), n, np.int64),
+                length=max(length, 1),
+            )
+            self._sched_cache[key] = sc
+        return sc
+
     def _committed(self, active, sched, pos) -> int:
         """Sum of active requests' worst-case future residency — admission
         reserves against this so `PagePool.alloc` can never fail mid-stream
@@ -1035,7 +1171,13 @@ class ServeLoop:
         aliased prefix boundary, or a page the radix cache still owns)
         copy-on-write fork — pool fork + device row copy + table repoint —
         so the divergent write lands in a private copy instead of corrupting
-        siblings.  Returns the (possibly copied-into) pools."""
+        siblings.  Returns the (possibly copied-into) pools.
+
+        Mod-window rings are a no-op here: the fixed ring pages were all
+        allocated at admission, slots are reused in phase, and ring pages are
+        never shared — there is nothing to back and nothing to fork."""
+        if self.ring_tiles is not None:
+            return caches
         for t in range(lo_pos // self.page, (hi_pos - 1) // self.page + 1):
             pid = int(pt[slot, t])
             if pid == self.pool_pages:
@@ -1122,7 +1264,7 @@ class ServeLoop:
             )
 
     def _suffix_prefill(self, r: Request, m: int, sc: _PagedSlot, pool, pt,
-                        slot: int, caches):
+                        slot: int, caches, ct=None):
         """Admission-mode prefill of a prefix-cache hit: stream ONLY the
         unique suffix (positions m..plen-1) through the paged chunk entry
         point — prefill starts at the divergence frontier, attending the
@@ -1144,7 +1286,7 @@ class ServeLoop:
             logits1, caches = self.p_chunk_fn(
                 self.params, caches, jnp.asarray(ctoks),
                 jnp.asarray(pt[slot : slot + 1]), jnp.int32(p), jnp.int32(t),
-                kv_live,
+                kv_live, ct=ct,
             )
             self.stats["chunk_calls"] = self.stats.get("chunk_calls", 0) + 1
             self.stats["prefill_tokens"] += t
@@ -1153,10 +1295,92 @@ class ServeLoop:
             self._free_dead(pool, pt, slot, sc, p)
         return jnp.argmax(logits1).astype(jnp.int32), caches
 
+    def _cross_admit(self, r: Request, slot: int, ct, caches):
+        """Admit the request's ENCODER side: key the frames, alias the cached
+        read-only page range on a hit (a ``retain`` per page — CoW can never
+        trigger because decode never writes a cross page), or allocate a
+        fresh range and run the encoder once on a miss.  Returns the updated
+        pools, or ``None`` when the cross pool cannot fit a new range even
+        after evicting every unreferenced cached encoder (backpressure)."""
+        frames = np.asarray(r.extras["frames"], np.float32)
+        key = frames.tobytes()
+        pages = self._cross_cache.get(key)
+        if pages is not None:
+            self._cross_cache.move_to_end(key)  # LRU touch
+            for p in pages:
+                self.cross_pool.retain(p)
+            ct[slot, : len(pages)] = pages
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += self.cfg.enc_seq
+            self.stats["encoder_hits"] = self.stats.get("encoder_hits", 0) + 1
+            return caches
+        n = self.cross_tiles
+        if self.cross_pool.free_pages < n:
+            # evict LRU cached encoders nobody references but the cache
+            for k in [
+                k for k in self._cross_cache
+                if all(
+                    self.cross_pool.page_refs(p) == 1
+                    for p in self._cross_cache[k]
+                )
+            ]:
+                for p in self._cross_cache.pop(k):
+                    self.cross_pool.release(p)
+                if self.cross_pool.free_pages >= n:
+                    break
+        if self.cross_pool.free_pages < n:
+            return None
+        pages = [self.cross_pool.alloc() for _ in range(n)]
+        ct[slot, :n] = pages
+        caches = self.p_encode_fn(
+            self.params, caches, jnp.asarray(frames)[None],
+            jnp.asarray(ct[slot : slot + 1]),
+        )
+        for p in pages:  # the request's own reference; alloc's is the cache's
+            self.cross_pool.retain(p)
+        self._cross_cache[key] = pages
+        self.stats["encode_calls"] = self.stats.get("encode_calls", 0) + 1
+        return caches
+
+    def _release_cross(self, ct, slot: int) -> None:
+        """Drop the request's references on its aliased cross page range."""
+        for t in range(ct.shape[1]):
+            if ct[slot, t] != self.cross_pages:
+                self.cross_pool.release(int(ct[slot, t]))
+                ct[slot, t] = self.cross_pages
+
+    def close(self) -> None:
+        """Release the engine-held cache state (radix tree references, cached
+        encoder cross ranges) and check the pools drain to zero.  The pools
+        and the prefix caches PERSIST across ``run()`` calls — a warm second
+        run alias-hits the first run's prompts — so the end-of-run drain
+        assertion of the per-run engines lives here instead."""
+        if not self.paged:
+            return
+        if self.radix is not None:
+            self.radix.clear()
+        if self.cross_pages is not None:
+            for pages in self._cross_cache.values():
+                for p in pages:
+                    self.cross_pool.release(p)
+            self._cross_cache.clear()
+            if self.cross_pool.in_use:
+                raise RuntimeError(
+                    f"cross pool leak: {self.cross_pool.in_use} pages still "
+                    "referenced after close() released the encoder cache"
+                )
+        if self.pool.in_use:
+            raise RuntimeError(
+                f"page pool leak: {self.pool.in_use} pages still referenced "
+                "after close() released the radix tree"
+            )
+
     def _finish_paged_run(self, pool) -> None:
         """End-of-run bookkeeping shared by both paged loops: surface the
-        prefix-cache counters, then drop the tree's references — the pool
-        must drain to zero (every refcount released)."""
+        pool and prefix-cache counters.  Requests have released all their
+        references by now; what remains in ``in_use`` is exactly the engine-
+        held cache state (radix tree + encoder cross ranges), which persists
+        for the next run and drains in :meth:`close`."""
         self.stats["pool_pages"] = self.pool_pages
         self.stats["pool_peak_pages"] = pool.peak_in_use
         self.stats["page_allocs"] = pool.alloc_count
@@ -1165,8 +1389,11 @@ class ServeLoop:
             self.stats["prefix_cached_pages_end"] = self.radix.held_pages
             self.stats["prefix_inserted_pages"] = self.radix.inserted_pages
             self.stats["prefix_evicted_pages"] = self.radix.evicted_pages
-            self.radix.clear()
-            self.radix = None
+        if self.cross_pages is not None:
+            self.stats.setdefault("encode_calls", 0)
+            self.stats["cross_pool_pages"] = self.cross_pages
+            self.stats["cross_pool_peak_pages"] = self.cross_pool.peak_in_use
+            self.stats["cross_cached_ranges_end"] = len(self._cross_cache)
 
     def _run_admission(self, requests: list[Request]) -> list[Request]:
         """Admission-prefill engine: per-slot prefill + cache insert, then
@@ -1408,9 +1635,10 @@ class ServeLoop:
         remaining = np.zeros(B, np.int32)
         nxt = jnp.zeros((B,), jnp.int32)
         pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
-        pool = PagePool(self.pool_pages)
-        self.pool = pool
-        self.radix = RadixCache(pool, self.page) if self.prefix_cache else None
+        pool = self.pool
+        ct = None
+        if self.cross_pages is not None:
+            ct = np.full((B, self.cross_tiles), self.cross_pages, np.int32)
         fetch = _AsyncTokens(lag=1)
         self.stats = {
             "prefill_calls": 0, "decode_steps": 0, "admission_stall_steps": 0,
@@ -1420,7 +1648,9 @@ class ServeLoop:
         }
         clock = 0
         with self.mesh:
-            caches = self._zero_pools()
+            caches = (
+                self._pools if self._pools is not None else self._zero_pools()
+            )
             while qi < len(queue) or any(r is not None for r in active):
                 for slot in range(B):
                     if qi >= len(queue) or queue[qi].arrival > clock:
@@ -1447,16 +1677,35 @@ class ServeLoop:
                                 pool.release(p)
                             m, spages = 0, []
                     if not m:
-                        sc = self._paged_schedule(L, step_span=plen)
+                        if self.ring_tiles is not None:
+                            sc = self._ring_schedule(L)
+                        elif self.cross_pages is not None:
+                            # encdec streams the decoder prompt through the
+                            # chunk entry point — spans are chunk-sized
+                            sc = self._paged_schedule(
+                                L, step_span=self.chunk_size
+                            )
+                        else:
+                            sc = self._paged_schedule(L, step_span=plen)
                         committed = self._committed(active, sched, pos)
                         if self._fits(committed + sc.remaining_peak(0)) > 0:
                             # out of pages: the head waits for decode to free
                             # some — backpressure, not an error
                             self.stats["admission_backpressure"] += 1
                             break
+                    if self.cross_pages is not None:
+                        nc = self._cross_admit(r, slot, ct, caches)
+                        if nc is None:
+                            # no cross range free for a new encoder input
+                            self.stats["admission_backpressure"] += 1
+                            break
+                        caches = nc
                     qi += 1
                     if any(a is not None for a in active):
                         self.stats["admission_stall_steps"] += 1
+                    ct_row = (
+                        None if ct is None else jnp.asarray(ct[slot:slot + 1])
+                    )
                     if m:
                         for i, p in enumerate(spages):
                             pt[slot, i] = p
@@ -1464,6 +1713,20 @@ class ServeLoop:
                         self.stats["prefix_hit_tokens"] += m
                         tok, caches = self._suffix_prefill(
                             r, m, sc, pool, pt, slot, caches
+                        )
+                    elif self.ring_tiles is not None or ct is not None:
+                        # mod-window rings allocate their fixed page set up
+                        # front; both rings and encoder-decoder admissions
+                        # then STREAM the prompt through the chunk entry
+                        # point (a monolithic paged prefill would wrap the
+                        # ring / has no cross-table path)
+                        if self.ring_tiles is not None:
+                            for t in range(
+                                min(self.ring_tiles, -(-L // self.page))
+                            ):
+                                pt[slot, t] = pool.alloc()
+                        tok, caches = self._suffix_prefill(
+                            r, 0, sc, pool, pt, slot, caches, ct=ct_row
                         )
                     else:
                         caches = self._ensure_writable(
@@ -1487,6 +1750,8 @@ class ServeLoop:
                     self._cache_prefix(r, pt, slot)
                     if r.max_new <= 1:
                         self._free_all(pool, pt, slot)
+                        if ct is not None:
+                            self._release_cross(ct, slot)
                         continue  # done at prefill; slot and pages free
                     self._free_dead(pool, pt, slot, sc, plen)
                     active[slot] = r
@@ -1511,15 +1776,21 @@ class ServeLoop:
                             pool, pt, slot, int(pos[slot]),
                             int(pos[slot]) + 1, caches,
                         )
-                hot = max(int(pos[s]) for s in range(B)
-                          if active[s] is not None) + 1
-                kv_live = _next_bucket(hot, self.cache_len)
-                self.stats["decode_kv_live_max"] = max(
-                    self.stats.get("decode_kv_live_max", 0), kv_live
-                )
+                if self.ring_tiles is not None:
+                    # the ring streams its fixed window-sized page set and
+                    # positions are unbounded — no live-depth bucketing
+                    kv_live = None
+                else:
+                    hot = max(int(pos[s]) for s in range(B)
+                              if active[s] is not None) + 1
+                    kv_live = _next_bucket(hot, self.cache_len)
+                    self.stats["decode_kv_live_max"] = max(
+                        self.stats.get("decode_kv_live_max", 0), kv_live
+                    )
                 logits, caches = self.p_decode_fn(
                     self.params, caches, nxt[:, None], jnp.asarray(pos),
                     jnp.asarray(pt), kv_live,
+                    **({} if ct is None else {"ct": jnp.asarray(ct)}),
                 )
                 self.stats["decode_steps"] += 1
                 clock += 1
@@ -1534,6 +1805,8 @@ class ServeLoop:
                     remaining[slot] -= 1
                     if remaining[slot] <= 0:
                         self._free_all(pool, pt, slot)
+                        if ct is not None:
+                            self._release_cross(ct, slot)
                         active[slot] = None
                         sched[slot] = None
                     else:
@@ -1543,6 +1816,7 @@ class ServeLoop:
                 fetch.push(toks, sinks)
                 nxt = toks
         fetch.flush()
+        self._pools = caches
         self._finish_paged_run(pool)
         return requests
 
@@ -1570,9 +1844,10 @@ class ServeLoop:
         remaining = np.zeros(B, np.int32)
         nxt = jnp.zeros((B,), jnp.int32)
         pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
-        pool = PagePool(self.pool_pages)
-        self.pool = pool
-        self.radix = RadixCache(pool, self.page) if self.prefix_cache else None
+        pool = self.pool
+        ct = None
+        if self.cross_pages is not None:
+            ct = np.full((B, self.cross_tiles), self.cross_pages, np.int32)
         fetch = _AsyncTokens(lag=1)
         self.stats = {
             "prefill_calls": 0, "mixed_steps": 0, "chunk_calls": 0,
@@ -1584,7 +1859,9 @@ class ServeLoop:
         clock = 0
         rr = 0
         with self.mesh:
-            caches = self._zero_pools()
+            caches = (
+                self._pools if self._pools is not None else self._zero_pools()
+            )
             while qi < len(queue) or any(r is not None for r in active):
                 # admission: a free slot AND a page reservation — the page
                 # budget, not the slot count, is the capacity limit
@@ -1608,17 +1885,32 @@ class ServeLoop:
                                 pool.release(p)
                             m, spages = 0, []
                     if not m:
-                        sc = self._paged_schedule(L, step_span=C)
+                        sc = (
+                            self._ring_schedule(L)
+                            if self.ring_tiles is not None
+                            else self._paged_schedule(L, step_span=C)
+                        )
                         committed = self._committed(active, sched, pos)
                         if self._fits(committed + sc.remaining_peak(0)) > 0:
                             self.stats["admission_backpressure"] += 1
                             break
+                    if self.cross_pages is not None:
+                        nc = self._cross_admit(r, slot, ct, caches)
+                        if nc is None:
+                            self.stats["admission_backpressure"] += 1
+                            break
+                        caches = nc
                     qi += 1
                     if m:
                         for i, p in enumerate(spages):
                             pt[slot, i] = p
                         self.stats["prefix_hits"] += 1
                         self.stats["prefix_hit_tokens"] += m
+                    elif self.ring_tiles is not None:
+                        # the fixed mod-window page set, allocated up front —
+                        # chunk streaming reuses the slots in phase
+                        for t in range(min(self.ring_tiles, -(-L // self.page))):
+                            pt[slot, t] = pool.alloc()
                     active[slot] = r
                     sched[slot] = sc
                     pos[slot] = m
@@ -1673,11 +1965,14 @@ class ServeLoop:
                             pool, pt, slot, int(pos[slot]),
                             int(pos[slot]) + 1, caches,
                         )
-                    hot = max(int(pos[s]) + 1 for s in dec_rows)
-                    kv_live = _next_bucket(hot, self.cache_len)
-                    self.stats["decode_kv_live_max"] = max(
-                        self.stats.get("decode_kv_live_max", 0), kv_live
-                    )
+                    if self.ring_tiles is not None:
+                        kv_live = None  # ring positions are unbounded
+                    else:
+                        hot = max(int(pos[s]) + 1 for s in dec_rows)
+                        kv_live = _next_bucket(hot, self.cache_len)
+                        self.stats["decode_kv_live_max"] = max(
+                            self.stats.get("decode_kv_live_max", 0), kv_live
+                        )
                     use = np.asarray(use_nxt)
                     pt_wave = np.where(
                         use[:, None], pt, np.int32(self.pool_pages)
@@ -1685,6 +1980,7 @@ class ServeLoop:
                     logits, caches = self.p_decode_fn(
                         self.params, caches, nxt[:, None], jnp.asarray(pos),
                         jnp.asarray(pt_wave), kv_live,
+                        **({} if ct is None else {"ct": jnp.asarray(ct)}),
                     )
                     toks = jnp.argmax(logits, -1).astype(jnp.int32)
                     self.stats["decode_steps"] += 1
@@ -1697,6 +1993,8 @@ class ServeLoop:
                         remaining[slot] -= 1
                         if remaining[slot] <= 0:
                             self._free_all(pool, pt, slot)
+                            if ct is not None:
+                                self._release_cross(ct, slot)
                             active[slot] = None
                             sched[slot] = None
                         else:
@@ -1722,6 +2020,9 @@ class ServeLoop:
                         self.params, caches, jnp.asarray(ctoks),
                         jnp.asarray(pt[slot : slot + 1]),
                         jnp.int32(pos[slot]), jnp.int32(t), kv_live,
+                        ct=None if ct is None else jnp.asarray(
+                            ct[slot : slot + 1]
+                        ),
                     )
                     self.stats["chunk_calls"] += 1
                     self.stats["prefill_tokens"] += t
@@ -1738,10 +2039,13 @@ class ServeLoop:
                         remaining[slot] -= 1
                         if remaining[slot] <= 0:
                             self._free_all(pool, pt, slot)
+                            if ct is not None:
+                                self._release_cross(ct, slot)
                             active[slot] = None
                             sched[slot] = None
                             continue
                     self._free_dead(pool, pt, slot, sched[slot], int(pos[slot]))
         fetch.flush()
+        self._pools = caches
         self._finish_paged_run(pool)
         return requests

@@ -247,6 +247,7 @@ def chunk_attention_cache(
     *,
     window: int | None = None,
     pattern_mask: jax.Array | None = None,
+    kpos: jax.Array | None = None,
 ) -> jax.Array:
     """Chunk-of-queries attention over a shared KV cache with a per-row
     causal frontier (the XLA form of the mixed chunked-prefill step).
@@ -256,8 +257,11 @@ def chunk_attention_cache(
     positions ``<= start[b] + i`` (its own position is the newest written
     row, so the frontier doubles as the written-cache mask).
     ``pattern_mask`` (B, C, S) is the per-query token expansion of the
-    block-sparsity map (mask-only on this backend).  Rows beyond a row's
-    valid count produce garbage the caller never reads."""
+    block-sparsity map (mask-only on this backend).  ``kpos`` (B, S)
+    overrides the identity position map when the cache rows are NOT laid out
+    at their absolute positions (the mod-window ring gathers slot-ordered
+    pages; stale slots carry an out-of-frontier sentinel).  Rows beyond a
+    row's valid count produce garbage the caller never reads."""
     b, c, h, hd = q.shape
     skv, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
@@ -267,10 +271,12 @@ def chunk_attention_cache(
         "bqkgd,bskd->bkgqs", qr, k_cache, preferred_element_type=jnp.float32
     ) * scale
     qpos = jnp.asarray(start, jnp.int32)[:, None] + jnp.arange(c, dtype=jnp.int32)
-    kpos = jnp.arange(skv, dtype=jnp.int32)
-    mask = kpos[None, None, :] <= qpos[:, :, None]  # (B, C, S) frontier
+    if kpos is None:
+        kpos = jnp.arange(skv, dtype=jnp.int32)[None, :]  # (1, S) identity
+    kpos = jnp.asarray(kpos, jnp.int32)
+    mask = kpos[:, None, :] <= qpos[:, :, None]  # (B, C, S) frontier
     if window is not None:
-        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+        mask &= kpos[:, None, :] > qpos[:, :, None] - window
     if pattern_mask is not None:
         mask &= pattern_mask
     scores = jnp.where(mask[:, None, None], scores, -1e30)
@@ -401,6 +407,21 @@ def gather_pages(
     return pool[flat]
 
 
+def ring_kpos(frontier: jax.Array, page: int, ring_tiles: int) -> jax.Array:
+    """Absolute token position of every SLOT-ORDERED ring cache row.
+
+    A mod-window gather (``gather_pages`` over a ``ring_tiles``-slot table)
+    returns rows in slot order, not position order; this is the matching
+    (B, ring_tiles * page) position map: slot s's r-th row is
+    ``slot_tile(s) * page + r`` (the lap :func:`repro.core.sparsity.
+    ring_slot_tiles` resolves from the frontier), and never-written slots
+    carry a large sentinel every causal/frontier mask rejects."""
+    st = sparsity.ring_slot_tiles(frontier, page, ring_tiles)  # (B, R)
+    base = jnp.where(st >= 0, st * page, jnp.int32(1 << 30))
+    off = jnp.arange(page, dtype=jnp.int32)
+    return (base[:, :, None] + off[None, None, :]).reshape(st.shape[0], -1)
+
+
 def run_paged_prefill_attention(
     q: jax.Array,
     k_new: jax.Array,
@@ -438,17 +459,31 @@ def run_paged_decode_attention(
     spec: AttentionSpec = AttentionSpec(),
     rt: Runtime = Runtime(),
     kv_live: int | None = None,
+    ring_window: int | None = None,
+    ring_tiles: int | None = None,
 ) -> jax.Array:
     """One-token attention over the paged pool: q (B, H, hd), per-row
     ``cur_len`` live lengths in virtual token space.  ``kv_live`` buckets the
-    virtual extent (compile-per-bucket, like the contiguous engine)."""
+    virtual extent (compile-per-bucket, like the contiguous engine).
+    ``ring_window`` / ``ring_tiles`` select the mod-window ring form:
+    positions are unbounded, the table's ``ring_tiles`` slots are reused in
+    phase, and only the trailing ``ring_window`` keys are live."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 
         return ops.flash_paged_decode(
             q, k_pool, v_pool, cur_len, page_table, page=page, spec=spec,
-            kv_live=kv_live,
+            kv_live=kv_live, ring_window=ring_window, ring_tiles=ring_tiles,
         )
+    if ring_tiles is not None:
+        cl = jnp.broadcast_to(
+            jnp.asarray(cur_len, jnp.int32).reshape(-1), (q.shape[0],)
+        )
+        kg = gather_pages(k_pool, page_table, ring_tiles * page, page)
+        vg = gather_pages(v_pool, page_table, ring_tiles * page, page)
+        kpos = ring_kpos(cl - 1, page, ring_tiles)  # (B, R*page) slot order
+        mask = (kpos < cl[:, None]) & (kpos > (cl[:, None] - 1 - ring_window))
+        return decode_attention(q, kg, vg, None, pattern_mask=mask)
     n_rows = page_table.shape[1] * page
     if kv_live is not None:
         n_rows = min(n_rows, max(int(kv_live), 1))
@@ -469,17 +504,30 @@ def run_paged_chunk_attention(
     spec: AttentionSpec = AttentionSpec(),
     rt: Runtime = Runtime(),
     kv_live: int | None = None,
+    ring_window: int | None = None,
+    ring_tiles: int | None = None,
 ) -> jax.Array:
     """Mixed chunked-prefill attention over the paged pool (the paged form of
     :func:`run_chunk_attention`): q (B, C, H, hd) rows at absolute positions
     ``start[b]..``, per-row page tables, per-row live-tile tables translated
-    to physical pages."""
+    to physical pages.  ``ring_window`` / ``ring_tiles`` select the
+    mod-window ring form (slot-phase tables, absolute-position masks)."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 
         return ops.flash_paged_chunk(
             q, k_pool, v_pool, start, ntok, page_table, page=page, spec=spec,
-            kv_live=kv_live,
+            kv_live=kv_live, ring_window=ring_window, ring_tiles=ring_tiles,
+        )
+    if ring_tiles is not None:
+        sv = jnp.asarray(start, jnp.int32).reshape(-1)
+        nv = jnp.asarray(ntok, jnp.int32).reshape(-1)
+        fr = sv + jnp.maximum(nv, 1) - 1  # per-row write frontier
+        kg = gather_pages(k_pool, page_table, ring_tiles * page, page)
+        vg = gather_pages(v_pool, page_table, ring_tiles * page, page)
+        kpos = ring_kpos(fr, page, ring_tiles)
+        return chunk_attention_cache(
+            q, kg, vg, sv, window=ring_window, kpos=kpos
         )
     n_rows = page_table.shape[1] * page
     if kv_live is not None:

@@ -24,9 +24,11 @@ from repro.models import params as pp
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.config import ModelConfig, Slot
+from repro.core import sparsity
 from repro.models.layers import (
     Runtime,
     apply_rope,
+    gather_pages,
     gelu,
     layer_norm,
     rms_norm,
@@ -181,6 +183,7 @@ def _paged_kv_write(
     valid: jax.Array,
     page_table: jax.Array,
     page: int,
+    ring_tiles: int | None = None,
 ) -> jax.Array:
     """Page-table-indirected masked scatter: token KV at absolute positions
     ``rows`` (B, C) lands at ``page_table[b, rows // page] * page + rows %
@@ -188,6 +191,11 @@ def _paged_kv_write(
     (beyond ``ntok`` / ``lengths``) or whose virtual tile is unallocated
     (sentinel id) scatter out of bounds and are dropped — a row can never
     clobber a page it does not own.
+
+    ``ring_tiles`` is the mod-window modulus: the table has ``ring_tiles``
+    slots and absolute tile ``rows // page`` writes slot
+    ``(rows // page) % ring_tiles`` — the paged replacement for the
+    contiguous ``_ring_place`` write path, phase-aligned for any position.
 
     Copy-on-write contract: with prefix sharing, a page table entry may
     alias a physical page other requests (or the host radix cache) also
@@ -197,7 +205,10 @@ def _paged_kv_write(
     (``PagePool.fork`` + :func:`paged_copy_page`) and repoints the table
     entry, making the first divergent write land in a private copy."""
     n_pages = pool.shape[0] // page
-    vt = jnp.clip(rows // page, 0, page_table.shape[1] - 1)
+    vt = rows // page
+    if ring_tiles is not None:
+        vt = vt % ring_tiles
+    vt = jnp.clip(vt, 0, page_table.shape[1] - 1)
     phys = jnp.take_along_axis(page_table, vt, axis=1)
     flat = phys * page + rows % page
     flat = jnp.where(valid & (phys < n_pages), flat, pool.shape[0])
@@ -254,8 +265,8 @@ def apply_attention(
         spec = dataclasses.replace(spec, pattern="dense")
 
     q = _proj(aparams, cfg, x, "wq", h).reshape(b, s, h, hd)
-    if is_cross and mode == "decode":
-        k_new = v_new = None  # cross-attention KV lives in the cache
+    if is_cross and (mode == "decode" or kv_source is None):
+        k_new = v_new = None  # cross-attention KV lives in the cache / pages
     else:
         src = kv_source if is_cross else x
         k_new = _proj(aparams, cfg, src, "wk", kv).reshape(b, src.shape[1], kv, hd)
@@ -271,30 +282,54 @@ def apply_attention(
             k_new = apply_rope(k_new, positions, cfg.rope_theta)
 
     new_cache = None
-    if page_table is not None:
+    if page_table is not None and is_cross:
+        # READ-ONLY shared page range: the encoder's cross KV was prefilled
+        # once into refcounted pages (:func:`paged_encode`) and this request's
+        # ``page_table`` merely aliases them — decode/chunk steps never write
+        # a cross page, so copy-on-write can never trigger and every decoder
+        # sharing the encoder output shares the physical pages outright.
+        assert cache is not None and page is not None
+        kg = gather_pages(cache["k"], page_table, cfg.enc_seq, page)
+        vg = gather_pages(cache["v"], page_table, cfg.enc_seq, page)
+        if mode == "decode":
+            out = run_decode_attention(
+                q[:, 0], kg, vg, None, spec=spec, rt=rt
+            )[:, None]
+        else:  # mixed chunk rows: every query reads the whole encoder output
+            out = run_attention(q, kg, vg, spec=spec, causal=False, rt=rt)
+        new_cache = cache  # pools untouched by construction
+    elif page_table is not None:
         # paged KV cache: ``cache`` is the GLOBAL page pool (n_pages * page,
         # KV, hd) shared by every batch row; ``page_table`` (B, n_vtiles)
         # maps each row's virtual kv tiles to physical pages.  Writes are
         # page-table-indirected masked scatters (invalid / unallocated rows
         # drop), reads go through the translated live-tile tables — the same
         # liveness maps as the contiguous engine, one extra indirection.
+        # A sliding-window config turns the table into a MOD-WINDOW RING:
+        # absolute tile j lives in slot j % ring_tiles, positions are
+        # unbounded, and the fine masks window on absolute positions — the
+        # paged replacement for the contiguous ``_ring_place`` path.
         assert cache is not None and pos is not None and page is not None
-        assert not is_cross, "paged caches are self-attention only"
-        assert not cfg.sliding_window, (
-            "paged caches index absolute positions; ring caches keep the "
-            "contiguous admission path"
-        )
+        ring_tiles = ring_window = None
+        if cfg.sliding_window:
+            _, _, _, sw = sparsity.canonical_pattern(
+                spec.pattern, spec.pattern_arg, True, None
+            )
+            ring_window = min(cfg.sliding_window, sw) if sw else cfg.sliding_window
+            ring_tiles = page_table.shape[1]
+            spec = dataclasses.replace(spec, pattern="dense")
         kc, vc = cache["k"], cache["v"]
         if mode == "mixed":
             assert ntok is not None
             rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, C)
             valid = jnp.arange(s)[None, :] < ntok[:, None]
-            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page)
-            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page)
+            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page, ring_tiles)
+            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page, ring_tiles)
             new_cache = {"k": kc, "v": vc}
             out = run_paged_chunk_attention(
                 q, kc, vc, pos, ntok, page_table, page=page, spec=spec,
-                rt=rt, kv_live=kv_live,
+                rt=rt, kv_live=kv_live, ring_window=ring_window,
+                ring_tiles=ring_tiles,
             )
         elif mode == "decode":
             # every row writes at its own position; a retired slot's page
@@ -304,14 +339,20 @@ def apply_attention(
             # wave, with the page table enforcing ownership
             rows = pos[:, None]  # (B, 1)
             valid = jnp.ones_like(rows, bool)
-            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page)
-            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page)
+            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page, ring_tiles)
+            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page, ring_tiles)
             new_cache = {"k": kc, "v": vc}
             out = run_paged_decode_attention(
                 q[:, 0], kc, vc, pos + 1, page_table, page=page, spec=spec,
-                rt=rt, kv_live=kv_live,
+                rt=rt, kv_live=kv_live, ring_window=ring_window,
+                ring_tiles=ring_tiles,
             )[:, None]
         elif mode == "prefill":
+            if ring_tiles is not None:
+                raise ValueError(
+                    "mod-window paged caches stream prefill through the "
+                    "chunk path; monolithic prefill would wrap the ring"
+                )
             rows = jnp.broadcast_to(
                 jnp.arange(s, dtype=jnp.int32)[None, :], (b, s)
             )
@@ -440,6 +481,7 @@ def apply_slot(
     ntok: jax.Array | None = None,
     page_table: jax.Array | None = None,
     page: int | None = None,
+    cross_table: jax.Array | None = None,
 ):
     """One layer: pre-norm mixer + (optional cross-attn) + pre-norm FFN."""
     aux = jnp.zeros((), jnp.float32)
@@ -469,12 +511,15 @@ def apply_slot(
         raise ValueError(slot.mixer)
     x = x + mix
 
-    if "cross" in sparams and (enc_out is not None or mode == "decode"):
+    if "cross" in sparams and (
+        enc_out is not None or mode == "decode" or cross_table is not None
+    ):
         hx = _norm(sparams["cross_norm"], cfg, x)
         cmix, cc = apply_attention(
             sparams["cross"], cfg, hx, rt, causal=False, positions=positions,
             mode=mode, cache=None if cache is None else cache.get("cross"), pos=pos,
             kv_source=enc_out, is_cross=True, use_rope=False,
+            page_table=cross_table, page=page,
         )
         if cc is not None:
             new_cache["cross"] = cc
@@ -520,6 +565,7 @@ def run_stack(
     ntok: jax.Array | None = None,  # (B,) valid chunk tokens (mixed step)
     page_table: jax.Array | None = None,  # (B, n_vtiles) paged-cache tables
     page: int | None = None,  # tokens per page (static)
+    cross_table: jax.Array | None = None,  # (B, n_ctiles) shared cross pages
 ):
     """Scan the periodic layer pattern.  Returns (x, new_caches, aux_sum)."""
 
@@ -535,6 +581,7 @@ def run_stack(
                 cache=None if p_cache is None else p_cache[key], pos=pos,
                 enc_out=enc_out, causal=causal, lengths=lengths, kv_live=kv_live,
                 ntok=ntok, page_table=page_table, page=page,
+                cross_table=cross_table,
             )
             new_cache[key] = c
             aux = aux + a
@@ -758,20 +805,22 @@ def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
     return out
 
 
-def paged_pool_specs(cfg: ModelConfig, n_pages: int, page: int) -> dict:
+def paged_pool_specs(
+    cfg: ModelConfig, n_pages: int, page: int, cross_pages: int | None = None
+) -> dict:
     """ParamSpec tree for the paged KV cache: one GLOBAL page pool per
     attention slot, (n_periods, n_pages * page, KV, hd) — no batch axis, no
     per-slot ``cache_len`` reservation.  Resident HBM is the pool; per-request
     footprint is the pages its page table holds, so capacity prices at live
-    tiles instead of ``batch x cache_len``.  Pools shard KV heads over the
-    model axis; pages stay replicated (sharding the page axis is the
+    tiles instead of ``batch x cache_len``.  Sliding-window configs need no
+    special layout here — the ring modulus lives in the page TABLE
+    (mod-window slots), the pool is just pages.  Encoder-decoder stacks add a
+    per-slot ``cross`` pool of ``cross_pages`` pages holding the encoder
+    output's KV as read-only shared page ranges.  Pools shard KV heads over
+    the model axis; pages stay replicated (sharding the page axis is the
     ROADMAP's sharded-paged-cache item)."""
     n = cfg.n_periods
     kv, hd = cfg.n_kv_heads, cfg.head_dim
-    if cfg.sliding_window:
-        raise ValueError("paged pools have no ring layout; use cache_specs")
-    if cfg.family == "encdec":
-        raise ValueError("paged pools have no cross-attention caches")
     out: dict = {}
     for j, slot in enumerate(cfg.period_slots):
         sc: dict = {}
@@ -782,6 +831,12 @@ def paged_pool_specs(cfg: ModelConfig, n_pages: int, page: int) -> dict:
             sc["attn"] = {"k": kvspec, "v": kvspec}
         elif slot.mixer == "mamba":
             raise ValueError("paged serving requires attention-only stacks")
+        if cfg.family == "encdec":
+            cspec = ParamSpec(
+                (n, (cross_pages or n_pages) * page, kv, hd),
+                (None, None, "tp", None),
+            )
+            sc["cross"] = {"k": cspec, "v": cspec}
         out[f"slot{j:02d}"] = sc
     return out
 
@@ -802,6 +857,14 @@ def paged_prefill(
     through the translated block map (batch-1; the page table is one row).
     Returns (last-real-token logits, updated pools) — no contiguous wave, no
     cache insert: the pool already holds the request's pages."""
+    if cfg.sliding_window:
+        raise ValueError(
+            "mod-window paged caches stream prefill through the chunk path"
+        )
+    if cfg.family == "encdec":
+        raise ValueError(
+            "encdec paged admission streams decoder chunks after paged_encode"
+        )
     tokens = batch["tokens"]
     x = embed_tokens(params, cfg, tokens, rt)
     positions = jnp.arange(x.shape[1])
@@ -823,6 +886,52 @@ def paged_prefill(
     return logits, caches
 
 
+def paged_encode(
+    params: Params,
+    cfg: ModelConfig,
+    frames: jax.Array,
+    rt: Runtime,
+    *,
+    caches: dict,
+    cross_table: jax.Array,
+    page: int,
+):
+    """Run the encoder ONCE and scatter every decoder slot's cross-attention
+    KV into the shared cross page pool through ``cross_table`` (one row of
+    physical page ids covering ``cfg.enc_seq`` positions).
+
+    The written pages are READ-ONLY for the rest of their life: every decoder
+    request sharing this encoder input aliases them via ``PagePool.retain``,
+    decode never writes a cross page, so copy-on-write can never trigger and
+    cross-attention prefix sharing falls out of the refcounts for free.
+    Returns the updated pools (non-cross leaves untouched)."""
+    enc_out = run_encoder(params, cfg, frames, rt)
+    b, s_enc = enc_out.shape[0], enc_out.shape[1]
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    rows = jnp.broadcast_to(
+        jnp.arange(s_enc, dtype=jnp.int32)[None, :], (b, s_enc)
+    )
+    valid = jnp.ones((b, s_enc), bool)
+    ct = jnp.asarray(cross_table, jnp.int32).reshape(b, -1)
+    new_caches = dict(caches)
+    for j, _slot in enumerate(cfg.period_slots):
+        key = f"slot{j:02d}"
+        slot_params = params["layers"][key]
+        if "cross" not in slot_params or "cross" not in caches[key]:
+            continue
+        kp, vp = caches[key]["cross"]["k"], caches[key]["cross"]["v"]
+        for i in range(cfg.n_periods):
+            ap = jax.tree.map(lambda a: a[i], slot_params["cross"])
+            k_new = _proj(ap, cfg, enc_out, "wk", kv).reshape(b, s_enc, kv, hd)
+            v_new = _proj(ap, cfg, enc_out, "wv", kv).reshape(b, s_enc, kv, hd)
+            if cfg.qk_norm:
+                k_new = rms_norm(k_new, ap["k_norm"], cfg.norm_eps)
+            kp = kp.at[i].set(_paged_kv_write(kp[i], k_new, rows, valid, ct, page))
+            vp = vp.at[i].set(_paged_kv_write(vp[i], v_new, rows, valid, ct, page))
+        new_caches[key] = {**caches[key], "cross": {"k": kp, "v": vp}}
+    return new_caches
+
+
 def decode_step(
     params: Params,
     cfg: ModelConfig,
@@ -834,6 +943,7 @@ def decode_step(
     kv_live: int | None = None,
     page_table: jax.Array | None = None,
     page: int | None = None,
+    cross_table: jax.Array | None = None,
 ):
     """One token for the whole batch.  tokens: (B, 1); pos: scalar int32
     (static batch) or (B,) int32 per-request positions (ragged batch —
@@ -852,6 +962,7 @@ def decode_step(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="decode",
         positions=positions, caches=caches, pos=pos, causal=cfg.causal,
         kv_live=kv_live, page_table=page_table, page=page,
+        cross_table=cross_table,
     )
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)
@@ -871,6 +982,7 @@ def mixed_step(
     kv_live: int | None = None,
     page_table: jax.Array | None = None,
     page: int | None = None,
+    cross_table: jax.Array | None = None,
 ):
     """One mixed chunked-prefill/decode step for the whole batch.
 
@@ -897,6 +1009,7 @@ def mixed_step(
         params["layers"], cfg, x, rt, slots=cfg.period_slots, mode="mixed",
         positions=positions, caches=caches, pos=pos, causal=cfg.causal,
         kv_live=kv_live, ntok=ntok, page_table=page_table, page=page,
+        cross_table=cross_table,
     )
     nf = jax.tree.map(lambda a: a[0], params["final_norm"])
     x = _norm(nf, cfg, x)

@@ -238,6 +238,7 @@ def test_paged_matches_contiguous(pattern, arg, impl, mode, cache_len, lens, chu
     pag = loop.run(mk())
     for r1, r2 in zip(ref, pag):
         assert r2.generated == r1.generated, f"uid {r1.uid}"
+    loop.close()  # releases the persistent radix refs; raises on leaks
     assert loop.pool.in_use == 0, "pages leaked after the run"
     assert loop.stats["pool_peak_pages"] <= loop.stats["pool_pages"]
 
@@ -269,6 +270,7 @@ def test_paged_out_of_pages_backpressure():
     assert loop.stats["max_concurrent"] == 1
     for r1, r2 in zip(ref, done):
         assert r2.generated == r1.generated, f"uid {r1.uid}"
+    loop.close()
     assert loop.pool.in_use == 0
 
 

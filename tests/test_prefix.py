@@ -188,6 +188,8 @@ def test_shared_prefix_matches_cold_start(pattern, arg, impl, mode):
     assert cold.stats["prefix_hit_tokens"] == 0
     assert warm.stats["prefix_hit_tokens"] > 0
     assert warm.stats["prefill_tokens"] < cold.stats["prefill_tokens"]
+    warm.close()  # drops the persistent radix refs; raises on leaks
+    cold.close()
     assert warm.pool.in_use == 0 and cold.pool.in_use == 0
 
 
@@ -218,6 +220,7 @@ def test_cow_sibling_divergence_isolation():
             assert r2.generated == r1.generated, (chunked, r1.uid)
         assert loop.stats["cow_forks"] >= 1, chunked
         assert loop.stats["prefix_hit_tokens"] == 200, chunked
+        loop.close()
         assert loop.pool.in_use == 0
 
 
@@ -245,6 +248,7 @@ def test_eviction_then_readmit_correct():
     for r1, r2 in zip(ref, out):
         assert r2.generated == r1.generated, f"uid {r1.uid}"
     assert loop.stats["prefix_evicted_pages"] > 0
+    loop.close()
     assert loop.pool.in_use == 0
 
 
@@ -261,4 +265,5 @@ def test_prefix_cache_off_is_pr5_behaviour():
     loop.run(reqs)
     assert loop.stats["prefix_hits"] == 0
     assert loop.stats["prefill_tokens"] == total
+    loop.close()
     assert loop.pool.in_use == 0
