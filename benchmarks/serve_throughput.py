@@ -16,6 +16,10 @@ Scenarios (``--scenario``):
 * ``long_prompt``  short decoders in flight when one near-cache-length
                    prompt arrives mid-decode — the admission-stall showcase
 * ``burst``        arrivals in bursts of batch-size groups
+* ``poisson``      Poisson arrivals (seeded exponential inter-arrival gaps)
+                   with a mixed interactive/batch priority split — the
+                   irregular-traffic shape the priority scheduler and the
+                   SLO stats (p50/p99 TTFT + ITL per class) exist for
 * ``sliding_window``  ragged traffic under a sliding-window config (the
                    contiguous modes serve the seed per-slot ring; chunked/
                    paged serve mod-window ring page tables; ``--window``
@@ -111,6 +115,32 @@ def burst_workload(cfg, n: int, cache_len: int, seed: int, batch: int) -> list[R
     return reqs
 
 
+def poisson_workload(cfg, n: int, cache_len: int, seed: int) -> list[Request]:
+    """Poisson arrival process (exponential inter-arrival gaps in engine
+    clock units) over a mixed-priority population: ~1/3 ``batch`` requests
+    with longer prompts/generations, the rest ``interactive`` and short.
+    Seeded, so the scenario is a deterministic replay — the same arrival
+    tape every run — which is what lets CI compare schedulers on it."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=2.0, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    reqs = []
+    for i in range(n):
+        interactive = rng.random() >= 1 / 3
+        if interactive:
+            plen = int(rng.integers(3, max(4, cache_len // 8)))
+            max_new = int(rng.integers(2, max(3, cache_len // 8)))
+        else:
+            plen = int(rng.integers(cache_len // 4, max(cache_len // 2, 5)))
+            max_new = int(rng.integers(3, max(4, cache_len // 4)))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        reqs.append(Request(
+            uid=i, prompt=prompt, max_new=max_new, arrival=int(arrivals[i]),
+            priority="interactive" if interactive else "batch",
+        ))
+    return reqs
+
+
 def shared_prefix_workload(cfg, n: int, cache_len: int, seed: int) -> list[Request]:
     """Every request = one long shared prefix (half the cache) + a short
     unique suffix — the system-prompt/few-shot-template traffic shape the
@@ -158,6 +188,8 @@ def make_workload(cfg, scenario: str, n: int, cache_len: int, seed: int, batch: 
         return long_prompt_workload(cfg, n, cache_len, seed)
     if scenario == "burst":
         return burst_workload(cfg, n, cache_len, seed, batch)
+    if scenario == "poisson":
+        return poisson_workload(cfg, n, cache_len, seed)
     if scenario == "shared_prefix":
         return shared_prefix_workload(cfg, n, cache_len, seed)
     if scenario == "sliding_window":
@@ -170,30 +202,29 @@ MODES = ("static", "continuous", "chunked", "paged")
 
 def run_mode(cfg, mesh, params, reqs, *, mode, batch, cache_len, chunk_size,
              reps: int = 3):
-    loop = ServeLoop(
+    def fresh():
+        return [
+            Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                    arrival=r.arrival, priority=r.priority)
+            for r in reqs
+        ]
+
+    with ServeLoop(
         cfg, mesh, params, batch=batch, cache_len=cache_len,
         static_batching=(mode == "static"),
         chunked=(mode in ("chunked", "paged")), paged=(mode == "paged"),
         chunk_size=chunk_size,
-    )
-
-    def fresh():
-        return [
-            Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
-                    arrival=r.arrival)
-            for r in reqs
-        ]
-
-    loop.run(fresh())  # warmup: compiles prefill buckets + mixed/decode steps
-    best = None
-    for _ in range(reps):  # best-of-N: host scheduling noise dwarfs the
-        work = fresh()     # deltas on small smoke workloads
-        t0 = time.perf_counter()
-        done = loop.run(work)
-        dt = time.perf_counter() - t0
-        if best is None or dt < best[1]:
-            toks = sum(len(r.generated) for r in done)
-            best = (toks, dt, dict(loop.stats), done)
+    ) as loop:
+        loop.run(fresh())  # warmup: compiles prefill buckets + decode steps
+        best = None
+        for _ in range(reps):  # best-of-N: host scheduling noise dwarfs the
+            work = fresh()     # deltas on small smoke workloads
+            t0 = time.perf_counter()
+            done = loop.run(work)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[1]:
+                toks = sum(len(r.generated) for r in done)
+                best = (toks, dt, dict(loop.stats), done)
     return best
 
 
@@ -204,8 +235,8 @@ def main() -> None:
     ap.add_argument("--pattern", default="dense",
                     choices=["dense", "butterfly", "strided", "global_window"])
     ap.add_argument("--scenario", default="mixed",
-                    choices=["mixed", "long_prompt", "burst", "shared_prefix",
-                             "sliding_window"])
+                    choices=["mixed", "long_prompt", "burst", "poisson",
+                             "shared_prefix", "sliding_window"])
     ap.add_argument("--window", type=int, default=None,
                     help="sliding window for the sliding_window scenario "
                          "(default cache_len // 4)")
@@ -243,6 +274,16 @@ def main() -> None:
                          "without, token-identically, pool fully drained "
                          "(deterministic sub-benchmark; emits the "
                          "prefix_cache BENCH section)")
+    ap.add_argument("--check-preempt", action="store_true",
+                    help="CI gate: under a page-pool overload with mixed "
+                         "priorities, the priority scheduler preempts a "
+                         "batch request for an interactive one; the "
+                         "preempted-then-resumed request must be "
+                         "token-identical to its unpreempted run, the "
+                         "interactive p99 TTFT must beat FIFO's on the same "
+                         "tape, no request starves, and both pools drain at "
+                         "close() (deterministic sub-benchmark; emits the "
+                         "preemption BENCH section)")
     ap.add_argument("--json", default="BENCH_attention.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
@@ -284,6 +325,7 @@ def main() -> None:
     cap_json = []
     prefix_json = []
     ring_json = []
+    preempt_json = []
     failures = []
     for impl in impls:
         cfg = dataclasses.replace(
@@ -339,6 +381,11 @@ def main() -> None:
                 "live_kv_flops_per_step": fl,
                 "live_kv_hbm_bytes_per_step": hbm,
                 "cache_util": round(util, 3),
+                "slo": stats.get("slo"),
+                "slo_attainment": stats.get("slo_attainment"),
+                "preemptions": stats.get("preemptions"),
+                "aging_promotions": stats.get("aging_promotions"),
+                "starved_requests": stats.get("starved_requests"),
             })
         if args.check_chunked:
             failures += check_chunked(impl, per_mode)
@@ -360,6 +407,12 @@ def main() -> None:
             )
             ring_json += ring_rows
             failures += ring_fail
+        if args.check_preempt:
+            pr_rows, pr_fail = check_preempt(
+                cfg, mesh, params, impl=impl, pattern=args.pattern,
+            )
+            preempt_json += pr_rows
+            failures += pr_fail
         if args.scenario == "shared_prefix" and "paged" in per_mode:
             # the scenario's paged run doubles as the prefix-cache BENCH row:
             # how much admission work the radix tree absorbed on this shape
@@ -391,6 +444,8 @@ def main() -> None:
             write_bench_json(args.json, "prefix_cache", prefix_json)
         if ring_json:
             write_bench_json(args.json, "ring_capacity", ring_json)
+        if preempt_json:
+            write_bench_json(args.json, "preemption", preempt_json)
     if failures:
         for f in failures:
             print(f"CHECK FAILED: {f}", file=sys.stderr)
@@ -403,6 +458,8 @@ def main() -> None:
         print("check-prefix: all assertions passed")
     if args.check_ring:
         print("check-ring: all assertions passed")
+    if args.check_preempt:
+        print("check-preempt: all assertions passed")
 
 
 def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
@@ -431,25 +488,25 @@ def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
             for i, (p, (_, mn)) in enumerate(zip(prompts, lens))
         ]
 
-    contig = ServeLoop(
+    with ServeLoop(
         cfg, mesh, params, batch=contig_batch, cache_len=cache_len,
         chunked=True, chunk_size=chunk,
-    )
-    t0 = time.perf_counter()
-    done_c = contig.run(mk())
-    dt_c = time.perf_counter() - t0
-    paged = ServeLoop(
+    ) as contig:
+        t0 = time.perf_counter()
+        done_c = contig.run(mk())
+        dt_c = time.perf_counter() - t0
+    with ServeLoop(
         cfg, mesh, params, batch=len(prompts), cache_len=cache_len,
         chunked=True, chunk_size=chunk, paged=True, pool_pages=budget_pages,
-    )
-    assert paged.page == page, (
-        f"capacity gate sized its budget in {page}-token pages but the "
-        f"engine derived {paged.page}-token pages — the dense-reservation "
-        "comparison would be in mismatched units"
-    )
-    t0 = time.perf_counter()
-    done_p = paged.run(mk())
-    dt_p = time.perf_counter() - t0
+    ) as paged:
+        assert paged.page == page, (
+            f"capacity gate sized its budget in {page}-token pages but the "
+            f"engine derived {paged.page}-token pages — the dense-reservation "
+            "comparison would be in mismatched units"
+        )
+        t0 = time.perf_counter()
+        done_p = paged.run(mk())
+        dt_p = time.perf_counter() - t0
 
     failures = []
     for rc, rp in zip(done_c, done_p):
@@ -525,25 +582,26 @@ def check_ring(cfg, mesh, params, *, impl: str, pattern: str):
         return [Request(uid=i, prompt=p, max_new=mn)
                 for i, (p, (_, mn)) in enumerate(zip(prompts, lens))]
 
-    contig = ServeLoop(wcfg, mesh, params, batch=batch, cache_len=cache_len)
-    t0 = time.perf_counter()
-    done_c = contig.run(mk())
-    dt_c = time.perf_counter() - t0
-    paged = ServeLoop(
+    with ServeLoop(
+        wcfg, mesh, params, batch=batch, cache_len=cache_len,
+    ) as contig:
+        t0 = time.perf_counter()
+        done_c = contig.run(mk())
+        dt_c = time.perf_counter() - t0
+    with ServeLoop(
         wcfg, mesh, params, batch=batch, cache_len=cache_len,
         chunked=True, chunk_size=chunk,
-    )
-    assert paged.paged and paged.ring_tiles is not None, (
-        "a chunked sliding-window loop must auto-upgrade to the paged ring"
-    )
-    assert paged.page == page, (
-        f"ring gate sized its reservation in {page}-token pages but the "
-        f"engine derived {paged.page}-token pages"
-    )
-    t0 = time.perf_counter()
-    done_p = paged.run(mk())
-    dt_p = time.perf_counter() - t0
-    paged.close()
+    ) as paged:
+        assert paged.paged and paged.ring_tiles is not None, (
+            "a chunked sliding-window loop must auto-upgrade to the paged ring"
+        )
+        assert paged.page == page, (
+            f"ring gate sized its reservation in {page}-token pages but the "
+            f"engine derived {paged.page}-token pages"
+        )
+        t0 = time.perf_counter()
+        done_p = paged.run(mk())
+        dt_p = time.perf_counter() - t0
 
     failures = []
     for rc, rp in zip(done_c, done_p):
@@ -623,22 +681,25 @@ def check_prefix(cfg, mesh, params, *, impl: str, pattern: str):
     pool = n_req * (cache_len // page)
     runs = {}
     for warm in (False, True):
-        loop = ServeLoop(
-            cfg, mesh, params, batch=n_req, cache_len=cache_len,
-            chunk_size=512, paged=True, pool_pages=pool, prefix_cache=warm,
-        )
-        assert loop.page == page, (
-            f"prefix gate sized its prefix in {page}-token pages but the "
-            f"engine derived {loop.page}-token pages"
-        )
-        t0 = time.perf_counter()
-        done = loop.run(mk())
-        dt = time.perf_counter() - t0
-        stats = dict(loop.stats)
-        try:  # the radix tree legitimately holds pages until close()
-            loop.close()
+        done = None
+        try:
+            with ServeLoop(
+                cfg, mesh, params, batch=n_req, cache_len=cache_len,
+                chunk_size=512, paged=True, pool_pages=pool,
+                prefix_cache=warm,
+            ) as loop:
+                assert loop.page == page, (
+                    f"prefix gate sized its prefix in {page}-token pages "
+                    f"but the engine derived {loop.page}-token pages"
+                )
+                t0 = time.perf_counter()
+                done = loop.run(mk())
+                dt = time.perf_counter() - t0
+                stats = dict(loop.stats)
         except RuntimeError:
-            pass  # leave the leak visible in in_use below
+            if done is None:  # run() itself failed, not the close() drain
+                raise
+            # leak at close(): leave it visible in in_use below
         runs[warm] = (done, stats, loop.pool.in_use, dt)
 
     failures = []
@@ -700,6 +761,127 @@ def check_prefix(cfg, mesh, params, *, impl: str, pattern: str):
         f"lower, peak pages {stats_c['pool_peak_pages']} -> "
         f"{stats_w['pool_peak_pages']} ({pages_x:.1f}x) across {n_req} "
         f"requests sharing {prefix_len} tokens"
+    )
+    return [row], failures
+
+
+def check_preempt(cfg, mesh, params, *, impl: str, pattern: str):
+    """The preemption CI gate: a deterministic overload tape on the paged
+    chunked engine.  Two long ``batch`` requests arrive at t=0 and together
+    reserve 8 of the 10 pool pages; an ``interactive`` request at t=6 still
+    fits (committed 10/10), but a second one at t=8 cannot — the priority
+    scheduler must evict the youngest batch request (its written prefix
+    lands in the radix tree, so resume is a warm hit) while FIFO, run on
+    the same tape, can only wait for a completion.  Deterministic
+    assertions: (a) the priority run preempts >= 1 time and resumes the
+    victim, (b) EVERY request — including the preempted-then-resumed one —
+    generates token-identically to an uncontended run with an ample pool,
+    (c) the interactive class's p99 TTFT under priority scheduling beats
+    FIFO's on the same workload, (d) no request starves in either run, and
+    (e) both runs' pools fully drain at ``close()``.  Returns (bench rows,
+    failures) and emits the ``preemption`` BENCH section."""
+    page = 128  # the effective kv tile of the default spec
+    cache_len = 8 * page
+    chunk = 64
+    batch = 4
+    pool = 10  # 2 batch x 4 pages + 1 interactive x 2 fills it exactly
+    rng = np.random.default_rng(17)
+    spec = [  # (priority, plen, max_new, arrival)
+        ("batch", 448, 24, 0),
+        ("batch", 448, 24, 0),
+        ("interactive", 160, 8, 6),
+        ("interactive", 160, 8, 8),
+    ]
+    prompts = [rng.integers(0, cfg.vocab, size=pl).astype(np.int32)
+               for _, pl, _, _ in spec]
+
+    def mk():
+        return [
+            Request(uid=i, prompt=p, max_new=mn, arrival=ar, priority=prio)
+            for i, (p, (prio, _, mn, ar)) in enumerate(zip(prompts, spec))
+        ]
+
+    def run(scheduler: str, pool_pages: int):
+        with ServeLoop(
+            cfg, mesh, params, batch=batch, cache_len=cache_len,
+            chunked=True, chunk_size=chunk, paged=True,
+            pool_pages=pool_pages, scheduler=scheduler,
+            slo_ttft=24, slo_itl=6.0,
+        ) as loop:
+            assert loop.page == page, (
+                f"preempt gate sized its pool in {page}-token pages but the "
+                f"engine derived {loop.page}-token pages"
+            )
+            t0 = time.perf_counter()
+            done = loop.run(mk())
+            dt = time.perf_counter() - t0
+            stats = dict(loop.stats)
+        return done, stats, loop.pool.in_use, dt
+
+    done_ref, _, _, _ = run("priority", 64)  # ample pool: no preemption
+    done_p, stats_p, inuse_p, dt_p = run("priority", pool)
+    done_f, stats_f, inuse_f, dt_f = run("fifo", pool)
+
+    failures = []
+    if stats_p["preemptions"] < 1 or stats_p["resumes"] < 1:
+        failures.append(
+            f"{impl}/{pattern}: overload tape produced "
+            f"{stats_p['preemptions']} preemptions / "
+            f"{stats_p['resumes']} resumes — the gate exercised nothing"
+        )
+    for tag, done in (("preempting", done_p), ("fifo", done_f)):
+        for rr, rd in zip(done_ref, done):
+            if rr.generated != rd.generated:
+                failures.append(
+                    f"{impl}/{pattern}: uid {rr.uid} {tag} generations "
+                    f"diverge from the uncontended run — "
+                    f"preemption/requeue corrupted tokens"
+                )
+                break
+    ttft_p = stats_p["slo"]["interactive"]["ttft_p99"]
+    ttft_f = stats_f["slo"]["interactive"]["ttft_p99"]
+    if not ttft_p < ttft_f:
+        failures.append(
+            f"{impl}/{pattern}: interactive p99 TTFT {ttft_p:.1f} clocks "
+            f"under priority scheduling is not below FIFO's {ttft_f:.1f} "
+            f"on the same overload tape"
+        )
+    for tag, stats in (("priority", stats_p), ("fifo", stats_f)):
+        if stats["starved_requests"]:
+            failures.append(
+                f"{impl}/{pattern}: {stats['starved_requests']} requests "
+                f"starved (no tokens emitted) under {tag} scheduling"
+            )
+    for tag, inuse in (("priority", inuse_p), ("fifo", inuse_f)):
+        if inuse != 0:
+            failures.append(
+                f"{impl}/{pattern}: {tag} run left {inuse} pages "
+                f"referenced after close() — refcount leak"
+            )
+    row = {
+        "attn": impl,
+        "pattern": pattern,
+        "cache_len": cache_len,
+        "pool_pages": pool,
+        "preemptions": stats_p["preemptions"],
+        "resumes": stats_p["resumes"],
+        "resume_warm_hits": stats_p["resume_warm_hits"],
+        "aging_promotions": stats_p["aging_promotions"],
+        "slo_priority": stats_p["slo"],
+        "slo_fifo": stats_f["slo"],
+        "slo_attainment_priority": stats_p["slo_attainment"],
+        "slo_attainment_fifo": stats_f["slo_attainment"],
+        "interactive_ttft_p99_priority": ttft_p,
+        "interactive_ttft_p99_fifo": ttft_f,
+        "tokens": sum(len(r.generated) for r in done_p),
+        "wall_s_priority": round(dt_p, 3),
+        "wall_s_fifo": round(dt_f, 3),
+    }
+    print(
+        f"preemption[{impl}/{pattern}]: {stats_p['preemptions']} "
+        f"preemptions, {stats_p['resume_warm_hits']}/{stats_p['resumes']} "
+        f"warm resumes; interactive p99 TTFT {ttft_p:.0f} clocks vs FIFO "
+        f"{ttft_f:.0f} at a {pool}-page pool"
     )
     return [row], failures
 

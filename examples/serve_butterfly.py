@@ -6,7 +6,9 @@ the paged engine (one global page pool, per-request tile-granular page
 tables; capacity priced at live pages instead of batch x cache_len) — and
 must generate identical tokens.  A fourth run serves a SLIDING-WINDOW
 config through the paged engine's mod-window ring tables and must match
-the contiguous ring engine token for token.
+the contiguous ring engine token for token.  A fifth run overloads a tiny
+page pool with mixed priorities: the scheduler preempts the youngest batch
+request for an interactive arrival and resumes it, still token-complete.
 
     PYTHONPATH=src python examples/serve_butterfly.py
 """
@@ -39,51 +41,73 @@ def requests():
     ]
 
 
-loop = ServeLoop(cfg, mesh, params, batch=2, cache_len=32)
-done = loop.run(requests())
-for r in done:
-    print(f"request {r.uid}: prompt_len={len(r.prompt)} -> generated={r.generated}")
-print(f"admission engine: {loop.stats['prefill_calls']} prefills, "
-      f"{loop.stats['decode_steps']} ragged decode steps, "
-      f"{loop.stats['admission_stall_steps']} admission stalls")
+# ``with`` closes each engine on exit — even when an assertion below fires —
+# releasing prefix-cache references and verifying the page pools drain
+with ServeLoop(cfg, mesh, params, batch=2, cache_len=32) as loop:
+    done = loop.run(requests())
+    for r in done:
+        print(f"request {r.uid}: prompt_len={len(r.prompt)} -> generated={r.generated}")
+    print(f"admission engine: {loop.stats['prefill_calls']} prefills, "
+          f"{loop.stats['decode_steps']} ragged decode steps, "
+          f"{loop.stats['admission_stall_steps']} admission stalls")
 
-chunked = ServeLoop(
+with ServeLoop(
     cfg, mesh, params, batch=2, cache_len=32, chunked=True, chunk_size=8
-)
-done_ch = chunked.run(requests())
-assert [r.generated for r in done_ch] == [r.generated for r in done], \
-    "chunked scheduling changed the tokens"
-print(f"chunked engine:   {chunked.stats['mixed_steps']} mixed steps "
-      f"({chunked.stats['prefill_tokens']} prompt tokens streamed, "
-      f"{chunked.stats['decode_tokens']} decoded), "
-      f"{chunked.stats['decode_stall_steps']} decode stalls — token-identical")
+) as chunked:
+    done_ch = chunked.run(requests())
+    assert [r.generated for r in done_ch] == [r.generated for r in done], \
+        "chunked scheduling changed the tokens"
+    print(f"chunked engine:   {chunked.stats['mixed_steps']} mixed steps "
+          f"({chunked.stats['prefill_tokens']} prompt tokens streamed, "
+          f"{chunked.stats['decode_tokens']} decoded), "
+          f"{chunked.stats['decode_stall_steps']} decode stalls — token-identical")
 
-paged = ServeLoop(
+with ServeLoop(
     cfg, mesh, params, batch=2, cache_len=32, chunked=True, chunk_size=8,
     paged=True,
-)
-done_pg = paged.run(requests())
-assert [r.generated for r in done_pg] == [r.generated for r in done], \
-    "page-table indirection changed the tokens"
-print(f"paged engine:     {paged.stats['mixed_steps']} mixed steps, "
-      f"{paged.stats['pool_peak_pages']}/{paged.stats['pool_pages']} peak "
-      f"pages resident ({paged.stats['page_allocs']} allocs) — "
-      f"token-identical across all three engines")
-paged.close()
+) as paged:
+    done_pg = paged.run(requests())
+    assert [r.generated for r in done_pg] == [r.generated for r in done], \
+        "page-table indirection changed the tokens"
+    print(f"paged engine:     {paged.stats['mixed_steps']} mixed steps, "
+          f"{paged.stats['pool_peak_pages']}/{paged.stats['pool_pages']} peak "
+          f"pages resident ({paged.stats['page_allocs']} allocs) — "
+          f"token-identical across all three engines")
 
 # sliding window: the XLA reference (contiguous per-slot ring rows) vs the
 # paged engine's mod-window ring page table — absolute tile j lives in page-
 # table slot j % ring_tiles, decode laps the ring, tokens must not move
 wcfg = dataclasses.replace(cfg, sliding_window=10)
 wparams = M.init_params(wcfg, jax.random.PRNGKey(0))
-wref = ServeLoop(wcfg, mesh, wparams, batch=2, cache_len=32)
-done_wr = wref.run(requests())
-wring = ServeLoop(wcfg, mesh, wparams, batch=2, cache_len=32, paged=True)
-done_wp = wring.run(requests())
-assert [r.generated for r in done_wp] == [r.generated for r in done_wr], \
-    "mod-window ring paging changed the tokens"
-print(f"windowed paged:   window={wcfg.sliding_window}, "
-      f"ring_tiles={wring.ring_tiles}, "
-      f"{wring.stats['pool_peak_pages']}/{wring.stats['pool_pages']} peak "
-      f"pages resident — token-identical to the contiguous ring reference")
-wring.close()
+with ServeLoop(wcfg, mesh, wparams, batch=2, cache_len=32) as wref:
+    done_wr = wref.run(requests())
+with ServeLoop(wcfg, mesh, wparams, batch=2, cache_len=32, paged=True) as wring:
+    done_wp = wring.run(requests())
+    assert [r.generated for r in done_wp] == [r.generated for r in done_wr], \
+        "mod-window ring paging changed the tokens"
+    print(f"windowed paged:   window={wcfg.sliding_window}, "
+          f"ring_tiles={wring.ring_tiles}, "
+          f"{wring.stats['pool_peak_pages']}/{wring.stats['pool_pages']} peak "
+          f"pages resident — token-identical to the contiguous ring reference")
+
+# priority scheduling under pool pressure: two long batch prompts fill a
+# 4-page pool; a late interactive request preempts the youngest (its pages
+# are donated to the radix tree and it resumes, token-identically)
+rng = np.random.default_rng(0)
+pressure = [
+    Request(uid=0, priority="batch", max_new=8, arrival=0,
+            prompt=rng.integers(0, cfg.vocab, size=200).astype(np.int32)),
+    Request(uid=1, priority="batch", max_new=8, arrival=0,
+            prompt=rng.integers(0, cfg.vocab, size=200).astype(np.int32)),
+    Request(uid=2, priority="interactive", max_new=4, arrival=4,
+            prompt=rng.integers(0, cfg.vocab, size=100).astype(np.int32)),
+]
+with ServeLoop(cfg, mesh, params, batch=3, cache_len=512, chunked=True,
+               chunk_size=32, paged=True, pool_pages=4) as prio:
+    done_pr = prio.run(pressure)
+    slo = prio.stats["slo"]
+    print(f"priority engine:  {prio.stats['preemptions']} preemptions / "
+          f"{prio.stats['resumes']} resumes at a 4-page pool; interactive "
+          f"p99 TTFT {slo['interactive']['ttft_p99']:.0f} clocks vs batch "
+          f"{slo['batch']['ttft_p99']:.0f} — every request completed "
+          f"({sum(len(r.generated) for r in done_pr)} tokens)")

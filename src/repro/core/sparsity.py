@@ -58,6 +58,7 @@ __all__ = [
     "page_last_reader_union",
     "page_residency",
     "page_peak_resident",
+    "page_resume_peak",
 ]
 
 PATTERNS = ("dense", "causal", "window", "butterfly", "strided", "global_window")
@@ -701,7 +702,9 @@ def page_last_reader_union(
     every layer of a stack, so a request's retention is the union of its
     slots' patterns — the serve engine's admission reservation and the
     dry-run's capacity pricing both build on THIS schedule, from one
-    definition."""
+    definition.  A bare pattern name means a single-pattern stack."""
+    if isinstance(patterns, str):
+        patterns = (patterns,)
     nt = -(-length // kv_tile)
     last = np.zeros(nt, np.int64)
     for p in patterns:
@@ -779,6 +782,45 @@ def page_peak_resident(
     )
     res = page_residency(last, length, kv_tile, step_span, start_tile)
     return int(res.max()) if length else 0
+
+
+def page_resume_peak(
+    patterns,
+    length: int,
+    q_tile: int,
+    kv_tile: int,
+    *,
+    frontier: int,
+    step_span: int = 1,
+    pattern_arg: int | None = None,
+) -> int:
+    """Residency-from-frontier: the worst-case resident page count of a
+    request RESUMED at query position ``frontier`` — the admission
+    reservation the serve engine makes when a preempted request re-enters
+    through the restartable chunked-prefill path (or when a prefix-cache
+    hit starts prefill at its divergence frontier; the two are the same
+    computation, which is why resume rides the prefix-hit machinery).
+
+    The request's written positions still span ``0..length-1``; tiles below
+    ``frontier``'s tile are carried by the radix cache's references (or
+    recomputed cold), so the resumed request itself only ever allocates
+    from tile ``frontier // kv_tile`` up — the max of the
+    :func:`page_residency` curve over positions ``>= frontier`` with
+    ``start_tile`` at the frontier's tile.  ``patterns`` is the stack's
+    attention-pattern set, as for :func:`page_last_reader_union`."""
+    if length <= 0:
+        return 0
+    if not 0 <= frontier < length:
+        raise ValueError(
+            f"resume frontier {frontier} outside written span 0..{length - 1}"
+        )
+    last = page_last_reader_union(
+        patterns, length, q_tile, kv_tile, pattern_arg=pattern_arg
+    )
+    res = page_residency(
+        last, length, kv_tile, step_span, start_tile=frontier // kv_tile
+    )
+    return int(res[frontier:].max())
 
 
 def chunk_token_mask(

@@ -38,6 +38,24 @@ triggers and cross-attention prefix sharing falls out of the refcounts).
 A chunked request for either family upgrades to the paged engine
 automatically — there is no contiguous chunked ring/encdec path to fall
 back to, by design.
+
+Under pool pressure the engine degrades gracefully instead of serializing:
+the admission queue is **priority-ordered** (``Request.priority`` —
+``interactive`` ahead of ``batch``, FIFO within a class, with an aging
+guard that promotes a batch request after ``aging_steps`` engine clocks so
+it is delayed, never starved), and a higher-priority request whose
+page-residency peak cannot be reserved **preempts** the youngest
+lowest-priority active request: the victim's completed full pages are
+inserted into the radix tree (so resume is a warm prefix hit), its pool
+references released, and the request requeued — resume re-enters through
+the restartable chunked-prefill path at the divergence frontier.  A
+per-request preemption cap plus a minimum-progress guard make
+preempt/resume livelock impossible.  Sliding-window rings and
+encoder-decoder cross ranges are **non-preemptible** (fixed page sets,
+radix disabled — there is nothing warm to resume from).  Every engine mode
+stamps per-request time-to-first-token and inter-token latency in
+engine-step clock units and aggregates p50/p99 and an SLO-attainment
+fraction into ``stats``.
 """
 
 from __future__ import annotations
@@ -455,7 +473,14 @@ class PagePool:
     is gone — dead-tile freeing from the retention schedules composes with
     sharing for free.  ``fork`` is the allocator half of copy-on-write: a
     writer that holds a page jointly trades its reference for a fresh
-    private page (the engine copies the device rows)."""
+    private page (the engine copies the device rows).
+
+    Every reference carries an advisory ``owner`` label (request id, the
+    radix tree, the encoder cache) so a leak at :meth:`ServeLoop.close`
+    names WHO still holds the pages instead of just counting them —
+    :meth:`holders` aggregates the labels of every in-use page.  Labels
+    never influence refcount semantics; a mismatched release just drops the
+    most recent label."""
 
     def __init__(self, n_pages: int):
         if n_pages < 1:
@@ -463,6 +488,7 @@ class PagePool:
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
         self._refs = [0] * n_pages
+        self._owners: list[list[str]] = [[] for _ in range(n_pages)]
         self.in_use = 0
         self.peak_in_use = 0
         self.alloc_count = 0
@@ -477,7 +503,14 @@ class PagePool:
             raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
         return self._refs[pid]
 
-    def alloc(self) -> int:
+    def _drop_owner(self, pid: int, owner: str | None) -> None:
+        ow = self._owners[pid]
+        if owner is not None and owner in ow:
+            ow.remove(owner)
+        elif ow:
+            ow.pop()
+
+    def alloc(self, owner: str = "?") -> int:
         if not self._free:
             raise RuntimeError(
                 "page pool exhausted — the reservation invariant was broken "
@@ -492,12 +525,13 @@ class PagePool:
                 "live refs — refcount bookkeeping is corrupt"
             )
         self._refs[pid] = 1
+        self._owners[pid] = [owner]
         self.in_use += 1
         self.alloc_count += 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pid
 
-    def retain(self, pid: int) -> None:
+    def retain(self, pid: int, owner: str = "?") -> None:
         """Add a sharer's reference to an allocated page (prefix aliasing)."""
         if not 0 <= pid < self.n_pages:
             raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
@@ -505,8 +539,9 @@ class PagePool:
             raise ValueError(f"retain of free page {pid} — it could be "
                              "reallocated under the new reader")
         self._refs[pid] += 1
+        self._owners[pid].append(owner)
 
-    def fork(self, pid: int) -> int:
+    def fork(self, pid: int, owner: str = "?") -> int:
         """Copy-on-write: move the caller's reference off shared page ``pid``
         onto a freshly allocated private page (returned).  The caller owns
         the device copy of the rows.  Forking an exclusively-held page is an
@@ -519,12 +554,13 @@ class PagePool:
             raise ValueError(
                 f"fork of exclusively-held page {pid} — write in place"
             )
-        new = self.alloc()
+        new = self.alloc(owner)
         self._refs[pid] -= 1  # never reaches zero here: refs were >= 2
+        self._drop_owner(pid, owner)
         self.fork_count += 1
         return new
 
-    def release(self, pid: int) -> None:
+    def release(self, pid: int, owner: str | None = None) -> None:
         if not 0 <= pid < self.n_pages:
             raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
         if self._refs[pid] == 0:
@@ -533,9 +569,19 @@ class PagePool:
             # corruption; fail loudly at the bug site instead
             raise ValueError(f"page id {pid} is not allocated (double free?)")
         self._refs[pid] -= 1
+        self._drop_owner(pid, owner)
         if self._refs[pid] == 0:
             self._free.append(pid)
             self.in_use -= 1
+
+    def holders(self) -> dict[str, int]:
+        """Reference counts per owner label over all in-use pages — the
+        attribution a leak error reports."""
+        c: collections.Counter[str] = collections.Counter()
+        for pid in range(self.n_pages):
+            if self._refs[pid]:
+                c.update(self._owners[pid] or ["?"])
+        return dict(c)
 
 
 class _RadixNode:
@@ -653,7 +699,7 @@ class RadixCache:
             new = _RadixNode(tokens[i:].copy(), list(pages[i // self.page:]), node)
             new.last_use = self.clock
             for p in new.pages:
-                self.pool.retain(p)
+                self.pool.retain(p, owner="radix")
             self.held_pages += len(new.pages)
             self.inserted_pages += len(new.pages)
             node.children.setdefault(int(tokens[i]), []).append(new)
@@ -697,7 +743,7 @@ class RadixCache:
             if victim is None:
                 break
             for p in victim.pages:
-                self.pool.release(p)
+                self.pool.release(p, owner="radix")
             freed += len(victim.pages)
             self.held_pages -= len(victim.pages)
             self.evicted_pages += len(victim.pages)
@@ -712,7 +758,7 @@ class RadixCache:
         readers survive until those readers release."""
         for n in self._walk():
             for p in n.pages:
-                self.pool.release(p)
+                self.pool.release(p, owner="radix")
         self.root = _RadixNode(np.empty(0, np.int32), [], None)
         self.held_pages = 0
 
@@ -730,14 +776,87 @@ class _PagedSlot:
         return int(self.peak_from[min(pos, self.length - 1)])
 
 
+# priority classes, best first.  Rank 0 is served ahead of rank 1 at every
+# admission decision; the aging guard promotes a waiting batch request to
+# rank 0 after ``aging_steps`` engine clocks so batch work is delayed under
+# load, never starved.
+_PRIORITY_RANK = {"interactive": 0, "batch": 1}
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int
     arrival: int = 0  # earliest engine step at which the request exists
+    priority: str = "interactive"  # scheduling class, see _PRIORITY_RANK
     generated: list[int] = dataclasses.field(default_factory=list)
     extras: dict = dataclasses.field(default_factory=dict)  # e.g. encdec frames
+    # SLO accounting, in engine-step clock units (reset by each run()):
+    emit_clocks: list[int] = dataclasses.field(default_factory=list)
+    ttft: int | None = None  # first-token clock minus arrival
+    preemptions: int = 0  # times this request was evicted and requeued
+
+
+class _AdmitQueue:
+    """Priority-ordered admission queue with an aging/starvation guard.
+
+    ``peek(clock)`` returns the best ARRIVED request under the order
+    (rank, arrival, insertion seq) — interactive ahead of batch, FIFO
+    within a class — without removing it; the engine pops it only once its
+    page reservation succeeds, so backpressure keeps the request queued.
+    A batch request that has waited ``aging_steps`` clocks is promoted to
+    the interactive rank (counted in ``promotions``): batch work is
+    delayed under load, never starved.  ``fifo=True`` disables both the
+    priority order and aging — the strict arrival-order baseline the
+    --check-preempt gate compares against.  Preempted requests re-enter
+    through ``push`` keeping their original ``arrival``, so their age (and
+    any promotion) keeps accruing across evictions."""
+
+    def __init__(self, requests: list[Request], aging_steps: int,
+                 fifo: bool = False):
+        self.aging_steps = aging_steps
+        self.fifo = fifo
+        self.promotions = 0
+        self._seq = 0
+        self._q: list[tuple[int, Request]] = []
+        for r in requests:
+            self.push(r)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, r: Request) -> None:
+        self._q.append((self._seq, r))
+        self._seq += 1
+
+    def rank(self, r: Request, clock: int) -> int:
+        if self.fifo:
+            return 0
+        base = _PRIORITY_RANK[r.priority]
+        if base and clock - r.arrival >= self.aging_steps:
+            return 0  # aged: promoted to the interactive rank
+        return base
+
+    def peek(self, clock: int) -> Request | None:
+        best_key, best = None, None
+        for seq, r in self._q:
+            if r.arrival > clock:
+                continue
+            key = (self.rank(r, clock), r.arrival, seq)
+            if best_key is None or key < best_key:
+                best_key, best = key, r
+        return best
+
+    def pop(self, r: Request, clock: int) -> None:
+        for i, (_, q) in enumerate(self._q):
+            if q is r:
+                if (not self.fifo and _PRIORITY_RANK[r.priority]
+                        and self.rank(r, clock) == 0):
+                    self.promotions += 1
+                del self._q[i]
+                return
+        raise ValueError(f"pop of request {r.uid} not in queue")
 
 
 def _next_bucket(n: int, cap: int, floor: int = 8) -> int:
@@ -858,7 +977,10 @@ class ServeLoop:
         chunked: bool = False, chunk_size: int = 32,
         chunk_budget: int | None = None, paged: bool = False,
         page: int | None = None, pool_pages: int | None = None,
-        prefix_cache: bool = True,
+        prefix_cache: bool = True, scheduler: str = "priority",
+        aging_steps: int = 64, max_preemptions: int = 2,
+        preempt_min_progress: int = 1, slo_ttft: int | None = None,
+        slo_itl: float | None = None,
     ):
         cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
         if cfg.sliding_window and cache_len < cfg.sliding_window:
@@ -902,12 +1024,43 @@ class ServeLoop:
             # read-only page tables ARE the streaming layout for these
             # families (there is no contiguous chunked ring/encdec path)
             paged = True
+        if scheduler not in ("priority", "fifo"):
+            raise ValueError(
+                f"scheduler must be 'priority' or 'fifo', got {scheduler!r}"
+            )
+        if aging_steps < 1:
+            raise ValueError(f"aging_steps must be >= 1, got {aging_steps}")
+        if max_preemptions < 0:
+            raise ValueError(
+                f"max_preemptions must be >= 0, got {max_preemptions}"
+            )
+        if preempt_min_progress < 1:
+            raise ValueError(
+                "preempt_min_progress must be >= 1, got "
+                f"{preempt_min_progress} — zero progress between evictions "
+                "is a livelock"
+            )
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.batch, self.cache_len = batch, cache_len
         self.static_batching = static_batching
         self.chunked = chunked
         self.chunk_size = chunk_size
         self.chunk_budget = chunk_budget if chunk_budget is not None else chunk_size
+        self.fifo = scheduler == "fifo"
+        self.aging_steps = aging_steps
+        self.max_preemptions = max_preemptions
+        self.preempt_min_progress = preempt_min_progress
+        self.slo_ttft = slo_ttft
+        self.slo_itl = slo_itl
+        self._closed = False
+        # preemption needs a page substrate to evict from and a restartable
+        # resume path; rings hold fixed in-phase page sets and encdec KV
+        # depends on the frames through cross-attention — both families are
+        # NON-preemptible (nothing warm to resume from, by declaration)
+        self.preemptible = (
+            paged and not self.fifo and max_preemptions > 0
+            and not cfg.sliding_window and cfg.family != "encdec"
+        )
         self.paged = paged
         if paged:
             spec = cfg.attention_spec
@@ -1035,6 +1188,16 @@ class ServeLoop:
 
     def _validate(self, requests: list[Request]) -> None:
         for r in requests:
+            if r.arrival < 0:
+                raise ValueError(
+                    f"request {r.uid}: negative arrival {r.arrival} — the "
+                    "engine clock starts at 0"
+                )
+            if r.priority not in _PRIORITY_RANK:
+                raise ValueError(
+                    f"request {r.uid}: unknown priority {r.priority!r} "
+                    f"(expected one of {sorted(_PRIORITY_RANK)})"
+                )
             if len(r.prompt) < 1:
                 raise ValueError(f"request {r.uid}: prompt must be non-empty")
             if len(r.prompt) > self.cache_len:
@@ -1077,6 +1240,9 @@ class ServeLoop:
                         "'frames' extras (the encoder input)"
                     )
             r.generated.clear()
+            r.emit_clocks.clear()
+            r.ttft = None
+            r.preemptions = 0
 
     # -- engine loops -----------------------------------------------------
 
@@ -1164,7 +1330,7 @@ class ServeLoop:
         )
 
     def _ensure_writable(self, pool, pt, slot: int, lo_pos: int, hi_pos: int,
-                         caches):
+                         caches, owner: str = "?"):
         """Back every virtual tile overlapping positions [lo_pos, hi_pos)
         with a page this request may WRITE before the step that writes it:
         unbacked tiles allocate; tiles whose physical page is shared (an
@@ -1181,14 +1347,15 @@ class ServeLoop:
         for t in range(lo_pos // self.page, (hi_pos - 1) // self.page + 1):
             pid = int(pt[slot, t])
             if pid == self.pool_pages:
-                pt[slot, t] = pool.alloc()
+                pt[slot, t] = pool.alloc(owner)
             elif pool.page_refs(pid) > 1:
-                new = pool.fork(pid)
+                new = pool.fork(pid, owner)
                 caches = self.p_copy_fn(caches, jnp.int32(pid), jnp.int32(new))
                 pt[slot, t] = new
         return caches
 
-    def _free_dead(self, pool, pt, slot: int, sc: _PagedSlot, frontier: int):
+    def _free_dead(self, pool, pt, slot: int, sc: _PagedSlot, frontier: int,
+                   owner: str | None = None):
         """Release pages whose last possible reader is behind the request's
         next query position — dense-causal never frees until retirement,
         window frees the out-of-window tail, butterfly frees every tile its
@@ -1196,13 +1363,13 @@ class ServeLoop:
         nt = len(sc.last_reader)
         for t in range(nt):
             if pt[slot, t] != self.pool_pages and sc.last_reader[t] < frontier:
-                pool.release(int(pt[slot, t]))
+                pool.release(int(pt[slot, t]), owner)
                 pt[slot, t] = self.pool_pages
 
-    def _free_all(self, pool, pt, slot: int):
+    def _free_all(self, pool, pt, slot: int, owner: str | None = None):
         for t in range(pt.shape[1]):
             if pt[slot, t] != self.pool_pages:
-                pool.release(int(pt[slot, t]))
+                pool.release(int(pt[slot, t]), owner)
                 pt[slot, t] = self.pool_pages
 
     # -- prefix cache (radix tree over the page pool) ---------------------
@@ -1222,15 +1389,18 @@ class ServeLoop:
         )
         return t * M.model_flops_per_token(cfg, 1, mode="fwd") + attn
 
-    def _match_prefix(self, r: Request) -> tuple[int, list[int]]:
+    def _match_prefix(self, prompt: np.ndarray) -> tuple[int, list[int]]:
         """Longest-prefix match at admission.  Caps the match at plen-1 (the
         last prompt token must run to produce first-token logits) and skips
         sub-page matches (no page to alias).  The caller must retain the
-        returned pages before anything else can evict them."""
+        returned pages before anything else can evict them.  ``prompt`` is
+        the EFFECTIVE prompt: for a preempted request being resumed it is
+        the original prompt plus every token already emitted, so the warm
+        resume frontier is wherever the radix tree still covers it."""
         if self.radix is None:
             return 0, []
-        plen = len(r.prompt)
-        m, pages = self.radix.match(np.asarray(r.prompt, np.int32), plen - 1)
+        plen = len(prompt)
+        m, pages = self.radix.match(np.asarray(prompt, np.int32), plen - 1)
         if m < self.page:
             return 0, []
         return m, pages
@@ -1246,25 +1416,28 @@ class ServeLoop:
             gap = need + self.radix.held_pages - self.pool_pages
         return gap
 
-    def _cache_prefix(self, r: Request, pt, slot: int) -> None:
-        """On prompt completion, hand the prompt's full, still-resident pages
-        to the radix cache (shared ownership).  Retention may already have
-        freed mid-prompt tiles (butterfly streams past them) — only the
-        contiguous resident run from tile 0 is cacheable."""
+    def _cache_pages(self, tokens: np.ndarray, pt, slot: int) -> None:
+        """Hand ``tokens``' full, still-resident pages to the radix cache
+        (shared ownership) — called on prompt completion AND on preemption,
+        where ``tokens`` is the victim's written prefix so resume becomes a
+        warm hit.  Retention may already have freed mid-prompt tiles
+        (butterfly streams past them) — only the contiguous resident run
+        from tile 0 is cacheable."""
         if self.radix is None:
             return
-        k = len(r.prompt) // self.page
+        k = len(tokens) // self.page
         run = 0
         while run < k and pt[slot, run] != self.pool_pages:
             run += 1
         if run:
             self.radix.insert(
-                np.asarray(r.prompt[: run * self.page], np.int32),
+                np.asarray(tokens[: run * self.page], np.int32),
                 [int(pt[slot, t]) for t in range(run)],
             )
 
-    def _suffix_prefill(self, r: Request, m: int, sc: _PagedSlot, pool, pt,
-                        slot: int, caches, ct=None):
+    def _suffix_prefill(self, prompt: np.ndarray, m: int, sc: _PagedSlot,
+                        pool, pt, slot: int, caches, ct=None,
+                        owner: str = "?"):
         """Admission-mode prefill of a prefix-cache hit: stream ONLY the
         unique suffix (positions m..plen-1) through the paged chunk entry
         point — prefill starts at the divergence frontier, attending the
@@ -1274,14 +1447,15 @@ class ServeLoop:
         chunk-size spans, so the stream must keep that schedule).  Returns
         (first sampled token — device scalar, pools)."""
         C = self.chunk_size
-        plen = len(r.prompt)
+        plen = len(prompt)
         p = m
         logits1 = None
         while p < plen:
             t = min(C, plen - p)
-            caches = self._ensure_writable(pool, pt, slot, p, p + t, caches)
+            caches = self._ensure_writable(pool, pt, slot, p, p + t, caches,
+                                           owner)
             ctoks = np.zeros((1, C), np.int32)
-            ctoks[0, :t] = r.prompt[p : p + t]
+            ctoks[0, :t] = prompt[p : p + t]
             kv_live = _next_bucket(p + t, self.cache_len)
             logits1, caches = self.p_chunk_fn(
                 self.params, caches, jnp.asarray(ctoks),
@@ -1292,7 +1466,7 @@ class ServeLoop:
             self.stats["prefill_tokens"] += t
             self.stats["prefill_flops"] += self._prefill_flop_count(p, t)
             p += t
-            self._free_dead(pool, pt, slot, sc, p)
+            self._free_dead(pool, pt, slot, sc, p, owner)
         return jnp.argmax(logits1).astype(jnp.int32), caches
 
     def _cross_admit(self, r: Request, slot: int, ct, caches):
@@ -1308,7 +1482,7 @@ class ServeLoop:
         if pages is not None:
             self._cross_cache.move_to_end(key)  # LRU touch
             for p in pages:
-                self.cross_pool.retain(p)
+                self.cross_pool.retain(p, owner=f"req{r.uid}")
             ct[slot, : len(pages)] = pages
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += self.cfg.enc_seq
@@ -1325,55 +1499,208 @@ class ServeLoop:
                 )
             ]:
                 for p in self._cross_cache.pop(k):
-                    self.cross_pool.release(p)
+                    self.cross_pool.release(p, owner="encoder-cache")
                 if self.cross_pool.free_pages >= n:
                     break
         if self.cross_pool.free_pages < n:
             return None
-        pages = [self.cross_pool.alloc() for _ in range(n)]
+        pages = [self.cross_pool.alloc("encoder-cache") for _ in range(n)]
         ct[slot, :n] = pages
         caches = self.p_encode_fn(
             self.params, caches, jnp.asarray(frames)[None],
             jnp.asarray(ct[slot : slot + 1]),
         )
         for p in pages:  # the request's own reference; alloc's is the cache's
-            self.cross_pool.retain(p)
+            self.cross_pool.retain(p, owner=f"req{r.uid}")
         self._cross_cache[key] = pages
         self.stats["encode_calls"] = self.stats.get("encode_calls", 0) + 1
         return caches
 
-    def _release_cross(self, ct, slot: int) -> None:
+    def _release_cross(self, ct, slot: int, owner: str | None = None) -> None:
         """Drop the request's references on its aliased cross page range."""
         for t in range(ct.shape[1]):
             if ct[slot, t] != self.cross_pages:
-                self.cross_pool.release(int(ct[slot, t]))
+                self.cross_pool.release(int(ct[slot, t]), owner)
                 ct[slot, t] = self.cross_pages
+
+    # -- priority scheduling, preemption, SLO accounting ------------------
+
+    @staticmethod
+    def _eff_prompt(r: Request) -> np.ndarray:
+        """The EFFECTIVE prompt of an admission: the original prompt plus
+        every already-emitted token — non-empty ``generated`` only for a
+        preempted request being resumed.  Greedy sampling makes the resume
+        token-identical: re-prefilling the written prefix reconstructs the
+        exact cache the victim lost (warm via the radix tree where its
+        pages survived, cold recompute otherwise), and the next sampled
+        token follows deterministically."""
+        if not r.generated:
+            return np.asarray(r.prompt, np.int32)
+        return np.concatenate(
+            [np.asarray(r.prompt, np.int32),
+             np.asarray(r.generated, np.int32)]
+        )
+
+    def _stamp_emits(self, sinks: list[tuple[Request, int]],
+                     clock: int) -> None:
+        """Record the emission clock of every token pushed this step — the
+        raw series per-request TTFT / inter-token latency aggregate from."""
+        for r, _ in sinks:
+            if r.ttft is None:
+                r.ttft = clock - r.arrival
+            r.emit_clocks.append(clock)
+
+    def _finalize_slo(self, requests: list[Request],
+                      q: _AdmitQueue) -> None:
+        """End-of-run latency aggregation: p50/p99 TTFT and mean inter-token
+        latency per priority class (engine-step clock units), the
+        SLO-attainment fraction (1.0 when no SLO is configured), and the
+        scheduler counters every loop shares."""
+        per: dict[str, dict[str, list[float]]] = {}
+        attained: list[bool] = []
+        for r in requests:
+            if not r.emit_clocks:
+                continue
+            t = float(r.ttft)
+            gaps = np.diff(np.asarray(r.emit_clocks))
+            itl = float(gaps.mean()) if len(gaps) else 0.0
+            d = per.setdefault(r.priority, {"ttft": [], "itl": []})
+            d["ttft"].append(t)
+            d["itl"].append(itl)
+            ok = True
+            if self.slo_ttft is not None and t > self.slo_ttft:
+                ok = False
+            if self.slo_itl is not None and itl > self.slo_itl:
+                ok = False
+            attained.append(ok)
+        slo = {}
+        for prio in sorted(per):
+            ts = np.asarray(per[prio]["ttft"])
+            its = np.asarray(per[prio]["itl"])
+            slo[prio] = {
+                "n": int(len(ts)),
+                "ttft_p50": float(np.percentile(ts, 50)),
+                "ttft_p99": float(np.percentile(ts, 99)),
+                "itl_p50": float(np.percentile(its, 50)),
+                "itl_p99": float(np.percentile(its, 99)),
+            }
+        self.stats["slo"] = slo
+        self.stats["slo_attainment"] = (
+            float(np.mean(attained)) if attained else 1.0
+        )
+        self.stats["aging_promotions"] = q.promotions
+        self.stats["starved_requests"] = sum(
+            1 for r in requests if not r.emit_clocks
+        )
+        self.stats.setdefault("preemptions", 0)
+
+    def _preempt_slot(self, s: int, q: _AdmitQueue, fetch, pool, pt,
+                      active, sched, parr, pos) -> None:
+        """Evict the request in slot ``s``: flush the async token fetch (the
+        snapshot must hold every emitted token), donate its written prefix's
+        full resident pages to the radix tree (so resume is a warm hit),
+        release its pool pages, and requeue it at its ORIGINAL arrival so
+        its age — and any aging promotion — keeps accruing."""
+        fetch.flush()
+        r = active[s]
+        written = self._eff_prompt(r)[: int(pos[s])]
+        self._cache_pages(written, pt, s)
+        self._free_all(pool, pt, s, owner=f"req{r.uid}")
+        r.preemptions += 1
+        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+        active[s] = None
+        sched[s] = None
+        if parr is not None:
+            parr[s] = None
+        q.push(r)
+
+    def _preempt_until(self, need, rank: int, q: _AdmitQueue, fetch, pool,
+                       pt, active, sched, parr, pos, admit_pos,
+                       admit_seq) -> int:
+        """Preempt youngest lowest-priority victims until the reservation
+        gap ``self._fits(need())`` closes or no eligible victim remains;
+        returns the final gap (<= 0 means the admission fits).  A victim
+        must hold a strictly worse RAW priority rank than the admitting
+        request (aging changes admission order, never preemption power), be
+        under the per-request preemption cap, and have advanced at least
+        ``preempt_min_progress`` positions since its own admission — the
+        cap bounds total evictions and the progress floor bounds wasted
+        work, so preempt/resume cannot livelock."""
+        gap = self._fits(need())
+        while gap > 0:
+            victim, vkey = None, None
+            for s in range(self.batch):
+                a = active[s]
+                if a is None:
+                    continue
+                if _PRIORITY_RANK[a.priority] <= rank:
+                    continue
+                if a.preemptions >= self.max_preemptions:
+                    continue
+                if int(pos[s]) - int(admit_pos[s]) < self.preempt_min_progress:
+                    continue
+                key = (_PRIORITY_RANK[a.priority], int(a.arrival),
+                       int(admit_seq[s]))
+                if victim is None or key > vkey:
+                    victim, vkey = s, key
+            if victim is None:
+                break
+            self._preempt_slot(victim, q, fetch, pool, pt, active, sched,
+                               parr, pos)
+            gap = self._fits(need())
+        return gap
 
     def close(self) -> None:
         """Release the engine-held cache state (radix tree references, cached
         encoder cross ranges) and check the pools drain to zero.  The pools
         and the prefix caches PERSIST across ``run()`` calls — a warm second
         run alias-hits the first run's prompts — so the end-of-run drain
-        assertion of the per-run engines lives here instead."""
-        if not self.paged:
+        assertion of the per-run engines lives here instead.
+
+        Idempotent: a second ``close()`` after a CLEAN first one is a no-op.
+        A close that raised (leak detected) stays re-runnable so a caller
+        can release the stragglers and verify the drain; the leak error
+        names the holders (:meth:`PagePool.holders` labels) so the bug site
+        is attributable without a refcount bisect."""
+        if self._closed or not self.paged:
+            self._closed = True
             return
         if self.radix is not None:
             self.radix.clear()
         if self.cross_pages is not None:
             for pages in self._cross_cache.values():
                 for p in pages:
-                    self.cross_pool.release(p)
+                    self.cross_pool.release(p, owner="encoder-cache")
             self._cross_cache.clear()
             if self.cross_pool.in_use:
                 raise RuntimeError(
                     f"cross pool leak: {self.cross_pool.in_use} pages still "
-                    "referenced after close() released the encoder cache"
+                    "referenced after close() released the encoder cache — "
+                    f"held by {self.cross_pool.holders()}"
                 )
         if self.pool.in_use:
             raise RuntimeError(
                 f"page pool leak: {self.pool.in_use} pages still referenced "
-                "after close() released the radix tree"
+                "after close() released the radix tree — held by "
+                f"{self.pool.holders()}"
             )
+        self._closed = True
+
+    def __enter__(self) -> "ServeLoop":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            # an exception is already propagating: close best-effort, but a
+            # leak (requests mid-flight when the body raised) must not mask
+            # the original error
+            try:
+                self.close()
+            except RuntimeError:
+                pass
+            return False
+        self.close()
+        return False
 
     def _finish_paged_run(self, pool) -> None:
         """End-of-run bookkeeping shared by both paged loops: surface the
@@ -1401,8 +1728,7 @@ class ServeLoop:
         their slot — but every admission stalls all live decode slots for
         one blocking batch-1 prefill (counted in ``admission_stall_steps``).
         """
-        queue = list(requests)
-        qi = 0
+        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
         active: list[Request | None] = [None] * self.batch
         pos = np.zeros(self.batch, np.int32)  # next write position per slot
         remaining = np.zeros(self.batch, np.int32)  # decode tokens still owed
@@ -1414,24 +1740,25 @@ class ServeLoop:
         clock = 0  # admission clock: decode steps + idle ticks (arrivals)
         with self.mesh:
             caches = self._zero_caches()
-            while qi < len(queue) or any(r is not None for r in active):
+            while len(q) or any(r is not None for r in active):
                 # admit: fill free slots (waves only, under static batching)
                 may_admit = not self.static_batching or all(
                     r is None for r in active
                 )
                 if may_admit:
                     for slot in range(self.batch):
-                        if qi >= len(queue) or queue[qi].arrival > clock:
-                            break  # FIFO: the head hasn't arrived yet
                         if active[slot] is not None:
                             continue
-                        r = queue[qi]
-                        qi += 1
+                        r = q.peek(clock)
+                        if r is None:
+                            break  # nothing in the queue has arrived yet
+                        q.pop(r, clock)
                         if any(a is not None for a in active):
                             # live decode slots idle for this whole prefill —
                             # the stall the chunked engine exists to remove
                             self.stats["admission_stall_steps"] += 1
                         tok, wave = self._prefill_one(r)
+                        self._stamp_emits([(r, 0)], clock)
                         fetch.push(tok, [(r, 0)])
                         if r.max_new <= 1:
                             continue  # done at prefill; slot stays free
@@ -1472,9 +1799,11 @@ class ServeLoop:
                     remaining[slot] -= 1
                     if remaining[slot] <= 0:
                         active[slot] = None  # evict: slot frees for the queue
+                self._stamp_emits(sinks, clock)
                 fetch.push(toks, sinks)
                 nxt = toks
         fetch.flush()
+        self._finalize_slo(requests, q)
         return requests
 
     def _run_chunked(self, requests: list[Request]) -> list[Request]:
@@ -1485,8 +1814,7 @@ class ServeLoop:
         stay bucketed at the decode rows' own live-cache depth while the
         prompt streams at its own."""
         B, C = self.batch, self.chunk_size
-        queue = list(requests)
-        qi = 0
+        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
         active: list[Request | None] = [None] * B
         pos = np.zeros(B, np.int32)  # next cache write position per slot
         consumed = np.zeros(B, np.int32)  # prompt tokens consumed per slot
@@ -1503,16 +1831,16 @@ class ServeLoop:
         rr = 0  # round-robin offset: fair prefill budget across slots
         with self.mesh:
             caches = self._zero_caches()
-            while qi < len(queue) or any(r is not None for r in active):
+            while len(q) or any(r is not None for r in active):
                 # admission is free: a freed slot starts consuming the next
                 # arrived request's chunks on the very next mixed step
                 for slot in range(B):
-                    if qi >= len(queue) or queue[qi].arrival > clock:
-                        break  # FIFO: the head hasn't arrived yet
                     if active[slot] is not None:
                         continue
-                    r = queue[qi]
-                    qi += 1
+                    r = q.peek(clock)
+                    if r is None:
+                        break  # nothing in the queue has arrived yet
+                    q.pop(r, clock)
                     active[slot] = r
                     pos[slot] = 0
                     consumed[slot] = 0
@@ -1530,8 +1858,18 @@ class ServeLoop:
                 use_nxt = np.zeros(B, bool)
                 chunk_t = np.zeros(B, np.int32)
                 budget = self.chunk_budget
-                for k in range(B):
-                    slot = (rr + k) % B
+                # interactive rows split the chunk budget ahead of batch
+                # rows; the rotation keeps it fair within a class (and IS
+                # the whole order under uniform priority / fifo scheduling)
+                order = sorted(
+                    range(B),
+                    key=lambda s: (
+                        0 if self.fifo or active[s] is None
+                        else _PRIORITY_RANK[active[s].priority],
+                        (s - rr) % B,
+                    ),
+                )
+                for slot in order:
                     r = active[slot]
                     if r is None:
                         continue
@@ -1582,6 +1920,7 @@ class ServeLoop:
                         remaining[slot] -= 1
                         if remaining[slot] <= 0:
                             active[slot] = None
+                    self._stamp_emits(sinks, clock)
                     fetch.push(toks, sinks)
                     nxt = jnp.where(jnp.asarray(use_nxt), toks, nxt)
                 # (b) prompt chunks — mixed_step at (1, C) per mid-prompt
@@ -1606,12 +1945,14 @@ class ServeLoop:
                         # the chunk that finishes the prompt samples the
                         # first generated token (logits at ntok-1)
                         tok1 = jnp.argmax(logits1).astype(jnp.int32)
+                        self._stamp_emits([(r, 0)], clock)
                         fetch.push(tok1, [(r, 0)])
                         nxt = nxt.at[slot].set(tok1)
                         remaining[slot] -= 1
                         if remaining[slot] <= 0:
                             active[slot] = None
         fetch.flush()
+        self._finalize_slo(requests, q)
         return requests
 
     def _run_paged_admission(self, requests: list[Request]) -> list[Request]:
@@ -1627,12 +1968,14 @@ class ServeLoop:
         table, reserves only the unique-suffix peak, and prefills JUST the
         suffix from the divergence frontier (via the chunk entry point)."""
         B = self.batch
-        queue = list(requests)
-        qi = 0
+        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
         active: list[Request | None] = [None] * B
         sched: list[_PagedSlot | None] = [None] * B
         pos = np.zeros(B, np.int32)
         remaining = np.zeros(B, np.int32)
+        admit_pos = np.zeros(B, np.int32)  # pos at admission: progress floor
+        admit_seq = np.zeros(B, np.int64)  # admission order: victim tiebreak
+        aseq = 0
         nxt = jnp.zeros((B,), jnp.int32)
         pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
         pool = self.pool
@@ -1645,37 +1988,68 @@ class ServeLoop:
             "admission_backpressure": 0, "max_concurrent": 0,
             "prefill_tokens": 0, "prefill_flops": 0.0,
             "prefix_hits": 0, "prefix_hit_tokens": 0,
+            "preemptions": 0, "resumes": 0, "resume_warm_hits": 0,
         }
         clock = 0
         with self.mesh:
             caches = (
                 self._pools if self._pools is not None else self._zero_pools()
             )
-            while qi < len(queue) or any(r is not None for r in active):
+            while len(q) or any(r is not None for r in active):
                 for slot in range(B):
-                    if qi >= len(queue) or queue[qi].arrival > clock:
-                        break  # FIFO: the head hasn't arrived yet
                     if active[slot] is not None:
                         continue
-                    r = queue[qi]
-                    plen = len(r.prompt)
-                    L = plen + r.max_new - 1
+                    r = q.peek(clock)
+                    if r is None:
+                        break  # nothing in the queue has arrived yet
+                    pr = self._eff_prompt(r)  # prompt + resumed tokens
+                    plen = len(pr)
+                    mn = r.max_new - len(r.generated)
+                    L = plen + mn - 1  # == original prompt + max_new - 1
+                    own = f"req{r.uid}"
+                    rank = _PRIORITY_RANK[r.priority]
                     # prefix hit: alias cached pages, reserve the unique
                     # suffix only; fall back to a cold admission if even
-                    # that reservation cannot fit
-                    m, spages = self._match_prefix(r)
+                    # that reservation cannot fit (after preempting any
+                    # eligible lower-priority victims)
+                    m, spages = self._match_prefix(pr)
                     if m:
                         for p in spages:
-                            pool.retain(p)
+                            pool.retain(p, owner=own)
                         sc = self._paged_schedule(
                             L, step_span=self.chunk_size,
                             start_tile=m // self.page,
                         )
-                        committed = self._committed(active, sched, pos)
-                        if self._fits(committed + sc.remaining_peak(m)) > 0:
+                        need = lambda: (
+                            self._committed(active, sched, pos)
+                            + sc.remaining_peak(m)
+                        )
+                        gap = self._fits(need())
+                        if gap > 0 and self.preemptible:
+                            gap = self._preempt_until(
+                                need, rank, q, fetch, pool, pt, active,
+                                sched, None, pos, admit_pos, admit_seq,
+                            )
+                        if gap > 0:
                             for p in spages:
-                                pool.release(p)
-                            m, spages = 0, []
+                                pool.release(p, owner=own)
+                            cold_peak = self._paged_schedule(
+                                L, step_span=(
+                                    self.chunk_size
+                                    if self.cross_pages is not None else plen
+                                ),
+                            ).remaining_peak(0)
+                            if cold_peak < sc.remaining_peak(m):
+                                # cold genuinely cheaper (retention frees
+                                # tiles the alias would pin): retry cold
+                                m, spages = 0, []
+                            else:
+                                # cold could not fit either — and its _fits
+                                # would evict the very prefix (a preemption
+                                # victim's donated pages) that makes the
+                                # eventual resume warm
+                                self.stats["admission_backpressure"] += 1
+                                break
                     if not m:
                         if self.ring_tiles is not None:
                             sc = self._ring_schedule(L)
@@ -1687,8 +2061,17 @@ class ServeLoop:
                             )
                         else:
                             sc = self._paged_schedule(L, step_span=plen)
-                        committed = self._committed(active, sched, pos)
-                        if self._fits(committed + sc.remaining_peak(0)) > 0:
+                        need = lambda: (
+                            self._committed(active, sched, pos)
+                            + sc.remaining_peak(0)
+                        )
+                        gap = self._fits(need())
+                        if gap > 0 and self.preemptible:
+                            gap = self._preempt_until(
+                                need, rank, q, fetch, pool, pt, active,
+                                sched, None, pos, admit_pos, admit_seq,
+                            )
+                        if gap > 0:
                             # out of pages: the head waits for decode to free
                             # some — backpressure, not an error
                             self.stats["admission_backpressure"] += 1
@@ -1700,7 +2083,11 @@ class ServeLoop:
                             self.stats["admission_backpressure"] += 1
                             break
                         caches = nc
-                    qi += 1
+                    q.pop(r, clock)
+                    if r.preemptions:  # a victim re-admitting (possibly
+                        self.stats["resumes"] += 1  # mid-prefill, no tokens)
+                        if m:
+                            self.stats["resume_warm_hits"] += 1
                     if any(a is not None for a in active):
                         self.stats["admission_stall_steps"] += 1
                     ct_row = (
@@ -1712,7 +2099,7 @@ class ServeLoop:
                         self.stats["prefix_hits"] += 1
                         self.stats["prefix_hit_tokens"] += m
                         tok, caches = self._suffix_prefill(
-                            r, m, sc, pool, pt, slot, caches
+                            pr, m, sc, pool, pt, slot, caches, owner=own
                         )
                     elif self.ring_tiles is not None or ct is not None:
                         # mod-window rings allocate their fixed page set up
@@ -1724,17 +2111,18 @@ class ServeLoop:
                             for t in range(
                                 min(self.ring_tiles, -(-L // self.page))
                             ):
-                                pt[slot, t] = pool.alloc()
+                                pt[slot, t] = pool.alloc(own)
                         tok, caches = self._suffix_prefill(
-                            r, 0, sc, pool, pt, slot, caches, ct=ct_row
+                            pr, 0, sc, pool, pt, slot, caches, ct=ct_row,
+                            owner=own,
                         )
                     else:
                         caches = self._ensure_writable(
-                            pool, pt, slot, 0, plen, caches
+                            pool, pt, slot, 0, plen, caches, own
                         )
                         bucket = _next_bucket(plen, self.cache_len)
                         toks = np.zeros((1, bucket), np.int32)
-                        toks[0, :plen] = r.prompt
+                        toks[0, :plen] = pr
                         logits, caches = self.p_prefill_fn(
                             self.params, caches, {"tokens": jnp.asarray(toks)},
                             jnp.asarray([plen], jnp.int32),
@@ -1746,18 +2134,22 @@ class ServeLoop:
                             self._prefill_flop_count(0, plen)
                         )
                         tok = jnp.argmax(logits[0]).astype(jnp.int32)
+                    self._stamp_emits([(r, 0)], clock)
                     fetch.push(tok, [(r, 0)])
-                    self._cache_prefix(r, pt, slot)
-                    if r.max_new <= 1:
-                        self._free_all(pool, pt, slot)
+                    self._cache_pages(pr, pt, slot)
+                    if mn <= 1:
+                        self._free_all(pool, pt, slot, own)
                         if ct is not None:
-                            self._release_cross(ct, slot)
+                            self._release_cross(ct, slot, own)
                         continue  # done at prefill; slot and pages free
-                    self._free_dead(pool, pt, slot, sc, plen)
+                    self._free_dead(pool, pt, slot, sc, plen, own)
                     active[slot] = r
                     sched[slot] = sc
                     pos[slot] = plen
-                    remaining[slot] = r.max_new - 1
+                    admit_pos[slot] = plen
+                    admit_seq[slot] = aseq
+                    aseq += 1
+                    remaining[slot] = mn - 1
                     nxt = nxt.at[slot].set(tok)
                 self.stats["max_concurrent"] = max(
                     self.stats["max_concurrent"],
@@ -1775,6 +2167,7 @@ class ServeLoop:
                         caches = self._ensure_writable(
                             pool, pt, slot, int(pos[slot]),
                             int(pos[slot]) + 1, caches,
+                            f"req{active[slot].uid}",
                         )
                 if self.ring_tiles is not None:
                     # the ring streams its fixed window-sized page set and
@@ -1804,20 +2197,23 @@ class ServeLoop:
                     pos[slot] += 1
                     remaining[slot] -= 1
                     if remaining[slot] <= 0:
-                        self._free_all(pool, pt, slot)
+                        self._free_all(pool, pt, slot, f"req{r.uid}")
                         if ct is not None:
-                            self._release_cross(ct, slot)
+                            self._release_cross(ct, slot, f"req{r.uid}")
                         active[slot] = None
                         sched[slot] = None
                     else:
                         self._free_dead(
-                            pool, pt, slot, sched[slot], int(pos[slot])
+                            pool, pt, slot, sched[slot], int(pos[slot]),
+                            f"req{r.uid}",
                         )
+                self._stamp_emits(sinks, clock)
                 fetch.push(toks, sinks)
                 nxt = toks
         fetch.flush()
         self._pools = caches
         self._finish_paged_run(pool)
+        self._finalize_slo(requests, q)
         return requests
 
     def _run_paged_chunked(self, requests: list[Request]) -> list[Request]:
@@ -1835,13 +2231,16 @@ class ServeLoop:
         unique suffix — chunk streaming then picks up mid-prompt exactly as
         if the prefix had already streamed."""
         B, C = self.batch, self.chunk_size
-        queue = list(requests)
-        qi = 0
+        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
         active: list[Request | None] = [None] * B
         sched: list[_PagedSlot | None] = [None] * B
+        parr: list[np.ndarray | None] = [None] * B  # effective prompt per slot
         pos = np.zeros(B, np.int32)
         consumed = np.zeros(B, np.int32)
         remaining = np.zeros(B, np.int32)
+        admit_pos = np.zeros(B, np.int32)  # pos at admission: progress floor
+        admit_seq = np.zeros(B, np.int64)  # admission order: victim tiebreak
+        aseq = 0
         nxt = jnp.zeros((B,), jnp.int32)
         pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
         pool = self.pool
@@ -1855,6 +2254,7 @@ class ServeLoop:
             "decode_stall_steps": 0, "overlap_steps": 0,
             "admission_backpressure": 0, "max_concurrent": 0,
             "prefill_flops": 0.0, "prefix_hits": 0, "prefix_hit_tokens": 0,
+            "preemptions": 0, "resumes": 0, "resume_warm_hits": 0,
         }
         clock = 0
         rr = 0
@@ -1862,36 +2262,72 @@ class ServeLoop:
             caches = (
                 self._pools if self._pools is not None else self._zero_pools()
             )
-            while qi < len(queue) or any(r is not None for r in active):
+            while len(q) or any(r is not None for r in active):
                 # admission: a free slot AND a page reservation — the page
-                # budget, not the slot count, is the capacity limit
+                # budget, not the slot count, is the capacity limit; a
+                # higher-priority request that cannot reserve may evict the
+                # youngest lowest-priority active request instead of waiting
                 for slot in range(B):
-                    if qi >= len(queue) or queue[qi].arrival > clock:
-                        break
                     if active[slot] is not None:
                         continue
-                    r = queue[qi]
-                    L = len(r.prompt) + r.max_new - 1
-                    m, spages = self._match_prefix(r)
+                    r = q.peek(clock)
+                    if r is None:
+                        break  # nothing in the queue has arrived yet
+                    pr = self._eff_prompt(r)  # prompt + resumed tokens
+                    L = len(pr) + (r.max_new - len(r.generated)) - 1
+                    own = f"req{r.uid}"
+                    rank = _PRIORITY_RANK[r.priority]
+                    m, spages = self._match_prefix(pr)
                     if m:
                         for p in spages:
-                            pool.retain(p)
+                            pool.retain(p, owner=own)
                         sc = self._paged_schedule(
                             L, step_span=C, start_tile=m // self.page
                         )
-                        committed = self._committed(active, sched, pos)
-                        if self._fits(committed + sc.remaining_peak(m)) > 0:
+                        need = lambda: (
+                            self._committed(active, sched, pos)
+                            + sc.remaining_peak(m)
+                        )
+                        gap = self._fits(need())
+                        if gap > 0 and self.preemptible:
+                            gap = self._preempt_until(
+                                need, rank, q, fetch, pool, pt, active,
+                                sched, parr, pos, admit_pos, admit_seq,
+                            )
+                        if gap > 0:
                             for p in spages:
-                                pool.release(p)
-                            m, spages = 0, []
+                                pool.release(p, owner=own)
+                            cold_peak = self._paged_schedule(
+                                L, step_span=C
+                            ).remaining_peak(0)
+                            if cold_peak < sc.remaining_peak(m):
+                                # cold genuinely cheaper (retention frees
+                                # tiles the alias would pin): retry cold
+                                m, spages = 0, []
+                            else:
+                                # cold could not fit either — and its _fits
+                                # would evict the very prefix (a preemption
+                                # victim's donated pages) that makes the
+                                # eventual resume warm
+                                self.stats["admission_backpressure"] += 1
+                                break
                     if not m:
                         sc = (
                             self._ring_schedule(L)
                             if self.ring_tiles is not None
                             else self._paged_schedule(L, step_span=C)
                         )
-                        committed = self._committed(active, sched, pos)
-                        if self._fits(committed + sc.remaining_peak(0)) > 0:
+                        need = lambda: (
+                            self._committed(active, sched, pos)
+                            + sc.remaining_peak(0)
+                        )
+                        gap = self._fits(need())
+                        if gap > 0 and self.preemptible:
+                            gap = self._preempt_until(
+                                need, rank, q, fetch, pool, pt, active,
+                                sched, parr, pos, admit_pos, admit_seq,
+                            )
+                        if gap > 0:
                             self.stats["admission_backpressure"] += 1
                             break
                     if self.cross_pages is not None:
@@ -1900,7 +2336,11 @@ class ServeLoop:
                             self.stats["admission_backpressure"] += 1
                             break
                         caches = nc
-                    qi += 1
+                    q.pop(r, clock)
+                    if r.preemptions:  # a victim re-admitting (possibly
+                        self.stats["resumes"] += 1  # mid-prefill, no tokens)
+                        if m:
+                            self.stats["resume_warm_hits"] += 1
                     if m:
                         for i, p in enumerate(spages):
                             pt[slot, i] = p
@@ -1910,12 +2350,16 @@ class ServeLoop:
                         # the fixed mod-window page set, allocated up front —
                         # chunk streaming reuses the slots in phase
                         for t in range(min(self.ring_tiles, -(-L // self.page))):
-                            pt[slot, t] = pool.alloc()
+                            pt[slot, t] = pool.alloc(own)
                     active[slot] = r
                     sched[slot] = sc
+                    parr[slot] = pr
                     pos[slot] = m
                     consumed[slot] = m
-                    remaining[slot] = r.max_new
+                    admit_pos[slot] = m
+                    admit_seq[slot] = aseq
+                    aseq += 1
+                    remaining[slot] = r.max_new - len(r.generated)
                 self.stats["max_concurrent"] = max(
                     self.stats["max_concurrent"],
                     sum(a is not None for a in active),
@@ -1926,17 +2370,27 @@ class ServeLoop:
                 eligible = [
                     s for s in range(B)
                     if active[s] is not None
-                    and len(active[s].prompt) - consumed[s] <= 0
+                    and len(parr[s]) - consumed[s] <= 0
                 ]
                 use_nxt = np.zeros(B, bool)
                 chunk_t = np.zeros(B, np.int32)
                 budget = self.chunk_budget
-                for k in range(B):
-                    slot = (rr + k) % B
+                # interactive rows split the chunk budget ahead of batch
+                # rows; the rotation keeps it fair within a class (and IS
+                # the whole order under uniform priority / fifo scheduling)
+                order = sorted(
+                    range(B),
+                    key=lambda s: (
+                        0 if self.fifo or active[s] is None
+                        else _PRIORITY_RANK[active[s].priority],
+                        (s - rr) % B,
+                    ),
+                )
+                for slot in order:
                     r = active[slot]
                     if r is None:
                         continue
-                    rem_prompt = len(r.prompt) - consumed[slot]
+                    rem_prompt = len(parr[slot]) - consumed[slot]
                     if rem_prompt > 0:
                         t = min(C, rem_prompt, budget)
                         if t <= 0:
@@ -1964,6 +2418,7 @@ class ServeLoop:
                         caches = self._ensure_writable(
                             pool, pt, slot, int(pos[slot]),
                             int(pos[slot]) + 1, caches,
+                            f"req{active[slot].uid}",
                         )
                     if self.ring_tiles is not None:
                         kv_live = None  # ring positions are unbounded
@@ -1992,15 +2447,18 @@ class ServeLoop:
                         pos[slot] += 1
                         remaining[slot] -= 1
                         if remaining[slot] <= 0:
-                            self._free_all(pool, pt, slot)
+                            self._free_all(pool, pt, slot, f"req{r.uid}")
                             if ct is not None:
-                                self._release_cross(ct, slot)
+                                self._release_cross(ct, slot, f"req{r.uid}")
                             active[slot] = None
                             sched[slot] = None
+                            parr[slot] = None
                         else:
                             self._free_dead(
-                                pool, pt, slot, sched[slot], int(pos[slot])
+                                pool, pt, slot, sched[slot], int(pos[slot]),
+                                f"req{r.uid}",
                             )
+                    self._stamp_emits(sinks, clock)
                     fetch.push(toks, sinks)
                     nxt = jnp.where(jnp.asarray(use_nxt), toks, nxt)
                 # (b) prompt chunks through the paged chunk grid: allocate
@@ -2011,10 +2469,12 @@ class ServeLoop:
                     t = int(chunk_t[slot])
                     caches = self._ensure_writable(
                         pool, pt, slot, int(pos[slot]), int(pos[slot]) + t,
-                        caches,
+                        caches, f"req{r.uid}",
                     )
                     ctoks = np.zeros((1, C), np.int32)
-                    ctoks[0, :t] = r.prompt[consumed[slot] : consumed[slot] + t]
+                    ctoks[0, :t] = parr[slot][
+                        consumed[slot] : consumed[slot] + t
+                    ]
                     kv_live = _next_bucket(int(pos[slot]) + t, self.cache_len)
                     logits1, caches = self.p_chunk_fn(
                         self.params, caches, jnp.asarray(ctoks),
@@ -2031,21 +2491,25 @@ class ServeLoop:
                     )
                     pos[slot] += t
                     consumed[slot] += t
-                    if consumed[slot] == len(r.prompt):
-                        self._cache_prefix(r, pt, slot)
+                    if consumed[slot] == len(parr[slot]):
+                        self._cache_pages(parr[slot], pt, slot)
                         tok1 = jnp.argmax(logits1).astype(jnp.int32)
+                        self._stamp_emits([(r, 0)], clock)
                         fetch.push(tok1, [(r, 0)])
                         nxt = nxt.at[slot].set(tok1)
                         remaining[slot] -= 1
                         if remaining[slot] <= 0:
-                            self._free_all(pool, pt, slot)
+                            self._free_all(pool, pt, slot, f"req{r.uid}")
                             if ct is not None:
-                                self._release_cross(ct, slot)
+                                self._release_cross(ct, slot, f"req{r.uid}")
                             active[slot] = None
                             sched[slot] = None
+                            parr[slot] = None
                             continue
-                    self._free_dead(pool, pt, slot, sched[slot], int(pos[slot]))
+                    self._free_dead(pool, pt, slot, sched[slot],
+                                    int(pos[slot]), f"req{r.uid}")
         fetch.flush()
         self._pools = caches
         self._finish_paged_run(pool)
+        self._finalize_slo(requests, q)
         return requests

@@ -1,0 +1,438 @@
+"""SLO-aware preemption: priority scheduling, restartable prefill, and
+graceful degradation under page-pool pressure.
+
+The scheduler contract under test: a higher-priority admission that cannot
+reserve its page-residency peak evicts the youngest lowest-priority victim
+(written prefix donated to the radix tree, pages released, request
+requeued), and the victim's resume — a re-prefill of its effective prompt
+through the ordinary chunk entry point — is token-identical to a run that
+was never preempted, because greedy sampling makes the rebuilt cache
+deterministic.  Aging bounds batch-class delay (delayed, never starved),
+the per-request preemption cap plus minimum-progress floor bound wasted
+work (no livelock), and rings/encdec are declared non-preemptible (fixed
+page sets, radix-disabled — there is nothing warm to resume from).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import sparsity
+from repro.core.attention import AttentionSpec
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import Request, ServeLoop, _AdmitQueue
+from repro.models import model as M
+
+
+def _cfg(pattern="dense", arg=None, impl="xla_chunked", **kw):
+    return dataclasses.replace(
+        registry.get("qwen3-0.6b", reduced=True),
+        dtype="float32", capacity_factor=8.0,
+        attention=AttentionSpec(impl=impl, pattern=pattern, pattern_arg=arg),
+        **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    mesh = make_local_mesh()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, params
+
+
+def _overload_reqs(cfg, seed=5):
+    """Two long batch requests fill the 4-page pool (2 pages peak each at
+    cache_len 512 / page 128); the interactive request at t=4 cannot
+    reserve its page and must preempt the youngest batch victim."""
+    rng = np.random.default_rng(seed)
+    spec = [("batch", 200, 10, 0), ("batch", 200, 10, 0),
+            ("interactive", 100, 4, 4)]
+    return [
+        Request(uid=i, priority=prio, max_new=mn, arrival=ar,
+                prompt=rng.integers(0, cfg.vocab, size=pl).astype(np.int32))
+        for i, (prio, pl, mn, ar) in enumerate(spec)
+    ]
+
+
+# --------------------------------------------------------------------------
+# _AdmitQueue unit behaviour (pure host code)
+# --------------------------------------------------------------------------
+
+
+def _req(uid, priority="interactive", arrival=0):
+    return Request(uid=uid, prompt=np.array([1], np.int32), max_new=1,
+                   priority=priority, arrival=arrival)
+
+
+def test_admit_queue_priority_and_arrival():
+    """Interactive outranks batch regardless of push order; a request is
+    invisible until its arrival clock; FIFO order breaks ties in a class."""
+    b = _req(0, "batch")
+    i1 = _req(1, "interactive", arrival=2)
+    i2 = _req(2, "interactive", arrival=2)
+    q = _AdmitQueue([b, i1, i2], aging_steps=100)
+    assert q.peek(0) is b  # the interactives have not arrived yet
+    assert q.peek(2) is i1  # arrived: class rank wins, then FIFO in class
+    q.pop(i1, 2)
+    assert q.peek(2) is i2
+    q.pop(i2, 2)
+    assert q.peek(2) is b
+    with pytest.raises(ValueError, match="not in queue"):
+        q.pop(i1, 2)
+
+
+def test_admit_queue_aging_promotes_batch():
+    """After ``aging_steps`` clocks of waiting, a batch request ranks with
+    the interactive class — by its (older) arrival it then wins the tie."""
+    b = _req(0, "batch", arrival=0)
+    i = _req(1, "interactive", arrival=3)
+    q = _AdmitQueue([b, i], aging_steps=4)
+    assert q.peek(3) is i  # not aged yet: interactive first
+    assert q.peek(4) is b  # aged at clock 4: batch promoted, older arrival
+    q.pop(b, 4)
+    assert q.promotions == 1
+
+
+def test_admit_queue_fifo_ignores_priority():
+    b = _req(0, "batch", arrival=0)
+    i = _req(1, "interactive", arrival=0)
+    q = _AdmitQueue([b, i], aging_steps=4, fifo=True)
+    assert q.peek(0) is b
+    q.pop(b, 100)
+    assert q.promotions == 0  # fifo never counts promotions
+
+
+def test_admit_queue_starvation_freedom_property():
+    """Property: under ANY arrival/priority tape, every request is peeked
+    within aging_steps + (number of requests) clocks of its arrival if the
+    queue pops whatever it peeks — aging makes the schedule starvation-free."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(
+        tape=st.lists(
+            st.tuples(st.sampled_from(["interactive", "batch"]),
+                      st.integers(0, 12)),
+            min_size=1, max_size=8,
+        ),
+        aging=st.integers(1, 6),
+    )
+    def prop(tape, aging):
+        reqs = [_req(u, prio, arrival=ar)
+                for u, (prio, ar) in enumerate(tape)]
+        q = _AdmitQueue(list(reqs), aging_steps=aging)
+        served_at = {}
+        clock = 0
+        while len(q):
+            r = q.peek(clock)
+            if r is None:
+                clock += 1
+                continue
+            q.pop(r, clock)
+            served_at[r.uid] = clock
+            clock += 1
+        bound = aging + len(reqs)
+        for r in reqs:
+            wait = served_at[r.uid] - r.arrival
+            assert wait <= bound, (
+                f"uid {r.uid} ({r.priority}) waited {wait} > {bound}"
+            )
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# Request validation at admission
+# --------------------------------------------------------------------------
+
+
+def test_request_validation_errors():
+    cfg = _cfg()
+    loop = ServeLoop(cfg, make_local_mesh(), None, batch=1, cache_len=512,
+                     paged=True, pool_pages=2)
+    ok = dict(prompt=np.arange(8, dtype=np.int32), max_new=2)
+    with pytest.raises(ValueError, match="arrival"):
+        loop.run([Request(uid=0, arrival=-1, **ok)])
+    with pytest.raises(ValueError, match="priority"):
+        loop.run([Request(uid=0, priority="urgent", **ok)])
+    with pytest.raises(ValueError, match="non-empty"):
+        loop.run([Request(uid=0, prompt=np.empty(0, np.int32), max_new=2)])
+    with pytest.raises(ValueError, match="unservable"):
+        loop.run([Request(uid=0, prompt=np.arange(500, dtype=np.int32)
+                          % cfg.vocab, max_new=8)])
+    loop.close()
+
+
+def test_scheduler_kwarg_validation(setup):
+    cfg, mesh, _ = setup
+    with pytest.raises(ValueError, match="scheduler"):
+        ServeLoop(cfg, mesh, None, batch=1, cache_len=64, scheduler="lifo")
+    with pytest.raises(ValueError, match="aging_steps"):
+        ServeLoop(cfg, mesh, None, batch=1, cache_len=64, aging_steps=0)
+    with pytest.raises(ValueError, match="max_preemptions"):
+        ServeLoop(cfg, mesh, None, batch=1, cache_len=64, max_preemptions=-1)
+
+
+# --------------------------------------------------------------------------
+# Preemption end to end: token identity, resume, drain
+# --------------------------------------------------------------------------
+
+
+def test_preempt_token_identity_and_drain(setup):
+    """The overload tape preempts the youngest batch request; every request
+    — the victim included — must emit exactly the tokens of an uncontended
+    run with an ample pool, no request starves, and the pool drains."""
+    cfg, mesh, params = setup
+    kw = dict(batch=3, cache_len=512, chunked=True, chunk_size=32,
+              paged=True)
+    with ServeLoop(cfg, mesh, params, pool_pages=12, **kw) as ample:
+        ref = ample.run(_overload_reqs(cfg))
+        assert ample.stats["preemptions"] == 0
+    with ServeLoop(cfg, mesh, params, pool_pages=4, **kw) as loop:
+        done = loop.run(_overload_reqs(cfg))
+        assert loop.stats["preemptions"] >= 1
+        assert loop.stats["resumes"] >= 1
+        assert loop.stats["starved_requests"] == 0
+        for r1, r2 in zip(ref, done):
+            assert r2.generated == r1.generated, f"uid {r1.uid}"
+            assert len(r2.generated) == r1.max_new
+        # the victim is the YOUNGEST batch request (uid 1 admitted second)
+        assert done[1].preemptions >= 1 and done[0].preemptions == 0
+        assert done[2].preemptions == 0  # interactive is never a victim
+    assert loop.pool.in_use == 0
+
+
+def test_preempt_cap_zero_disables(setup):
+    """max_preemptions=0 turns pressure back into plain backpressure —
+    same tokens, zero evictions."""
+    cfg, mesh, params = setup
+    kw = dict(batch=3, cache_len=512, chunked=True, chunk_size=32,
+              paged=True)
+    with ServeLoop(cfg, mesh, params, pool_pages=12, **kw) as ample:
+        ref = ample.run(_overload_reqs(cfg))
+    with ServeLoop(cfg, mesh, params, pool_pages=4, max_preemptions=0,
+                   **kw) as loop:
+        assert not loop.preemptible
+        done = loop.run(_overload_reqs(cfg))
+        assert loop.stats["preemptions"] == 0
+        assert loop.stats["admission_backpressure"] > 0
+        for r1, r2 in zip(ref, done):
+            assert r2.generated == r1.generated, f"uid {r1.uid}"
+
+
+def test_preempt_seeded_interleaving_sweep(setup):
+    """Seeded random arrival/priority tapes through BOTH paged scheduler
+    modes under pool pressure: whatever interleaving of preemptions,
+    resumes, aging promotions and backpressure falls out, tokens must match
+    the ample-pool run, nothing starves, and the pool drains."""
+    cfg, mesh, params = setup
+    for mode_kw in (dict(chunked=True, chunk_size=32), dict()):
+        kw = dict(batch=3, cache_len=256, paged=True, aging_steps=8, **mode_kw)
+        with ServeLoop(cfg, mesh, params, pool_pages=12, **kw) as ample, \
+                ServeLoop(cfg, mesh, params, pool_pages=3, **kw) as tight:
+            for seed in (0, 1, 2):
+                rng = np.random.default_rng(seed)
+                reqs = [
+                    Request(
+                        uid=i,
+                        prompt=rng.integers(
+                            0, cfg.vocab,
+                            size=int(rng.integers(20, 180)),
+                        ).astype(np.int32),
+                        max_new=int(rng.integers(2, 6)),
+                        arrival=int(rng.integers(0, 10)),
+                        priority=("interactive", "batch")[rng.random() < .5],
+                    )
+                    for i in range(5)
+                ]
+
+                def clone(rs):
+                    return [Request(uid=r.uid, prompt=r.prompt,
+                                    max_new=r.max_new, arrival=r.arrival,
+                                    priority=r.priority) for r in rs]
+
+                ref = ample.run(clone(reqs))
+                done = tight.run(clone(reqs))
+                assert tight.stats["starved_requests"] == 0, seed
+                for r1, r2 in zip(ref, done):
+                    assert r2.generated == r1.generated, (seed, r1.uid)
+                    assert r2.preemptions <= tight.max_preemptions
+        assert tight.pool.in_use == 0
+
+
+def test_aging_prevents_batch_starvation(setup):
+    """One serve slot, a stream of interactive arrivals, one batch request:
+    without aging the batch request would wait out every interactive; with
+    a small aging_steps it is promoted and completes."""
+    cfg, mesh, params = setup
+    rng = np.random.default_rng(9)
+
+    def mk():
+        reqs = [Request(
+            uid=0, priority="batch", max_new=3, arrival=0,
+            prompt=rng.integers(0, cfg.vocab, size=12).astype(np.int32))]
+        reqs += [
+            Request(uid=1 + i, priority="interactive", max_new=3, arrival=i,
+                    prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32))
+            for i in range(4)
+        ]
+        return reqs
+
+    with ServeLoop(cfg, mesh, params, batch=1, cache_len=64, chunked=True,
+                   chunk_size=16, aging_steps=4) as loop:
+        done = loop.run(mk())
+    assert loop.stats["aging_promotions"] >= 1
+    assert loop.stats["starved_requests"] == 0
+    assert all(len(r.generated) == r.max_new for r in done)
+
+
+# --------------------------------------------------------------------------
+# Non-preemptible families
+# --------------------------------------------------------------------------
+
+
+def test_nonpreemptible_families(setup):
+    """Rings hold fixed page sets with the radix disabled (nothing warm to
+    resume from) and encdec requests pin shared cross ranges — both are
+    declared non-preemptible; fifo scheduling also never preempts."""
+    cfg, mesh, _ = setup
+    wcfg = dataclasses.replace(cfg, sliding_window=10)
+    ring = ServeLoop(wcfg, mesh, None, batch=2, cache_len=24, chunked=True,
+                     chunk_size=4)
+    assert ring.paged and not ring.preemptible
+    fifo = ServeLoop(cfg, mesh, None, batch=2, cache_len=512, paged=True,
+                     scheduler="fifo")
+    assert not fifo.preemptible
+    prio = ServeLoop(cfg, mesh, None, batch=2, cache_len=512, paged=True)
+    assert prio.preemptible
+    wcfg2 = registry.get("whisper-base", reduced=True)
+    wcfg2 = dataclasses.replace(
+        wcfg2, dtype="float32",
+        attention=AttentionSpec(impl="xla_chunked", pattern="dense"),
+    )
+    enc = ServeLoop(wcfg2, mesh, None, batch=2, cache_len=24, paged=True)
+    assert not enc.preemptible
+    for lp in (ring, fifo, prio, enc):
+        lp.close()
+
+
+# --------------------------------------------------------------------------
+# SLO instrumentation
+# --------------------------------------------------------------------------
+
+
+def test_slo_stats_shape(setup):
+    """Every run aggregates per-class p50/p99 TTFT and ITL in clock units,
+    plus an attainment fraction; TTFT of a t=0 admission on the contiguous
+    chunked engine is its prefill-chunk count."""
+    cfg, mesh, params = setup
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(uid=i, priority=("interactive", "batch")[i % 2],
+                prompt=rng.integers(0, cfg.vocab, size=16).astype(np.int32),
+                max_new=4)
+        for i in range(4)
+    ]
+    with ServeLoop(cfg, mesh, params, batch=2, cache_len=64, chunked=True,
+                   chunk_size=16, slo_ttft=50, slo_itl=10.0) as loop:
+        done = loop.run(reqs)
+    slo = loop.stats["slo"]
+    assert set(slo) == {"interactive", "batch"}
+    for cls in slo.values():
+        assert cls["n"] == 2
+        assert 0 < cls["ttft_p50"] <= cls["ttft_p99"]
+        assert cls["itl_p50"] <= cls["itl_p99"]
+    assert loop.stats["slo_attainment"] == 1.0  # loose SLOs: all attained
+    for r in done:
+        assert r.ttft is not None and len(r.emit_clocks) == r.max_new
+
+
+def test_slo_attainment_fraction(setup):
+    """An impossible TTFT SLO (0 clocks) is missed by every request."""
+    cfg, mesh, params = setup
+    reqs = [Request(uid=0, prompt=np.arange(8, dtype=np.int32), max_new=2)]
+    with ServeLoop(cfg, mesh, params, batch=1, cache_len=64, chunked=True,
+                   chunk_size=16, slo_ttft=0) as loop:
+        loop.run(reqs)
+    assert loop.stats["slo_attainment"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# close() idempotence, context manager, leak attribution
+# --------------------------------------------------------------------------
+
+
+def test_close_idempotent_and_context_manager(setup):
+    cfg, mesh, params = setup
+    with ServeLoop(cfg, mesh, params, batch=1, cache_len=512,
+                   paged=True, pool_pages=4) as loop:
+        loop.run([Request(uid=0, prompt=np.arange(10, dtype=np.int32),
+                          max_new=2)])
+    loop.close()  # second close after the context exit: a clean no-op
+    assert loop.pool.in_use == 0
+
+
+def test_context_manager_does_not_mask_body_exception(setup):
+    """An exception inside the with-body propagates even when close() would
+    itself raise on the leak the abandoned run left behind."""
+    cfg, mesh, _ = setup
+    with pytest.raises(KeyError, match="boom"):
+        with ServeLoop(cfg, mesh, None, batch=1, cache_len=512,
+                       paged=True, pool_pages=4) as loop:
+            loop.pool.alloc(owner="test-body")  # simulate mid-flight state
+            raise KeyError("boom")
+    loop.pool.release(0, owner="test-body")
+    loop.close()
+
+
+def test_leak_attribution_names_owner(setup):
+    """A leaked page surfaces its owner label in the close() error, and a
+    failed close stays re-runnable after the straggler releases."""
+    cfg, mesh, _ = setup
+    loop = ServeLoop(cfg, mesh, None, batch=1, cache_len=512, paged=True,
+                     pool_pages=4)
+    pid = loop.pool.alloc(owner="test-straggler")
+    with pytest.raises(RuntimeError, match="test-straggler"):
+        loop.close()
+    loop.pool.release(pid, owner="test-straggler")
+    loop.close()
+    loop.close()  # idempotent after the clean one
+
+
+# --------------------------------------------------------------------------
+# Resume reservations: sparsity.page_resume_peak
+# --------------------------------------------------------------------------
+
+
+def test_page_resume_peak_matches_full_run():
+    """Resuming at frontier 0 must price exactly the from-scratch residency
+    peak, and any mid-stream frontier can only need fewer-or-equal pages."""
+    L, q_tile, kv_tile = 96, 8, 8
+    for pattern in ("causal", "butterfly", "window"):
+        arg = 16 if pattern == "window" else None
+        full = sparsity.page_peak_resident(
+            pattern, L, q_tile, kv_tile, step_span=4, pattern_arg=arg)
+        at0 = sparsity.page_resume_peak(
+            pattern, L, q_tile, kv_tile, frontier=0, step_span=4,
+            pattern_arg=arg)
+        assert at0 == full, pattern
+        prev = full
+        for f in (10, 40, 70, L - 1):
+            p = sparsity.page_resume_peak(
+                pattern, L, q_tile, kv_tile, frontier=f, step_span=4,
+                pattern_arg=arg)
+            assert 0 < p <= prev, (pattern, f)
+            prev = p
+
+
+def test_page_resume_peak_frontier_bounds():
+    with pytest.raises(ValueError, match="frontier"):
+        sparsity.page_resume_peak("causal", 32, 8, 8, frontier=32)
+    with pytest.raises(ValueError, match="frontier"):
+        sparsity.page_resume_peak("causal", 32, 8, 8, frontier=-1)
+    assert sparsity.page_resume_peak("causal", 0, 8, 8, frontier=0) == 0
