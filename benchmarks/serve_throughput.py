@@ -57,8 +57,8 @@ from repro.core.attention import (
     ragged_attention_flops,
     ragged_attention_hbm_bytes,
 )
-from repro.launch.mesh import make_local_mesh
-from repro.launch.serve import Request, ServeLoop
+from repro.launch.mesh import make_local_mesh, make_mesh, make_pages_mesh
+from repro.launch.serve import DisaggRouter, Request, ServeLoop
 from repro.models import model as M
 
 from benchmarks.common import write_bench_json
@@ -241,7 +241,11 @@ def main() -> None:
                     help="sliding window for the sliding_window scenario "
                          "(default cache_len // 4)")
     ap.add_argument("--modes", default="all",
-                    help="comma list of static,continuous,chunked (or 'all')")
+                    help="comma list of static,continuous,chunked (or 'all'; "
+                         "'none' skips the mode sweep and runs only the "
+                         "requested --check-* gates — required when XLA "
+                         "forces >1 host device, where the data-parallel "
+                         "mode sweep cannot shard its batch-1 prefill)")
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
@@ -284,6 +288,20 @@ def main() -> None:
                          "tape, no request starves, and both pools drain at "
                          "close() (deterministic sub-benchmark; emits the "
                          "preemption BENCH section)")
+    ap.add_argument("--check-shard", action="store_true",
+                    help="CI gate: the disaggregated prefill/decode engine "
+                         "over a 4-way page-sharded pool must be "
+                         "token-identical to the single-loop replicated "
+                         "engine on the mixed workload, every shard's peak "
+                         "resident pages must stay within "
+                         "ceil(replicated peak / 4) + slack (the balanced "
+                         "allocator bound), and both pools must drain at "
+                         "close().  Shards the DEVICE pool too when the "
+                         "host exposes >= 4 devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4); falls "
+                         "back to host-side-only shard accounting otherwise "
+                         "(deterministic sub-benchmark; emits the "
+                         "shard_capacity BENCH section)")
     ap.add_argument("--json", default="BENCH_attention.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
@@ -310,7 +328,12 @@ def main() -> None:
     impls = (
         ["xla_chunked", "flash_kernel"] if args.attn == "both" else [args.attn]
     )
-    modes = MODES if args.modes == "all" else tuple(args.modes.split(","))
+    if args.modes in ("none", ""):
+        modes = ()
+    elif args.modes == "all":
+        modes = MODES
+    else:
+        modes = tuple(args.modes.split(","))
     for m in modes:
         if m not in MODES:
             raise SystemExit(f"unknown mode {m!r}; known: {MODES}")
@@ -326,6 +349,7 @@ def main() -> None:
     prefix_json = []
     ring_json = []
     preempt_json = []
+    shard_json = []
     failures = []
     for impl in impls:
         cfg = dataclasses.replace(
@@ -413,6 +437,12 @@ def main() -> None:
             )
             preempt_json += pr_rows
             failures += pr_fail
+        if args.check_shard:
+            sh_rows, sh_fail = check_shard(
+                cfg, mesh, params, impl=impl, pattern=args.pattern,
+            )
+            shard_json += sh_rows
+            failures += sh_fail
         if args.scenario == "shared_prefix" and "paged" in per_mode:
             # the scenario's paged run doubles as the prefix-cache BENCH row:
             # how much admission work the radix tree absorbed on this shape
@@ -433,11 +463,13 @@ def main() -> None:
             })
     if args.json:
         # one section per (scenario, pattern): CI's butterfly smoke row and
-        # the chunked-scheduler gate both survive in the artifact
-        write_bench_json(
-            args.json, f"serve_throughput/{args.scenario}/{args.pattern}",
-            json_rows,
-        )
+        # the chunked-scheduler gate both survive in the artifact; a
+        # gates-only run (--modes none) must not blank a populated section
+        if json_rows:
+            write_bench_json(
+                args.json, f"serve_throughput/{args.scenario}/{args.pattern}",
+                json_rows,
+            )
         if cap_json:
             write_bench_json(args.json, "paged_capacity", cap_json)
         if prefix_json:
@@ -446,6 +478,8 @@ def main() -> None:
             write_bench_json(args.json, "ring_capacity", ring_json)
         if preempt_json:
             write_bench_json(args.json, "preemption", preempt_json)
+        if shard_json:
+            write_bench_json(args.json, "shard_capacity", shard_json)
     if failures:
         for f in failures:
             print(f"CHECK FAILED: {f}", file=sys.stderr)
@@ -460,6 +494,8 @@ def main() -> None:
         print("check-ring: all assertions passed")
     if args.check_preempt:
         print("check-preempt: all assertions passed")
+    if args.check_shard:
+        print("check-shard: all assertions passed")
 
 
 def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
@@ -882,6 +918,121 @@ def check_preempt(cfg, mesh, params, *, impl: str, pattern: str):
         f"preemptions, {stats_p['resume_warm_hits']}/{stats_p['resumes']} "
         f"warm resumes; interactive p99 TTFT {ttft_p:.0f} clocks vs FIFO "
         f"{ttft_f:.0f} at a {pool}-page pool"
+    )
+    return [row], failures
+
+
+def check_shard(cfg, mesh, params, *, impl: str, pattern: str):
+    """The mesh-sharded disaggregation CI gate.
+
+    Reference: the single-loop paged engine over a REPLICATED pool on the
+    plain data mesh.  Candidate: the :class:`DisaggRouter` (prefill worker +
+    decode worker, page-table handoff) over a 4-way page-sharded pool — on a
+    mesh with a ``pages`` axis when the host exposes a multiple of 4 devices
+    (CI sets ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), else
+    host-side shard accounting over the replicated device pool (the
+    allocator's ranges and the capacity assertions are identical either
+    way; only the physical placement differs).
+
+    Deterministic assertions: (a) disagg generations token-identical to the
+    single loop, (b) every shard's peak resident pages within
+    ``ceil(replicated peak / 4) + 2`` (the balanced allocator bound, slack
+    for handoff-timing skew), (c) both engines' pools fully drained at
+    ``close()``.  Returns (bench rows, failures)."""
+    n_shards = 4
+    cache_len, chunk = 512, 32
+    rng = np.random.default_rng(13)
+    lens = [(int(rng.integers(20, 360)), int(rng.integers(2, 6)))
+            for _ in range(6)]
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32)
+               for ln, _ in lens]
+
+    def mk():
+        return [
+            Request(uid=i, prompt=p, max_new=mn)
+            for i, (p, (_, mn)) in enumerate(zip(prompts, lens))
+        ]
+
+    # The reference engine runs data-parallel-free: on a multi-device host
+    # (XLA_FLAGS forcing 4 CPU devices) make_local_mesh() puts data=4 and the
+    # batch-1 admission prefill cannot shard 4-way, so pin a 1-device mesh.
+    ref_mesh = (
+        mesh if jax.device_count() == 1
+        else make_mesh((1, 1), ("data", "model"))
+    )
+    with ServeLoop(
+        cfg, ref_mesh, params, batch=3, cache_len=cache_len, chunked=True,
+        chunk_size=chunk, paged=True,
+    ) as rep:
+        t0 = time.perf_counter()
+        done_r = rep.run(mk())
+        dt_r = time.perf_counter() - t0
+        rep_peak = rep.stats["pool_peak_pages"]
+        rep_pool = rep.stats["pool_pages"]
+
+    device_sharded = jax.device_count() % n_shards == 0 and (
+        jax.device_count() >= n_shards
+    )
+    smesh = make_pages_mesh(n_shards) if device_sharded else mesh
+    with DisaggRouter(
+        cfg, smesh, params, batch=3, prefill_batch=2, cache_len=cache_len,
+        chunk_size=chunk, pool_pages=rep_pool,
+        **({} if device_sharded else {"page_shards": n_shards}),
+    ) as dis:
+        t0 = time.perf_counter()
+        done_d = dis.run(mk())
+        dt_d = time.perf_counter() - t0
+
+    failures = []
+    for rr, rd in zip(done_r, done_d):
+        if rd.generated != rr.generated:
+            failures.append(
+                f"{impl}/{pattern}: uid {rr.uid} disagg-sharded generations "
+                "diverge from the single-loop replicated engine"
+            )
+            break
+    shard_peaks = dis.stats.get("shard_peak_pages", [])
+    bound = -(-rep_peak // n_shards) + 2
+    if not shard_peaks or len(shard_peaks) != n_shards:
+        failures.append(
+            f"{impl}/{pattern}: expected {n_shards} shard peaks in stats, "
+            f"got {shard_peaks!r}"
+        )
+    elif max(shard_peaks) > bound:
+        failures.append(
+            f"{impl}/{pattern}: shard peak pages {max(shard_peaks)} > "
+            f"ceil(replicated peak {rep_peak} / {n_shards}) + 2 = {bound} — "
+            "the balanced allocator is not balancing"
+        )
+    if rep.pool.in_use or dis.pool.in_use:
+        failures.append(
+            f"{impl}/{pattern}: pools not drained after close() "
+            f"(replicated {rep.pool.in_use}, sharded {dis.pool.in_use})"
+        )
+    row = {
+        "attn": impl,
+        "pattern": pattern,
+        "cache_len": cache_len,
+        "n_shards": n_shards,
+        "device_sharded": device_sharded,
+        "devices": jax.device_count(),
+        "pool_pages": dis.stats["pool_pages"],
+        "replicated_peak_pages": rep_peak,
+        "shard_peak_pages": shard_peaks,
+        "shard_peak_bound": bound,
+        "handoffs": dis.stats["handoffs"],
+        "handoff_wait_steps": dis.stats["handoff_wait_steps"],
+        "prefill_batch": dis.stats["prefill_batch"],
+        "decode_batch": dis.stats["decode_batch"],
+        "tokens": sum(len(r.generated) for r in done_d),
+        "wall_s_single_loop": round(dt_r, 3),
+        "wall_s_disagg": round(dt_d, 3),
+    }
+    print(
+        f"shard_capacity[{impl}/{pattern}]: {n_shards}-way "
+        f"{'device' if device_sharded else 'host'}-sharded pool, shard "
+        f"peaks {shard_peaks} vs replicated {rep_peak} (bound {bound}), "
+        f"{row['handoffs']} handoffs"
     )
     return [row], failures
 

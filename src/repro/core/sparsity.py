@@ -527,7 +527,9 @@ def chunk_live_tables(
 
 
 def translate_tables(
-    kv_index, step_live, page_table, n_pages: int, *, ring_tiles: int | None = None
+    kv_index, step_live, page_table, n_pages: int, *,
+    ring_tiles: int | None = None,
+    page_range: tuple[int, int] | None = None,
 ):
     """Compose packed live *virtual* kv-tile tables with a page table.
 
@@ -544,6 +546,17 @@ def translate_tables(
     set in phase instead of allocating one page per absolute tile.  The
     returned ``kv_virt`` stays ABSOLUTE either way: the kernels' fine masks
     index token positions, which never wrap.
+
+    ``page_range`` makes the translation MESH-LOCAL: ``(lo, hi)`` is the
+    half-open physical page range one shard of a page-sharded pool owns
+    (GSPMD partitions the pool's page axis contiguously, see
+    :func:`repro.models.transformer.paged_pool_specs`).  Entries outside the
+    range are masked dead — that shard's kernel never prefetches a page it
+    does not hold — and in-range ids are REBASED to the shard's local pool
+    (``phys - lo``), so the shard indexes its own ``hi - lo`` pages.  Each
+    allocated tile is owned by exactly one shard, so summing the shards'
+    attention partials (or gathers) reassembles the replicated result — the
+    invariant the mesh-local sweep test pins.
 
     Returns ``(kv_phys, kv_virt, step_live')``: the same packed layout with
     physical page ids (clamped in-bounds so dead steps still DMA a real page),
@@ -564,6 +577,14 @@ def translate_tables(
     else:
         phys = jnp.take_along_axis(pt, slot, axis=1)
     live = step_live * (phys < n_pages).astype(jnp.int32)
+    if page_range is not None:
+        lo, hi = page_range
+        if not 0 <= lo < hi <= n_pages:
+            raise ValueError(
+                f"page_range {page_range} outside pool of {n_pages}"
+            )
+        live = live * ((phys >= lo) & (phys < hi)).astype(jnp.int32)
+        return jnp.clip(phys - lo, 0, hi - lo - 1), kv_index, live
     return jnp.minimum(phys, n_pages - 1), kv_index, live
 
 
@@ -725,6 +746,7 @@ def page_residency(
     step_span: int = 1,
     start_tile: int = 0,
     ring_tiles: int | None = None,
+    n_shards: int = 1,
 ) -> np.ndarray:
     """Resident page count at every frontier position, given the per-tile
     last-reader schedule.  A tile is resident from its first write (position
@@ -747,7 +769,15 @@ def page_residency(
     ``ring_tiles`` caps the curve at the mod-window reservation: a
     sliding-window request recycles a fixed ``ring_tiles``-slot page set in
     phase (see :func:`translate_tables`), so its residency can never exceed
-    the ring, whatever the last-reader schedule says."""
+    the ring, whatever the last-reader schedule says.
+
+    ``n_shards > 1`` prices a MESH-SHARDED pool instead: the per-shard
+    residency curve under a balanced allocator (the engine's
+    :class:`repro.launch.serve.PagePool` places every allocation on the
+    fullest-free shard, so no shard ever holds more than
+    ``ceil(resident / n_shards)`` of the request's pages).  This is the
+    analytic bound the dry-run's per-shard ``capacity_ratio`` and the
+    ``--check-shard`` gate's per-shard peak assertion both price from."""
     diff = np.zeros(length + 1, np.int64)
     for j in range(start_tile, len(last_reader)):
         lo = max(j * kv_tile - (max(step_span, 1) - 1), 0)
@@ -756,6 +786,8 @@ def page_residency(
     res = np.cumsum(diff)[:length]
     if ring_tiles is not None:
         res = np.minimum(res, ring_tiles)
+    if n_shards > 1:
+        res = -(-res // n_shards)
     return res
 
 

@@ -15,6 +15,9 @@ Logical axes:
                               butterfly block-diagonals)
     fsdp    -> data           ZeRO-3 parameter sharding
     expert  -> model          expert parallelism
+    pages   -> pages          the paged KV pool's page axis (serve meshes
+                              only; absent axis -> pools replicate, which is
+                              the single-chip behaviour)
     None    -> replicated
 """
 
@@ -73,6 +76,7 @@ RULES: dict[str | None, tuple[str, ...]] = {
     "fsdp": ("data",),
     "expert": ("model",),
     "vocab": ("model",),
+    "pages": ("pages",),
     None: (),
 }
 
@@ -86,6 +90,7 @@ RULES_PURE_DP: dict[str | None, tuple[str, ...]] = {
     "fsdp": ("data", "model"),
     "expert": (),
     "vocab": ("model",),
+    "pages": ("pages",),
     None: (),
 }
 

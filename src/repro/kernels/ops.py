@@ -421,6 +421,20 @@ def _virtual_extent(page_table: jax.Array, page: int, kv_live: int | None) -> in
     return vl
 
 
+def _local_pool_bound(page_range: tuple[int, int], n_local: int) -> int:
+    """Sanity-check a mesh-local call: the pool passed in must be exactly the
+    shard ``page_range`` names, and the translation's in-bounds check runs
+    against ``hi`` (the sentinel is >= the global page count >= hi, so the
+    ownership mask subsumes the allocated mask)."""
+    lo, hi = page_range
+    if hi - lo != n_local:
+        raise ValueError(
+            f"page_range {page_range} names {hi - lo} pages but the local "
+            f"pool holds {n_local}"
+        )
+    return hi
+
+
 def flash_paged_prefill(
     q: jax.Array,
     k_pool: jax.Array,
@@ -489,6 +503,7 @@ def flash_paged_chunk(
     kv_live: int | None = None,
     ring_window: int | None = None,
     ring_tiles: int | None = None,
+    page_range: tuple[int, int] | None = None,
 ) -> jax.Array:
     """Paged form of :func:`flash_chunk`: q (B, C, H, hd) mixed rows over the
     shared pool (n_pages * page, KV, hd), each row reading through its own
@@ -501,7 +516,16 @@ def flash_paged_chunk(
     ``ring_window`` / ``ring_tiles`` select the mod-window form: the page
     table has ``ring_tiles`` slots reused in phase, the live tables hold
     ABSOLUTE tiles trailing each row's frontier, and the fine mask windows on
-    absolute positions — a sliding-window cache in ``ring_tiles`` pages."""
+    absolute positions — a sliding-window cache in ``ring_tiles`` pages.
+
+    ``page_range=(lo, hi)`` runs the MESH-LOCAL form: the pools are ONE shard
+    of a page-sharded cache (pages ``lo..hi-1``), the translated tables mask
+    out pages the shard does not own and rebase the rest, so this shard's
+    grid prefetches only its own pages.  The result is the shard's partial
+    attention over its local pages; cross-shard reassembly needs the online-
+    softmax stat merge (a ring/allgather of (m, l, acc)), which is the
+    remaining hardware-shakeout item — the serving gate exercises the XLA
+    gather path, whose per-shard gathers reassemble by summation."""
     spec = spec or AttentionSpec(impl="flash_kernel")
     pattern, arg, _, window = canonical_pattern(
         spec.pattern, spec.pattern_arg, True, None
@@ -528,8 +552,11 @@ def flash_paged_chunk(
             pattern, start, ntok, c, skv, spec.q_tile, page,
             window=window, pattern_arg=arg,
         )
+    if page_range is not None:
+        n_pages = _local_pool_bound(page_range, n_pages)
     kv_phys, kv_virt, step_live = sparsity.translate_tables(
-        kv_index, step_live, page_table, n_pages, ring_tiles=ring_tiles
+        kv_index, step_live, page_table, n_pages, ring_tiles=ring_tiles,
+        page_range=page_range,
     )
 
     qt = q.reshape(b, c, kvh, g, hd).transpose(0, 2, 3, 1, 4)
@@ -557,6 +584,7 @@ def flash_paged_decode(
     kv_live: int | None = None,
     ring_window: int | None = None,
     ring_tiles: int | None = None,
+    page_range: tuple[int, int] | None = None,
 ) -> jax.Array:
     """Paged form of :func:`flash_decode`: q (B, H, hd) over the shared pool.
 
@@ -569,7 +597,11 @@ def flash_paged_decode(
     ``ring_window`` / ``ring_tiles`` select the mod-window form: positions
     are unbounded (``cur_len`` may exceed any cache extent), the live tables
     hold the absolute tiles trailing the frontier, and the same-modulus page
-    table hands back the phase-reused physical pages."""
+    table hands back the phase-reused physical pages.
+
+    ``page_range`` selects the mesh-local form (see
+    :func:`flash_paged_chunk`): the pools are one page shard, tables mask
+    and rebase to the shard's own pages."""
     spec = spec or AttentionSpec(impl="flash_kernel")
     pattern, arg, _, window = canonical_pattern(
         spec.pattern, spec.pattern_arg, True, None
@@ -591,8 +623,11 @@ def flash_paged_decode(
         kv_index, step_live = sparsity.decode_live_tables(
             pattern, cl_rows, skv, spec.q_tile, page, window=window, pattern_arg=arg
         )
+    if page_range is not None:
+        n_pages = _local_pool_bound(page_range, n_pages)
     kv_phys, kv_virt, step_live = sparsity.translate_tables(
-        kv_index, step_live, page_table, n_pages, ring_tiles=ring_tiles
+        kv_index, step_live, page_table, n_pages, ring_tiles=ring_tiles,
+        page_range=page_range,
     )
 
     qt = jnp.pad(q.reshape(b, kvh, g, hd), ((0, 0), (0, 0), (0, gp - g), (0, d - hd)))

@@ -190,7 +190,13 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
     share ratio (half the prompt shared batch-wide): shared tiles resident
     once + per-request unique-suffix peaks, and the fraction of admission
     prefill FLOPs the cache absorbs — the analytic counterpart of the
-    ``--check-prefix`` gate in ``benchmarks.serve_throughput``."""
+    ``--check-prefix`` gate in ``benchmarks.serve_throughput``.
+
+    ``shard_split`` prices the mesh-sharded pool at 2- and 4-way page
+    sharding: per-shard peak resident pages (the balanced allocator's
+    ``ceil(global / k)`` bound), per-shard resident bytes, and the
+    per-shard capacity ratio — the analytic counterpart of the
+    ``--check-shard`` gate."""
     import math
 
     from repro.core import sparsity
@@ -253,6 +259,31 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
 
     cold = b * _pf(s, 0)
     warm = _pf(s, 0) + (b - 1) * _pf(s - shared_tokens, shared_tokens)
+
+    # --- mesh-sharded pool: per-shard pricing at 2- and 4-way ------------
+    # A "pages" mesh axis splits the pool's page rows into k contiguous
+    # ranges; the balanced host allocator keeps each shard's residency at
+    # ceil(global / k) (page_residency's n_shards is that per-request
+    # analytic bound), so each DEVICE holds a 1/k slice of the paged
+    # resident set while dense reservations on the same mesh would shard
+    # their full batch x cache_len rows the same way — the capacity ratio
+    # is preserved per shard, and the absolute per-device bytes shrink.
+    shard_split = {}
+    for k in (2, 4):
+        shard_peak = int(
+            sparsity.page_residency(last, s, page, n_shards=k).max()
+        )
+        per_layer_shard = shape.batch * shard_peak * page * row_bytes
+        shard_split[str(k)] = {
+            "shard_peak_resident_pages": shard_peak,
+            "shard_paged_resident_bytes": float(n_attn * per_layer_shard),
+            "shard_dense_reserved_bytes": float(
+                n_attn * per_layer_dense / k
+            ),
+            "shard_capacity_ratio": float(
+                (per_layer_dense / k) / max(per_layer_shard, 1)
+            ),
+        }
     return {
         "pattern": pattern,
         "retention_patterns": sorted(pats),
@@ -272,6 +303,7 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
             per_layer_paged / max(per_layer_shared, 1)
         ),
         "prefill_flops_saved_frac": float(1.0 - warm / max(cold, 1.0)),
+        "shard_split": shard_split,
     }
 
 

@@ -5,7 +5,9 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_mesh", "make_production_mesh", "make_local_mesh"]
+__all__ = [
+    "make_mesh", "make_production_mesh", "make_local_mesh", "make_pages_mesh",
+]
 
 
 def make_mesh(shape, names):
@@ -28,3 +30,16 @@ def make_local_mesh():
     """Whatever this host has (CPU smoke runs: 1 device)."""
     n = len(jax.devices())
     return make_mesh((n, 1), ("data", "model"))
+
+
+def make_pages_mesh(n_shards: int):
+    """Serve mesh with a ``pages`` axis: the paged KV pool's page rows shard
+    ``n_shards``-way (see :func:`repro.models.transformer.paged_pool_specs`),
+    remaining devices data-parallel.  CPU CI reaches 4 devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``."""
+    n = len(jax.devices())
+    if n % n_shards:
+        raise ValueError(
+            f"{n} devices do not split into {n_shards} page shards"
+        )
+    return make_mesh((n // n_shards, 1, n_shards), ("data", "model", "pages"))

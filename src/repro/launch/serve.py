@@ -1,78 +1,55 @@
-"""Streaming serve runtime: chunked-prefill mixed-step engine + jit'd
-prefill/decode entry points with sharded KV caches.
+"""Compatibility facade over :mod:`repro.launch.serving`.
 
-`make_serve_fns` builds the two classic compiled entry points the dry-run
-exercises (`prefill_32k` lowers prefill; `decode_32k` / `long_500k` lower
-decode_step); with ``ragged=True`` the prefill takes per-request prompt
-lengths and the decode takes a (B,) position vector instead of a batch-wide
-scalar.  `make_mixed_fn` builds the third, unified entry point: one jitted
-``mixed_step`` where every batch row consumes a per-row token count — a
-prompt chunk, one decode token, or nothing.
+The serve runtime grew from one module into a package — this name is kept
+because it IS the public surface (tests, benchmarks, examples, and the
+dryrun all import from here):
 
-`ServeLoop` is the engine.  In its **chunked** mode (the paper's §V-A
-{Load | Cal | Store} streaming applied at the request level) prompts are
-split into fixed-size chunks and every iteration advances the WHOLE batch
-through ``mixed_step`` issued at two ragged shapes: a (B, 1) *decode wave*
-(every decoding row takes one token, bucketed at the decode rows' own
-live-cache depth) and a (1, C) *slot chunk* per mid-prompt row
-(prefill-into-slot, writing straight into the shared KV cache at positions
-``pos..pos+C-1`` at the prompt's own frontier bucket) — admission is free
-(no blocking batch-1 prefill) and decode never stalls while a long prompt
-streams in.  A per-step chunk *budget* bounds prefill work per iteration
-(Sarathi-style), and sampled tokens are fetched with a one-step lag so host
-dispatch overlaps device compute.
-
-``chunked=False`` keeps the admission-prefill engine (bucketed batch-1
-prefill inserted into the shared cache) — the seed contiguous path, kept as
-the parity baseline for every other mode.
-
-The page table is the ONLY serve-time cache abstraction beyond that
-baseline: sliding-window ring caches become **mod-window page tables** (a
-``ring_tiles``-slot table reused in phase — absolute tile ``j`` lives in
-slot ``j % ring_tiles``, positions stay absolute, decode is unbounded) and
-encoder-decoder cross KV becomes **read-only shared page ranges** (the
-encoder output is prefilled ONCE into refcounted pages via
-:func:`repro.models.transformer.paged_encode` and aliased into every
-decoder request's table — decode never writes a cross page, so CoW never
-triggers and cross-attention prefix sharing falls out of the refcounts).
-A chunked request for either family upgrades to the paged engine
-automatically — there is no contiguous chunked ring/encdec path to fall
-back to, by design.
-
-Under pool pressure the engine degrades gracefully instead of serializing:
-the admission queue is **priority-ordered** (``Request.priority`` —
-``interactive`` ahead of ``batch``, FIFO within a class, with an aging
-guard that promotes a batch request after ``aging_steps`` engine clocks so
-it is delayed, never starved), and a higher-priority request whose
-page-residency peak cannot be reserved **preempts** the youngest
-lowest-priority active request: the victim's completed full pages are
-inserted into the radix tree (so resume is a warm prefix hit), its pool
-references released, and the request requeued — resume re-enters through
-the restartable chunked-prefill path at the divergence frontier.  A
-per-request preemption cap plus a minimum-progress guard make
-preempt/resume livelock impossible.  Sliding-window rings and
-encoder-decoder cross ranges are **non-preemptible** (fixed page sets,
-radix disabled — there is nothing warm to resume from).  Every engine mode
-stamps per-request time-to-first-token and inter-token latency in
-engine-step clock units and aggregates p50/p99 and an SLO-attainment
-fraction into ``stats``.
+* :mod:`repro.launch.serving.entries` — jitted prefill/decode/mixed/chunk/
+  paged entry-point factories with sharded KV caches and page pools.
+* :mod:`repro.launch.serving.pool` — the host-side refcounted (and
+  mesh-sharded) :class:`PagePool` plus the :class:`RadixCache` prefix tree.
+* :mod:`repro.launch.serving.queueing` — :class:`Request`, the priority
+  admission queue, kv-live bucketing, the async token fetch.
+* :mod:`repro.launch.serving.loop` — :class:`ServeLoop`, the single-loop
+  engine: admission-prefill, chunked mixed-step, and the paged engines
+  (prefix cache, mod-window rings, encdec cross ranges, SLO-aware
+  preemption).
+* :mod:`repro.launch.serving.disagg` — :class:`DisaggRouter` with its
+  :class:`PrefillWorker` / :class:`DecodeWorker`: phase-disaggregated
+  serving over one mesh-sharded page pool, page-table handoff between
+  phases.
 """
 
 from __future__ import annotations
 
-import collections
-import dataclasses
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.core import sparsity
-from repro.core.attention import override_attention
-from repro.distributed import sharding as shd
-from repro.models import model as M
-from repro.models import transformer as tf
-from repro.models.config import ModelConfig
+from repro.launch.serving.disagg import (  # noqa: F401
+    DecodeWorker,
+    DisaggRouter,
+    PrefillWorker,
+)
+from repro.launch.serving.entries import (  # noqa: F401
+    abstract_cache,
+    cache_shardings,
+    make_mixed_fn,
+    make_paged_fns,
+    make_serve_fns,
+    make_slot_chunk_fn,
+    zero_pools,
+)
+from repro.launch.serving.loop import ServeLoop  # noqa: F401
+from repro.launch.serving.pool import (  # noqa: F401
+    PagePool,
+    RadixCache,
+    _RadixNode,
+)
+from repro.launch.serving.queueing import (  # noqa: F401
+    Request,
+    _AdmitQueue,
+    _AsyncTokens,
+    _PagedSlot,
+    _PRIORITY_RANK,
+    _next_bucket,
+)
 
 __all__ = [
     "make_serve_fns",
@@ -81,2435 +58,12 @@ __all__ = [
     "make_paged_fns",
     "cache_shardings",
     "abstract_cache",
+    "zero_pools",
     "PagePool",
     "RadixCache",
     "Request",
     "ServeLoop",
+    "PrefillWorker",
+    "DecodeWorker",
+    "DisaggRouter",
 ]
-
-
-def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
-    return shd.sharding_tree(tf.cache_specs(cfg, batch, cache_len), mesh, M.rules_for(cfg))
-
-
-def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
-    specs = tf.cache_specs(cfg, batch, cache_len)
-    dt = jnp.dtype(cfg.dtype)
-    return jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, dt),
-        specs,
-        is_leaf=lambda x: isinstance(x, shd.ParamSpec),
-    )
-
-
-def _entry_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
-    """Shared setup of every serve entry-point factory: resolved runtime +
-    the param / cache / token / replicated shardings.  One definition so the
-    prefill, decode, mixed-wave and slot-chunk compiles can never diverge."""
-    rt = M.resolve_runtime(cfg, mesh)
-    p_shard = shd.sharding_tree(M.build_specs(cfg), mesh, M.rules_for(cfg))
-    c_shard = cache_shardings(cfg, mesh, batch, cache_len)
-    tok_shard = NamedSharding(
-        mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
-    )
-    rep = NamedSharding(mesh, P())
-    return rt, p_shard, c_shard, tok_shard, rep
-
-
-def make_serve_fns(
-    cfg: ModelConfig,
-    mesh: Mesh,
-    *,
-    batch: int,
-    cache_len: int,
-    attn_impl: str | None = None,
-    attn_pattern: str | None = None,
-    ragged: bool = False,
-):
-    """Returns (prefill_fn, decode_fn).
-
-    ``ragged=False`` (static batch): prefill_fn(params, batch_dict) and
-    decode_fn(params, caches, tokens, pos-scalar).  ``ragged=True``:
-    prefill_fn(params, batch_dict, lengths (B,)) gathers each row's last real
-    token and decode_fn takes pos as a (B,) per-request position vector.
-
-    ``attn_impl`` / ``attn_pattern`` override the config's attention
-    execution form / block-sparsity pattern for this serving instance (e.g.
-    "flash_kernel" + "butterfly" on a single-chip deployment).
-
-    ``decode_fn`` takes an optional trailing ``kv_live`` (static int): a
-    host-known bound on every row's live cache length.  Attention then
-    streams only the first ``kv_live`` cache rows — each distinct value
-    compiles once, so callers should bucket it (the engine uses powers of
-    two)."""
-    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
-    rt, p_shard, c_shard, tok_shard, rep = _entry_shardings(
-        cfg, mesh, batch, cache_len
-    )
-
-    if ragged:
-        prefill = jax.jit(
-            lambda params, b, lengths: tf.prefill(
-                params, cfg, b, rt, cache_len=cache_len, lengths=lengths
-            ),
-            in_shardings=(p_shard, None, rep),
-            out_shardings=(tok_shard, c_shard),
-        )
-        pos_shard = rep  # (B,) per-request positions, replicated
-    else:
-        prefill = jax.jit(
-            lambda params, b: tf.prefill(params, cfg, b, rt, cache_len=cache_len),
-            in_shardings=(p_shard, None),
-            out_shardings=(tok_shard, c_shard),
-        )
-        pos_shard = rep
-    jitted: dict[int | None, object] = {}
-
-    def decode(params, caches, tokens, pos, kv_live: int | None = None):
-        fn = jitted.get(kv_live)
-        if fn is None:
-            fn = jax.jit(
-                lambda params, caches, tokens, pos: tf.decode_step(
-                    params, cfg, caches, tokens, pos, rt, kv_live=kv_live
-                ),
-                in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
-                out_shardings=(tok_shard, c_shard),
-                donate_argnums=(1,),
-            )
-            jitted[kv_live] = fn
-        return fn(params, caches, tokens, pos)
-
-    return prefill, decode
-
-
-def make_mixed_fn(
-    cfg: ModelConfig,
-    mesh: Mesh,
-    *,
-    batch: int,
-    cache_len: int,
-    chunk: int,
-    attn_impl: str | None = None,
-    attn_pattern: str | None = None,
-):
-    """The unified mixed-step entry point: one compiled function advances the
-    whole batch, each row consuming ``ntok[b]`` tokens (0 idle / 1 decode /
-    2..chunk prompt chunk) at positions ``pos[b]..``.
-
-    Returned callable: ``mixed(params, caches, tokens (B,C) host prompt
-    chunks, nxt (B,) device feedback tokens, use_nxt (B,) bool, pos (B,),
-    ntok (B,), kv_live)``.  Decode rows take their input token from ``nxt``
-    (the previous step's on-device argmax — the host never syncs on token
-    values), prefill rows from ``tokens``.  ``kv_live`` buckets compile
-    per value, like the decode entry point."""
-    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
-    rt, p_shard, c_shard, tok_shard, rep = _entry_shardings(
-        cfg, mesh, batch, cache_len
-    )
-    jitted: dict[int | None, object] = {}
-
-    def mixed(params, caches, tokens, nxt, use_nxt, pos, ntok,
-              kv_live: int | None = None):
-        if tokens.shape != (batch, chunk):
-            raise ValueError(
-                f"tokens {tokens.shape} vs compiled chunk shape {(batch, chunk)}"
-            )
-        fn = jitted.get(kv_live)
-        if fn is None:
-            def _step(params, caches, tokens, nxt, use_nxt, pos, ntok):
-                col0 = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :] == 0
-                toks = jnp.where(use_nxt[:, None] & col0, nxt[:, None], tokens)
-                return tf.mixed_step(
-                    params, cfg, caches, toks, pos, ntok, rt, kv_live=kv_live
-                )
-
-            fn = jax.jit(
-                _step,
-                in_shardings=(p_shard, c_shard, tok_shard, tok_shard, rep, rep, rep),
-                out_shardings=(tok_shard, c_shard),
-                donate_argnums=(1,),
-            )
-            jitted[kv_live] = fn
-        return fn(params, caches, tokens, nxt, use_nxt, pos, ntok)
-
-    return mixed
-
-
-def make_slot_chunk_fn(
-    cfg: ModelConfig,
-    mesh: Mesh,
-    *,
-    batch: int,
-    cache_len: int,
-    chunk: int,
-    attn_impl: str | None = None,
-    attn_pattern: str | None = None,
-):
-    """``mixed_step`` at its other ragged shape, (1, chunk): stream one
-    prompt chunk into ONE slot of the shared cache at a traced slot index.
-
-    Returned callable: ``chunk_fn(params, caches, tokens (1, C), slot, pos,
-    ntok, kv_live)`` -> (logits (vocab,) at the chunk's last valid token,
-    full updated caches).  The slot's cache rows are sliced to a batch-1
-    view, the chunk runs through the exact same mixed_step / chunk-kernel
-    path, and the updated rows are written back in place (donated) — so a
-    chunk call costs ``C x kv_live`` attention for one row, not
-    ``B x C x kv_live`` for the whole batch.  Compiles once per ``kv_live``
-    bucket, like the decode entry point."""
-    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
-    rt, p_shard, c_shard, _, rep = _entry_shardings(cfg, mesh, batch, cache_len)
-    jitted: dict[int | None, object] = {}
-
-    def chunk_fn(params, caches, tokens, slot, pos, ntok,
-                 kv_live: int | None = None):
-        if tokens.shape != (1, chunk):
-            raise ValueError(
-                f"tokens {tokens.shape} vs compiled chunk shape {(1, chunk)}"
-            )
-        fn = jitted.get(kv_live)
-        if fn is None:
-            def _step(params, caches, tokens, slot, pos, ntok):
-                sub = jax.tree.map(
-                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
-                    caches,
-                )
-                logits, new_sub = tf.mixed_step(
-                    params, cfg, sub, tokens, jnp.reshape(pos, (1,)),
-                    jnp.reshape(ntok, (1,)), rt, kv_live=kv_live,
-                )
-                caches = jax.tree.map(
-                    lambda c, w: jax.lax.dynamic_update_slice_in_dim(
-                        c, w.astype(c.dtype), slot, axis=1
-                    ),
-                    caches,
-                    new_sub,
-                )
-                return logits[0], caches
-
-            fn = jax.jit(
-                _step,
-                in_shardings=(p_shard, c_shard, rep, rep, rep, rep),
-                out_shardings=(rep, c_shard),
-                donate_argnums=(1,),
-            )
-            jitted[kv_live] = fn
-        return fn(params, caches, tokens, slot, pos, ntok)
-
-    return chunk_fn
-
-
-def make_paged_fns(
-    cfg: ModelConfig,
-    mesh: Mesh,
-    *,
-    n_pages: int,
-    page: int,
-    chunk: int,
-    attn_impl: str | None = None,
-    attn_pattern: str | None = None,
-    cross_pages: int | None = None,
-):
-    """Compiled entry points of the PAGED serve engine: ``(prefill, decode,
-    chunk_fn, copy_fn, encode_fn)`` over one global page pool instead of
-    per-slot ``cache_len`` reservations.
-
-    * ``prefill(params, caches, b, lengths, pt_row)`` — batch-1 admission
-      prefill scattered through the request's page-table row (retraces per
-      prompt bucket, like the ragged contiguous prefill).
-    * ``decode(params, caches, tokens (B,1), pos (B,), pt (B,nv), kv_live)``
-      — the ragged decode wave; every row reads the pool through its own
-      page-table row, bucketed per ``kv_live``.
-    * ``chunk_fn(params, caches, tokens (1,C), pt_row (1,nv), pos, ntok,
-      kv_live)`` — one prompt chunk streamed straight into the pool.  No
-      slot slice/insert dance: the pool is already shared, the page table IS
-      the slot.
-    * ``copy_fn(caches, src, dst)`` — copy-on-write page duplication
-      (:func:`repro.models.transformer.paged_copy_page`); src/dst are traced
-      page ids, so the whole prefix-sharing machinery compiles exactly one
-      extra program.
-
-    With ``cross_pages`` (encoder-decoder stacks) the pools grow per-slot
-    read-only cross pools; ``decode`` / ``chunk_fn`` then take a trailing
-    cross-table argument and a fifth entry point appears:
-
-    * ``encode_fn(params, caches, frames (1, S, D), ct_row (1, n_ct))`` —
-      run the encoder ONCE and scatter every decoder slot's cross KV into
-      the cross pool through ``ct_row``
-      (:func:`repro.models.transformer.paged_encode`); the written pages
-      are read-only for the rest of their life and alias freely.
-
-    All entry points donate the pools; the page tables are tiny replicated
-    int32 arrays refreshed from host state every call."""
-    cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
-    rt = M.resolve_runtime(cfg, mesh)
-    p_shard = shd.sharding_tree(M.build_specs(cfg), mesh, M.rules_for(cfg))
-    pool_shard = shd.sharding_tree(
-        tf.paged_pool_specs(cfg, n_pages, page, cross_pages=cross_pages),
-        mesh, M.rules_for(cfg),
-    )
-    tok_shard = NamedSharding(
-        mesh, P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
-    )
-    rep = NamedSharding(mesh, P())
-
-    prefill = jax.jit(
-        lambda params, caches, b, lengths, pt: tf.paged_prefill(
-            params, cfg, b, rt, caches=caches, page_table=pt, page=page,
-            lengths=lengths,
-        ),
-        in_shardings=(p_shard, pool_shard, None, rep, rep),
-        out_shardings=(tok_shard, pool_shard),
-        donate_argnums=(1,),
-    )
-
-    dec_jit: dict[int | None, object] = {}
-
-    def decode(params, caches, tokens, pos, pt, kv_live: int | None = None,
-               ct=None):
-        fn = dec_jit.get(kv_live)
-        if fn is None:
-            if cross_pages is not None:
-                fn = jax.jit(
-                    lambda params, caches, tokens, pos, pt, ct: tf.decode_step(
-                        params, cfg, caches, tokens, pos, rt, kv_live=kv_live,
-                        page_table=pt, page=page, cross_table=ct,
-                    ),
-                    in_shardings=(p_shard, pool_shard, tok_shard, rep, rep,
-                                  rep),
-                    out_shardings=(tok_shard, pool_shard),
-                    donate_argnums=(1,),
-                )
-            else:
-                fn = jax.jit(
-                    lambda params, caches, tokens, pos, pt: tf.decode_step(
-                        params, cfg, caches, tokens, pos, rt, kv_live=kv_live,
-                        page_table=pt, page=page,
-                    ),
-                    in_shardings=(p_shard, pool_shard, tok_shard, rep, rep),
-                    out_shardings=(tok_shard, pool_shard),
-                    donate_argnums=(1,),
-                )
-            dec_jit[kv_live] = fn
-        if cross_pages is not None:
-            return fn(params, caches, tokens, pos, pt, ct)
-        return fn(params, caches, tokens, pos, pt)
-
-    chk_jit: dict[int | None, object] = {}
-
-    def chunk_fn(params, caches, tokens, pt, pos, ntok,
-                 kv_live: int | None = None, ct=None):
-        if tokens.shape != (1, chunk):
-            raise ValueError(
-                f"tokens {tokens.shape} vs compiled chunk shape {(1, chunk)}"
-            )
-        fn = chk_jit.get(kv_live)
-        if fn is None:
-            def _step(params, caches, tokens, pt, pos, ntok, ct=None):
-                logits, caches = tf.mixed_step(
-                    params, cfg, caches, tokens, jnp.reshape(pos, (1,)),
-                    jnp.reshape(ntok, (1,)), rt, kv_live=kv_live,
-                    page_table=pt, page=page, cross_table=ct,
-                )
-                return logits[0], caches
-
-            if cross_pages is not None:
-                fn = jax.jit(
-                    _step,
-                    in_shardings=(p_shard, pool_shard, rep, rep, rep, rep,
-                                  rep),
-                    out_shardings=(rep, pool_shard),
-                    donate_argnums=(1,),
-                )
-            else:
-                fn = jax.jit(
-                    _step,
-                    in_shardings=(p_shard, pool_shard, rep, rep, rep, rep),
-                    out_shardings=(rep, pool_shard),
-                    donate_argnums=(1,),
-                )
-            chk_jit[kv_live] = fn
-        if cross_pages is not None:
-            return fn(params, caches, tokens, pt, pos, ntok, ct)
-        return fn(params, caches, tokens, pt, pos, ntok)
-
-    copy_fn = jax.jit(
-        lambda caches, src, dst: tf.paged_copy_page(caches, src, dst, page),
-        in_shardings=(pool_shard, rep, rep),
-        out_shardings=pool_shard,
-        donate_argnums=(0,),
-    )
-
-    encode_fn = None
-    if cross_pages is not None:
-        encode_fn = jax.jit(
-            lambda params, caches, frames, ct: tf.paged_encode(
-                params, cfg, frames, rt, caches=caches, cross_table=ct,
-                page=page,
-            ),
-            in_shardings=(p_shard, pool_shard, None, rep),
-            out_shardings=pool_shard,
-            donate_argnums=(1,),
-        )
-
-    return prefill, decode, chunk_fn, copy_fn, encode_fn
-
-
-class PagePool:
-    """Host-side refcounted free-list allocator over the global KV page pool.
-
-    Pages are unit-granular (one kv tile each), so there is no external
-    fragmentation by construction: ``alloc`` succeeds whenever ``in_use <
-    n_pages`` — the fragmentation bound the tests pin down.  The engine
-    layers a *reservation* discipline on top (each active request commits its
-    worst-case future residency, :func:`repro.core.sparsity.
-    page_peak_resident`), which makes ``alloc`` infallible at every reachable
-    state and turns pool exhaustion into admission backpressure instead of a
-    mid-stream deadlock.
-
-    Prefix sharing adds reference counting: a physical page can back the
-    same virtual tile of many requests plus the radix cache.  Every sharer
-    holds one reference (``retain``); ``release`` drops one, and the page
-    returns to the free list only when the LAST reference across all sharers
-    is gone — dead-tile freeing from the retention schedules composes with
-    sharing for free.  ``fork`` is the allocator half of copy-on-write: a
-    writer that holds a page jointly trades its reference for a fresh
-    private page (the engine copies the device rows).
-
-    Every reference carries an advisory ``owner`` label (request id, the
-    radix tree, the encoder cache) so a leak at :meth:`ServeLoop.close`
-    names WHO still holds the pages instead of just counting them —
-    :meth:`holders` aggregates the labels of every in-use page.  Labels
-    never influence refcount semantics; a mismatched release just drops the
-    most recent label."""
-
-    def __init__(self, n_pages: int):
-        if n_pages < 1:
-            raise ValueError(f"pool needs >= 1 page, got {n_pages}")
-        self.n_pages = n_pages
-        self._free = list(range(n_pages - 1, -1, -1))
-        self._refs = [0] * n_pages
-        self._owners: list[list[str]] = [[] for _ in range(n_pages)]
-        self.in_use = 0
-        self.peak_in_use = 0
-        self.alloc_count = 0
-        self.fork_count = 0
-
-    @property
-    def free_pages(self) -> int:
-        return len(self._free)
-
-    def page_refs(self, pid: int) -> int:
-        if not 0 <= pid < self.n_pages:
-            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
-        return self._refs[pid]
-
-    def _drop_owner(self, pid: int, owner: str | None) -> None:
-        ow = self._owners[pid]
-        if owner is not None and owner in ow:
-            ow.remove(owner)
-        elif ow:
-            ow.pop()
-
-    def alloc(self, owner: str = "?") -> int:
-        if not self._free:
-            raise RuntimeError(
-                "page pool exhausted — the reservation invariant was broken "
-                "(engine bug), admission should have backpressured"
-            )
-        pid = self._free.pop()
-        if self._refs[pid]:
-            # the free list must never hand out a page somebody still reads
-            # — this is the invariant the churn property test hammers
-            raise AssertionError(
-                f"free list handed out page {pid} with {self._refs[pid]} "
-                "live refs — refcount bookkeeping is corrupt"
-            )
-        self._refs[pid] = 1
-        self._owners[pid] = [owner]
-        self.in_use += 1
-        self.alloc_count += 1
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
-        return pid
-
-    def retain(self, pid: int, owner: str = "?") -> None:
-        """Add a sharer's reference to an allocated page (prefix aliasing)."""
-        if not 0 <= pid < self.n_pages:
-            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
-        if self._refs[pid] == 0:
-            raise ValueError(f"retain of free page {pid} — it could be "
-                             "reallocated under the new reader")
-        self._refs[pid] += 1
-        self._owners[pid].append(owner)
-
-    def fork(self, pid: int, owner: str = "?") -> int:
-        """Copy-on-write: move the caller's reference off shared page ``pid``
-        onto a freshly allocated private page (returned).  The caller owns
-        the device copy of the rows.  Forking an exclusively-held page is an
-        engine bug — the write could have gone in place."""
-        if not 0 <= pid < self.n_pages:
-            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
-        if self._refs[pid] == 0:
-            raise ValueError(f"fork of free page {pid}")
-        if self._refs[pid] == 1:
-            raise ValueError(
-                f"fork of exclusively-held page {pid} — write in place"
-            )
-        new = self.alloc(owner)
-        self._refs[pid] -= 1  # never reaches zero here: refs were >= 2
-        self._drop_owner(pid, owner)
-        self.fork_count += 1
-        return new
-
-    def release(self, pid: int, owner: str | None = None) -> None:
-        if not 0 <= pid < self.n_pages:
-            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
-        if self._refs[pid] == 0:
-            # a double free would put the page on the free list twice and
-            # later hand it to two requests — silent cross-request KV
-            # corruption; fail loudly at the bug site instead
-            raise ValueError(f"page id {pid} is not allocated (double free?)")
-        self._refs[pid] -= 1
-        self._drop_owner(pid, owner)
-        if self._refs[pid] == 0:
-            self._free.append(pid)
-            self.in_use -= 1
-
-    def holders(self) -> dict[str, int]:
-        """Reference counts per owner label over all in-use pages — the
-        attribution a leak error reports."""
-        c: collections.Counter[str] = collections.Counter()
-        for pid in range(self.n_pages):
-            if self._refs[pid]:
-                c.update(self._owners[pid] or ["?"])
-        return dict(c)
-
-
-class _RadixNode:
-    """One edge of the prefix tree: a token run (length a multiple of the
-    page size, so ownership never tears a page) plus the physical pages
-    backing it.  ``children`` maps first-token -> LIST of nodes: when two
-    cached sequences diverge inside a page we cannot split at the true
-    divergence point, so sub-page-divergent siblings share a bucket instead
-    (bounded duplication, exact matching)."""
-
-    __slots__ = ("tokens", "pages", "children", "parent", "last_use")
-
-    def __init__(self, tokens: np.ndarray, pages: list[int], parent):
-        self.tokens = tokens
-        self.pages = pages
-        self.children: dict[int, list[_RadixNode]] = {}
-        self.parent = parent
-        self.last_use = 0
-
-
-class RadixCache:
-    """SGLang-style radix tree over prompt token ids, owning KV pages of the
-    paged pool at tile granularity.
-
-    Every page a node owns carries ONE tree reference in the
-    :class:`PagePool`; requests that alias a cached prefix retain their own
-    references, so a page outlives the tree node (eviction) and the
-    requests (retirement) independently — it frees exactly when the last
-    reader across all sharers lets go.  ``match`` may extend partway into a
-    node's last page (the divergence frontier can sit mid-tile); the aliased
-    boundary page is then shared, and the engine CoW-forks it on the first
-    divergent write.  Eviction is LRU over leaves whose pages hold no
-    reference but the tree's — evicting a still-read node would free
-    nothing and orphan the sharers' accounting."""
-
-    def __init__(self, pool: PagePool, page: int):
-        self.pool = pool
-        self.page = page
-        self.root = _RadixNode(np.empty(0, np.int32), [], None)
-        self.clock = 0
-        self.held_pages = 0  # pages currently carrying a tree reference
-        self.inserted_pages = 0
-        self.evicted_pages = 0
-
-    @staticmethod
-    def _common(a: np.ndarray, b: np.ndarray) -> int:
-        n = min(len(a), len(b))
-        if n == 0:
-            return 0
-        eq = a[:n] == b[:n]
-        return int(eq.argmin()) if not eq.all() else n
-
-    def _best_child(self, node: _RadixNode, tokens: np.ndarray):
-        best, bk = None, 0
-        if len(tokens):
-            for child in node.children.get(int(tokens[0]), []):
-                k = self._common(tokens, child.tokens)
-                if k > bk:
-                    best, bk = child, k
-        return best, bk
-
-    def match(self, prompt: np.ndarray, cap: int) -> tuple[int, list[int]]:
-        """Longest cached prefix of ``prompt[:cap]``: returns (matched token
-        count m, physical pages covering positions 0..m-1).  The last page is
-        only partially matched when m lands mid-tile — aliasing it anyway is
-        what lets chunked prefill start exactly at the divergence frontier;
-        the engine must treat it as shared (fork before writing).  Touches
-        the walked path's LRU clocks."""
-        prompt = np.asarray(prompt, np.int32)
-        self.clock += 1
-        node, m, pages = self.root, 0, []
-        node.last_use = self.clock
-        while m < cap:
-            best, bk = self._best_child(node, prompt[m:cap])
-            if best is None or bk == 0:
-                break
-            best.last_use = self.clock
-            pages += best.pages[: -(-bk // self.page)]
-            m += bk
-            if bk < len(best.tokens):
-                break  # diverged (or cap) inside this edge
-            node = best
-        return m, pages
-
-    def insert(self, tokens: np.ndarray, pages: list[int]) -> None:
-        """Cache ``pages`` (full pages backing ``tokens``; len(tokens) ==
-        len(pages) * page) — the tree retains the pages not already covered
-        by an existing cached prefix."""
-        tokens = np.asarray(tokens, np.int32)
-        if len(tokens) != len(pages) * self.page:
-            raise ValueError(
-                f"insert of {len(tokens)} tokens over {len(pages)} pages of "
-                f"{self.page} — only whole pages are cacheable"
-            )
-        self.clock += 1
-        node = self.root
-        node.last_use = self.clock
-        i = 0
-        while i < len(tokens):
-            best, bk = self._best_child(node, tokens[i:])
-            kp = (bk // self.page) * self.page  # page-aligned match depth
-            if best is not None and kp == len(best.tokens):
-                best.last_use = self.clock
-                node = best
-                i += kp
-                continue
-            if best is not None and kp > 0:
-                # diverges past a page boundary inside the edge: split there
-                best = self._split(best, kp)
-                best.last_use = self.clock
-                node = best
-                i += kp
-                continue
-            # no child, or divergence inside the first page: new sibling
-            new = _RadixNode(tokens[i:].copy(), list(pages[i // self.page:]), node)
-            new.last_use = self.clock
-            for p in new.pages:
-                self.pool.retain(p, owner="radix")
-            self.held_pages += len(new.pages)
-            self.inserted_pages += len(new.pages)
-            node.children.setdefault(int(tokens[i]), []).append(new)
-            return
-        # the whole run is already cached — nothing new to own
-
-    def _split(self, node: _RadixNode, kp: int) -> _RadixNode:
-        head = _RadixNode(node.tokens[:kp], node.pages[: kp // self.page],
-                          node.parent)
-        head.last_use = node.last_use
-        bucket = node.parent.children[int(node.tokens[0])]
-        bucket[bucket.index(node)] = head
-        node.tokens = node.tokens[kp:]
-        node.pages = node.pages[kp // self.page:]
-        node.parent = head
-        head.children = {int(node.tokens[0]): [node]}
-        return head
-
-    def _walk(self):
-        stack = [self.root]
-        while stack:
-            n = stack.pop()
-            for kids in n.children.values():
-                stack.extend(kids)
-            yield n
-
-    def evict(self, need: int) -> int:
-        """Free >= ``need`` pool pages by dropping least-recently-used cached
-        prefixes whose pages nobody else references; returns pages freed
-        (possibly fewer — everything left is either shared or interior)."""
-        freed = 0
-        while freed < need:
-            victim = None
-            for n in self._walk():
-                if n is self.root or n.children:
-                    continue  # interior nodes keep their prefix chain intact
-                if any(self.pool.page_refs(p) > 1 for p in n.pages):
-                    continue  # shared with an active request: frees nothing
-                if victim is None or n.last_use < victim.last_use:
-                    victim = n
-            if victim is None:
-                break
-            for p in victim.pages:
-                self.pool.release(p, owner="radix")
-            freed += len(victim.pages)
-            self.held_pages -= len(victim.pages)
-            self.evicted_pages += len(victim.pages)
-            bucket = victim.parent.children[int(victim.tokens[0])]
-            bucket.remove(victim)
-            if not bucket:
-                del victim.parent.children[int(victim.tokens[0])]
-        return freed
-
-    def clear(self) -> None:
-        """Drop every tree reference (end of run): pages shared with live
-        readers survive until those readers release."""
-        for n in self._walk():
-            for p in n.pages:
-                self.pool.release(p, owner="radix")
-        self.root = _RadixNode(np.empty(0, np.int32), [], None)
-        self.held_pages = 0
-
-
-@dataclasses.dataclass
-class _PagedSlot:
-    """Host bookkeeping for one active request's pages: the retention
-    schedule (from the block maps) plus its allocated tiles."""
-
-    last_reader: np.ndarray  # (n_tiles,) last query position reading tile j
-    peak_from: np.ndarray  # (L,) max future residency from frontier p
-    length: int  # written-position horizon: plen + max_new - 1
-
-    def remaining_peak(self, pos: int) -> int:
-        return int(self.peak_from[min(pos, self.length - 1)])
-
-
-# priority classes, best first.  Rank 0 is served ahead of rank 1 at every
-# admission decision; the aging guard promotes a waiting batch request to
-# rank 0 after ``aging_steps`` engine clocks so batch work is delayed under
-# load, never starved.
-_PRIORITY_RANK = {"interactive": 0, "batch": 1}
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new: int
-    arrival: int = 0  # earliest engine step at which the request exists
-    priority: str = "interactive"  # scheduling class, see _PRIORITY_RANK
-    generated: list[int] = dataclasses.field(default_factory=list)
-    extras: dict = dataclasses.field(default_factory=dict)  # e.g. encdec frames
-    # SLO accounting, in engine-step clock units (reset by each run()):
-    emit_clocks: list[int] = dataclasses.field(default_factory=list)
-    ttft: int | None = None  # first-token clock minus arrival
-    preemptions: int = 0  # times this request was evicted and requeued
-
-
-class _AdmitQueue:
-    """Priority-ordered admission queue with an aging/starvation guard.
-
-    ``peek(clock)`` returns the best ARRIVED request under the order
-    (rank, arrival, insertion seq) — interactive ahead of batch, FIFO
-    within a class — without removing it; the engine pops it only once its
-    page reservation succeeds, so backpressure keeps the request queued.
-    A batch request that has waited ``aging_steps`` clocks is promoted to
-    the interactive rank (counted in ``promotions``): batch work is
-    delayed under load, never starved.  ``fifo=True`` disables both the
-    priority order and aging — the strict arrival-order baseline the
-    --check-preempt gate compares against.  Preempted requests re-enter
-    through ``push`` keeping their original ``arrival``, so their age (and
-    any promotion) keeps accruing across evictions."""
-
-    def __init__(self, requests: list[Request], aging_steps: int,
-                 fifo: bool = False):
-        self.aging_steps = aging_steps
-        self.fifo = fifo
-        self.promotions = 0
-        self._seq = 0
-        self._q: list[tuple[int, Request]] = []
-        for r in requests:
-            self.push(r)
-
-    def __len__(self) -> int:
-        return len(self._q)
-
-    def push(self, r: Request) -> None:
-        self._q.append((self._seq, r))
-        self._seq += 1
-
-    def rank(self, r: Request, clock: int) -> int:
-        if self.fifo:
-            return 0
-        base = _PRIORITY_RANK[r.priority]
-        if base and clock - r.arrival >= self.aging_steps:
-            return 0  # aged: promoted to the interactive rank
-        return base
-
-    def peek(self, clock: int) -> Request | None:
-        best_key, best = None, None
-        for seq, r in self._q:
-            if r.arrival > clock:
-                continue
-            key = (self.rank(r, clock), r.arrival, seq)
-            if best_key is None or key < best_key:
-                best_key, best = key, r
-        return best
-
-    def pop(self, r: Request, clock: int) -> None:
-        for i, (_, q) in enumerate(self._q):
-            if q is r:
-                if (not self.fifo and _PRIORITY_RANK[r.priority]
-                        and self.rank(r, clock) == 0):
-                    self.promotions += 1
-                del self._q[i]
-                return
-        raise ValueError(f"pop of request {r.uid} not in queue")
-
-
-def _next_bucket(n: int, cap: int, floor: int = 8) -> int:
-    """Smallest power-of-two >= n (>= floor), clamped at ``cap`` — the result
-    is always a power of two or exactly ``cap``, so the jit shape cache stays
-    bounded (at most log2(cap) values).  ``n`` must already be validated
-    against ``cap`` (the engine checks prompts/positions against cache_len);
-    a larger ``n`` is a caller bug, not a bucket to allocate."""
-    if n > cap:
-        raise ValueError(f"bucket request {n} exceeds cap {cap}")
-    b = floor
-    while b < n:
-        b *= 2
-    return min(b, cap)
-
-
-class _AsyncTokens:
-    """One-step-lag device-to-host token fetch.
-
-    ``push(dev, sinks)`` registers a device array of sampled token ids and
-    the (request, row) pairs that consumed them, starts an async copy, and
-    resolves any record older than ``lag`` steps — so the host appends step
-    t-1's values while step t's compute is already dispatched, and the
-    per-token blocking ``np.asarray(argmax(...))`` sync disappears from the
-    steady-state loop.  ``flush()`` resolves everything (end of run)."""
-
-    def __init__(self, lag: int = 1):
-        self.lag = lag
-        self._q: collections.deque = collections.deque()
-
-    def push(self, dev, sinks: list[tuple[Request, int]]) -> None:
-        try:
-            dev.copy_to_host_async()
-        except AttributeError:  # non-array backends / older jax
-            pass
-        self._q.append((dev, sinks))
-        while len(self._q) > self.lag:
-            self._resolve()
-
-    def _resolve(self) -> None:
-        dev, sinks = self._q.popleft()
-        vals = np.asarray(dev).reshape(-1)
-        for r, i in sinks:
-            r.generated.append(int(vals[i]))
-
-    def flush(self) -> None:
-        while self._q:
-            self._resolve()
-
-
-class ServeLoop:
-    """Streaming serve engine (greedy sampling), two scheduling modes.
-
-    **Chunked** — mixed-step scheduling: every iteration advances all slots
-    through the ONE unified entry point (``tf.mixed_step``) at two ragged
-    shapes — a (B, 1) decode wave (all decoding rows sample one token,
-    kv_live bucketed at *their* live depth) plus a (1, C) slot-chunk call
-    per mid-prompt row (up to ``chunk_size`` prompt tokens written straight
-    into the slot's rows of the shared cache, bucketed at the prompt's own
-    frontier).  Admission costs nothing (a freed slot just starts consuming
-    the next request's chunks), a per-step ``chunk_budget`` caps total
-    prefill tokens per iteration so decode latency stays bounded, and
-    ``kv_live`` buckets (powers of two) bound the compiled shape count.
-    Decode rows advance on EVERY step by construction —
-    ``stats["decode_stall_steps"]`` stays 0.
-
-    **Admission-prefill** (``chunked=False``) — the slot admit/evict engine:
-    each admission runs a bucketed batch-1 prefill and inserts the caches at
-    the slot index; all live decode slots idle for that prefill
-    (``stats["admission_stall_steps"]`` counts them).  This is the seed
-    contiguous engine, kept as the parity baseline; with
-    ``static_batching=True`` it degrades admission to wave scheduling (the
-    serve_throughput baseline).
-
-    Both modes fetch sampled tokens with a one-step lag (`_AsyncTokens`):
-    the decode feedback token stays on device, the host only tracks counts
-    (stopping is length-based), so the loop never blocks on the current
-    step's values.
-
-    Per-slot host state mirrors the device-side (B,)-vector threading:
-    ``pos[b]`` is request b's next write position (== tokens seen so far),
-    so RoPE angles, cache writes and live-KV masks are all per-request.
-    Prompts are *right*-padded / chunk-aligned — real tokens at positions
-    0..L-1, positions and causal masks exact, pad keys never attended.
-
-    ``paged=True`` additionally runs a radix-tree **prefix cache**
-    (``prefix_cache=False`` disables it): completed prompts donate their
-    full KV pages to a :class:`RadixCache`, admission longest-prefix
-    matches new prompts against it, and a hit aliases the matched physical
-    pages into the request's page table — prefill then starts at the
-    divergence frontier and the admission reservation covers only the
-    unique suffix.  Shared pages are refcounted in the :class:`PagePool`
-    and copy-on-write forked before any divergent write.
-
-    The page table is the ONLY cache substrate beyond the contiguous
-    baseline: a **sliding-window** config serves through a mod-window ring
-    table (``ring_tiles`` slots reused in phase, unbounded decode length,
-    a fixed page set held per request) and an **encoder-decoder** config
-    serves through read-only shared cross page ranges (the encoder output
-    prefills once per distinct ``frames`` input; repeat inputs alias the
-    cached range, counted as ``prefix_hits``; decode never writes cross
-    pages so copy-on-write never triggers).  ``chunked=True`` requests for
-    either family upgrade to ``paged=True`` automatically.  The token
-    radix tree is disabled for those two families (ring slots are reused
-    in phase; encdec decoder KV depends on the frames through
-    cross-attention) — the encoder cache is their sharing layer.
-
-    The :class:`PagePool`, the radix tree, and the encoder cache PERSIST
-    across ``run()`` calls — a warm second run hits the first run's
-    prefixes.  Call :meth:`close` to release the engine-held references;
-    it raises if the pools do not drain to zero.
-    """
-
-    def __init__(
-        self, cfg: ModelConfig, mesh: Mesh, params, *,
-        batch: int, cache_len: int, attn_impl: str | None = None,
-        attn_pattern: str | None = None, static_batching: bool = False,
-        chunked: bool = False, chunk_size: int = 32,
-        chunk_budget: int | None = None, paged: bool = False,
-        page: int | None = None, pool_pages: int | None = None,
-        prefix_cache: bool = True, scheduler: str = "priority",
-        aging_steps: int = 64, max_preemptions: int = 2,
-        preempt_min_progress: int = 1, slo_ttft: int | None = None,
-        slo_itl: float | None = None,
-    ):
-        cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
-        if cfg.sliding_window and cache_len < cfg.sliding_window:
-            raise ValueError(
-                f"cache_len {cache_len} < sliding_window {cfg.sliding_window}: "
-                "the ring modulus must equal the window for prefill/decode "
-                "phase alignment"
-            )
-        stateful = [s.mixer for s in cfg.period_slots if s.mixer != "attn"]
-        if stateful:
-            raise ValueError(
-                f"{cfg.name}: ragged serving requires attention-only stacks — "
-                f"{stateful} mixers integrate right-pad tokens into their "
-                "state during bucketed prefill (no per-row mask can undo it)"
-            )
-        if chunked:
-            if static_batching:
-                raise ValueError("chunked and static_batching are exclusive: "
-                                 "chunked scheduling IS continuous")
-            if chunk_size < 1:
-                raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-            if chunk_budget is not None and chunk_budget < 1:
-                raise ValueError(
-                    f"chunk_budget must be >= 1, got {chunk_budget} — a "
-                    "zero budget would starve prefill rows forever"
-                )
-        if paged and static_batching:
-            raise ValueError("paged and static_batching are exclusive")
-        if (chunked or paged) and cfg.n_img_tokens:
-            # the ONE remaining extras rejection: stub image-patch tokens are
-            # prepended inside prefill and have no chunk/page write path yet
-            raise ValueError(
-                "image-token extras have no chunked/paged path; use the "
-                "admission-prefill engine (chunked=False, paged=False)"
-            )
-        if chunked and not paged and (
-            cfg.sliding_window or cfg.family == "encdec"
-        ):
-            # one cache substrate: a chunked request for a ring or encoder-
-            # decoder cache upgrades to the paged engine — the mod-window /
-            # read-only page tables ARE the streaming layout for these
-            # families (there is no contiguous chunked ring/encdec path)
-            paged = True
-        if scheduler not in ("priority", "fifo"):
-            raise ValueError(
-                f"scheduler must be 'priority' or 'fifo', got {scheduler!r}"
-            )
-        if aging_steps < 1:
-            raise ValueError(f"aging_steps must be >= 1, got {aging_steps}")
-        if max_preemptions < 0:
-            raise ValueError(
-                f"max_preemptions must be >= 0, got {max_preemptions}"
-            )
-        if preempt_min_progress < 1:
-            raise ValueError(
-                "preempt_min_progress must be >= 1, got "
-                f"{preempt_min_progress} — zero progress between evictions "
-                "is a livelock"
-            )
-        self.cfg, self.mesh, self.params = cfg, mesh, params
-        self.batch, self.cache_len = batch, cache_len
-        self.static_batching = static_batching
-        self.chunked = chunked
-        self.chunk_size = chunk_size
-        self.chunk_budget = chunk_budget if chunk_budget is not None else chunk_size
-        self.fifo = scheduler == "fifo"
-        self.aging_steps = aging_steps
-        self.max_preemptions = max_preemptions
-        self.preempt_min_progress = preempt_min_progress
-        self.slo_ttft = slo_ttft
-        self.slo_itl = slo_itl
-        self._closed = False
-        # preemption needs a page substrate to evict from and a restartable
-        # resume path; rings hold fixed in-phase page sets and encdec KV
-        # depends on the frames through cross-attention — both families are
-        # NON-preemptible (nothing warm to resume from, by declaration)
-        self.preemptible = (
-            paged and not self.fifo and max_preemptions > 0
-            and not cfg.sliding_window and cfg.family != "encdec"
-        )
-        self.paged = paged
-        if paged:
-            spec = cfg.attention_spec
-            # one page == one kv tile of the effective grid, so the packed
-            # live tables ARE the page-table domain (tile-granular paging)
-            self.page = page if page is not None else sparsity.pick_pattern_tiles(
-                1, cache_len, spec.q_tile, spec.kv_tile
-            )[1]
-            if self.page < 1:
-                raise ValueError(f"page must be >= 1 token, got {self.page}")
-            self.ring_tiles: int | None = None
-            if cfg.sliding_window:
-                # mod-window ring: the table has exactly ring_tiles slots and
-                # absolute tile j lives in slot j % ring_tiles — a window-
-                # sized page set reused in phase, positions unbounded
-                self.ring_tiles = sparsity.ring_tiles_for(
-                    cfg.sliding_window, chunk_size, self.page
-                )
-                self.n_vtiles = self.ring_tiles
-            else:
-                self.n_vtiles = -(-cache_len // self.page)
-            # default pool budget == the dense reservation the contiguous
-            # engine would make (batch x cache_len rows; batch rings for a
-            # window config) — benchmarks shrink it to show the capacity win
-            self.pool_pages = (
-                pool_pages if pool_pages is not None else batch * self.n_vtiles
-            )
-            if self.pool_pages < 1:
-                raise ValueError(
-                    f"pool_pages must be >= 1, got {self.pool_pages}"
-                )
-            # encoder-decoder: a SEPARATE read-only cross pool — encoder
-            # outputs prefill once, decoders alias; sized for one distinct
-            # encoder input per slot (the frames cache shares below that)
-            self.cross_pages: int | None = None
-            if cfg.family == "encdec":
-                self.cross_tiles = -(-cfg.enc_seq // self.page)
-                self.cross_pages = batch * self.cross_tiles
-                self.cross_pool = PagePool(self.cross_pages)
-                self._cross_cache: collections.OrderedDict[
-                    str, list[int]
-                ] = collections.OrderedDict()
-            # prefix sharing: the radix tree is token-keyed, so it is OFF for
-            # rings (slots are reused in phase — nothing stable to alias) and
-            # for encdec decoders (self-KV depends on the encoder output
-            # through cross-attention, not on tokens alone); encdec gets the
-            # frames-keyed encoder cache instead.  Both the tree and the page
-            # pool PERSIST across run() calls — drain checks live in close().
-            self.prefix_cache = (
-                prefix_cache and not cfg.sliding_window
-                and cfg.family != "encdec"
-            )
-            self.pool = PagePool(self.pool_pages)
-            self.radix: RadixCache | None = (
-                RadixCache(self.pool, self.page) if self.prefix_cache else None
-            )
-            self._pools = None  # device pools, lazily built, persist too
-            self._sched_cache: dict[tuple, _PagedSlot] = {}
-            (self.p_prefill_fn, self.p_decode_fn, self.p_chunk_fn,
-             self.p_copy_fn, self.p_encode_fn) = make_paged_fns(
-                cfg, mesh, n_pages=self.pool_pages, page=self.page,
-                chunk=chunk_size, cross_pages=self.cross_pages,
-            )
-            self.stats = {}
-            return
-        if chunked:
-            # ONE entry point (tf.mixed_step), two ragged shapes: the (B, 1)
-            # decode wave advances every decoding row each iteration at the
-            # decode rows' OWN kv_live bucket, and each (1, C) slot-chunk
-            # call streams a prompt chunk into the shared cache at its own
-            # frontier bucket — decode work and prefill work never inflate
-            # each other's compiled shapes or compute
-            self.mixed1_fn = make_mixed_fn(
-                cfg, mesh, batch=batch, cache_len=cache_len, chunk=1
-            )
-            self.chunk_fn = make_slot_chunk_fn(
-                cfg, mesh, batch=batch, cache_len=cache_len, chunk=chunk_size
-            )
-        else:
-            # batch-1 ragged prefill (jit retraces per bucket shape; caches
-            # insert at a traced slot index so one compile covers every slot)
-            # + batch-wide ragged decode, through the sharded entry points
-            self.prefill_fn, _ = make_serve_fns(
-                cfg, mesh, batch=1, cache_len=cache_len, ragged=True
-            )
-            _, self.decode_fn = make_serve_fns(
-                cfg, mesh, batch=batch, cache_len=cache_len, ragged=True
-            )
-            self._insert = jax.jit(
-                lambda caches, wave, slot: jax.tree.map(
-                    lambda c, w: jax.lax.dynamic_update_slice_in_dim(
-                        c, w.astype(c.dtype), slot, axis=1
-                    ),
-                    caches,
-                    wave,
-                ),
-                donate_argnums=(0,),
-            )
-        self.stats: dict[str, int] = {}
-
-    # -- per-slot prefill (admission-prefill mode) ------------------------
-
-    def _prefill_one(self, r: Request):
-        """Prefill one request (batch=1, right-padded to a bucket); returns
-        (first sampled token — a DEVICE scalar, batch-1 cache tree)."""
-        ln = len(r.prompt)
-        bucket = _next_bucket(ln, self.cache_len)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :ln] = r.prompt
-        b = {"tokens": jnp.asarray(toks)}
-        for key, val in r.extras.items():
-            b[key] = jnp.asarray(val)[None]
-        logits, wave = self.prefill_fn(self.params, b, jnp.asarray([ln], jnp.int32))
-        self.stats["prefill_calls"] = self.stats.get("prefill_calls", 0) + 1
-        return jnp.argmax(logits[0]).astype(jnp.int32), wave
-
-    def _zero_caches(self):
-        specs = tf.cache_specs(self.cfg, self.batch, self.cache_len)
-        dt = jnp.dtype(self.cfg.dtype)
-        return jax.tree.map(
-            lambda s: jnp.zeros(s.shape, dt),
-            specs,
-            is_leaf=lambda x: isinstance(x, shd.ParamSpec),
-        )
-
-    def _validate(self, requests: list[Request]) -> None:
-        for r in requests:
-            if r.arrival < 0:
-                raise ValueError(
-                    f"request {r.uid}: negative arrival {r.arrival} — the "
-                    "engine clock starts at 0"
-                )
-            if r.priority not in _PRIORITY_RANK:
-                raise ValueError(
-                    f"request {r.uid}: unknown priority {r.priority!r} "
-                    f"(expected one of {sorted(_PRIORITY_RANK)})"
-                )
-            if len(r.prompt) < 1:
-                raise ValueError(f"request {r.uid}: prompt must be non-empty")
-            if len(r.prompt) > self.cache_len:
-                raise ValueError(
-                    f"request {r.uid}: prompt {len(r.prompt)} > cache_len {self.cache_len}"
-                )
-            if r.max_new < 1:
-                raise ValueError(f"request {r.uid}: max_new must be >= 1")
-            # without a ring, decode writes positions L .. L+max_new-2 straight
-            # into the cache — past cache_len they would silently clamp
-            need = len(r.prompt) + r.max_new - 1
-            if not self.cfg.sliding_window and need > self.cache_len:
-                raise ValueError(
-                    f"request {r.uid}: prompt+max_new needs {need} cache rows "
-                    f"> cache_len {self.cache_len}"
-                )
-            if self.paged:
-                if self.ring_tiles is not None:
-                    # a ring request holds a FIXED page set to retirement
-                    peak = min(self.ring_tiles, -(-need // self.page))
-                elif self.chunked or self.cfg.family == "encdec":
-                    # encdec admission streams the decoder prompt through
-                    # the chunk entry point, so its spans are chunk-sized
-                    peak = self._paged_schedule(
-                        need, self.chunk_size
-                    ).remaining_peak(0)
-                else:
-                    peak = self._paged_schedule(
-                        need, len(r.prompt)
-                    ).remaining_peak(0)
-                if peak > self.pool_pages:
-                    raise ValueError(
-                        f"request {r.uid}: needs {peak} resident pages at its "
-                        f"peak > pool of {self.pool_pages} — unservable at "
-                        "this page budget"
-                    )
-                if self.cross_pages is not None and "frames" not in r.extras:
-                    raise ValueError(
-                        f"request {r.uid}: encoder-decoder serving needs "
-                        "'frames' extras (the encoder input)"
-                    )
-            r.generated.clear()
-            r.emit_clocks.clear()
-            r.ttft = None
-            r.preemptions = 0
-
-    # -- engine loops -----------------------------------------------------
-
-    def run(self, requests: list[Request]) -> list[Request]:
-        """Serve every request to completion; returns them in input order."""
-        self._validate(requests)
-        if self.paged:
-            if self.chunked:
-                return self._run_paged_chunked(requests)
-            return self._run_paged_admission(requests)
-        if self.chunked:
-            return self._run_chunked(requests)
-        return self._run_admission(requests)
-
-    # -- paged engine: page pool + per-request tile-granular page tables ----
-
-    def _zero_pools(self):
-        specs = tf.paged_pool_specs(self.cfg, self.pool_pages, self.page)
-        dt = jnp.dtype(self.cfg.dtype)
-        return jax.tree.map(
-            lambda s: jnp.zeros(s.shape, dt),
-            specs,
-            is_leaf=lambda x: isinstance(x, shd.ParamSpec),
-        )
-
-    def _paged_schedule(
-        self, length: int, step_span: int, start_tile: int = 0
-    ) -> _PagedSlot:
-        """Retention schedule for one request whose written positions span
-        ``0..length-1``: per-tile last-reader positions (the union over every
-        attention slot's pattern — one page table serves all layers) and the
-        max-future-residency curve that backs the reservation discipline.
-        ``step_span`` is the engine's largest single advance (chunk size, or
-        the whole prompt for a monolithic admission prefill) — tiles
-        allocated mid-step widen residency by that much.  ``start_tile > 0``
-        prices only the unique suffix of a prefix-cache hit: aliased tiles
-        are carried by the radix cache's references, the request allocates
-        nothing below its divergence tile."""
-        key = (length, step_span, start_tile)
-        sc = self._sched_cache.get(key)
-        if sc is not None:
-            return sc
-        spec = self.cfg.attention_spec
-        pats = {
-            s.attn_pattern or spec.pattern
-            for s in self.cfg.period_slots
-            if s.mixer == "attn"
-        }
-        last = sparsity.page_last_reader_union(
-            pats, length, spec.q_tile, self.page, pattern_arg=spec.pattern_arg
-        )
-        res = sparsity.page_residency(
-            last, length, self.page, step_span, start_tile
-        )
-        peak_from = np.maximum.accumulate(res[::-1])[::-1]
-        sc = _PagedSlot(last_reader=last, peak_from=peak_from, length=length)
-        self._sched_cache[key] = sc
-        return sc
-
-    def _ring_schedule(self, length: int) -> _PagedSlot:
-        """Retention schedule of a mod-window ring request: a FIXED set of
-        ``min(ring_tiles, ceil(length / page))`` pages allocated at admission
-        and held to retirement — slots are reused in phase, so no tile ever
-        frees early and the reservation is exact by construction."""
-        key = ("ring", length)
-        sc = self._sched_cache.get(key)
-        if sc is None:
-            n = min(self.ring_tiles, -(-length // self.page))
-            sc = _PagedSlot(
-                last_reader=np.full(self.n_vtiles, length - 1, np.int64),
-                peak_from=np.full(max(length, 1), n, np.int64),
-                length=max(length, 1),
-            )
-            self._sched_cache[key] = sc
-        return sc
-
-    def _committed(self, active, sched, pos) -> int:
-        """Sum of active requests' worst-case future residency — admission
-        reserves against this so `PagePool.alloc` can never fail mid-stream
-        (out-of-pages becomes FIFO backpressure at admission instead)."""
-        return sum(
-            sched[s].remaining_peak(int(pos[s]))
-            for s in range(self.batch)
-            if active[s] is not None
-        )
-
-    def _ensure_writable(self, pool, pt, slot: int, lo_pos: int, hi_pos: int,
-                         caches, owner: str = "?"):
-        """Back every virtual tile overlapping positions [lo_pos, hi_pos)
-        with a page this request may WRITE before the step that writes it:
-        unbacked tiles allocate; tiles whose physical page is shared (an
-        aliased prefix boundary, or a page the radix cache still owns)
-        copy-on-write fork — pool fork + device row copy + table repoint —
-        so the divergent write lands in a private copy instead of corrupting
-        siblings.  Returns the (possibly copied-into) pools.
-
-        Mod-window rings are a no-op here: the fixed ring pages were all
-        allocated at admission, slots are reused in phase, and ring pages are
-        never shared — there is nothing to back and nothing to fork."""
-        if self.ring_tiles is not None:
-            return caches
-        for t in range(lo_pos // self.page, (hi_pos - 1) // self.page + 1):
-            pid = int(pt[slot, t])
-            if pid == self.pool_pages:
-                pt[slot, t] = pool.alloc(owner)
-            elif pool.page_refs(pid) > 1:
-                new = pool.fork(pid, owner)
-                caches = self.p_copy_fn(caches, jnp.int32(pid), jnp.int32(new))
-                pt[slot, t] = new
-        return caches
-
-    def _free_dead(self, pool, pt, slot: int, sc: _PagedSlot, frontier: int,
-                   owner: str | None = None):
-        """Release pages whose last possible reader is behind the request's
-        next query position — dense-causal never frees until retirement,
-        window frees the out-of-window tail, butterfly frees every tile its
-        remaining O(log n) stride pairs can no longer touch."""
-        nt = len(sc.last_reader)
-        for t in range(nt):
-            if pt[slot, t] != self.pool_pages and sc.last_reader[t] < frontier:
-                pool.release(int(pt[slot, t]), owner)
-                pt[slot, t] = self.pool_pages
-
-    def _free_all(self, pool, pt, slot: int, owner: str | None = None):
-        for t in range(pt.shape[1]):
-            if pt[slot, t] != self.pool_pages:
-                pool.release(int(pt[slot, t]), owner)
-                pt[slot, t] = self.pool_pages
-
-    # -- prefix cache (radix tree over the page pool) ---------------------
-
-    def _prefill_flop_count(self, pos0: int, t: int) -> float:
-        """Analytic admission-side prefill work for ``t`` prompt tokens
-        entering at absolute position ``pos0``: linear stack FLOPs plus the
-        exact causal attention term.  This is what the --check-prefix gate
-        compares — prefix hits skip the matched positions entirely, so the
-        number scales with unique suffixes, not requests."""
-        cfg = self.cfg
-        n_attn = sum(
-            1 for s in cfg.period_slots if s.mixer == "attn"
-        ) * cfg.n_periods
-        attn = 4.0 * cfg.n_heads * cfg.head_dim * n_attn * (
-            t * pos0 + t * (t + 1) / 2.0
-        )
-        return t * M.model_flops_per_token(cfg, 1, mode="fwd") + attn
-
-    def _match_prefix(self, prompt: np.ndarray) -> tuple[int, list[int]]:
-        """Longest-prefix match at admission.  Caps the match at plen-1 (the
-        last prompt token must run to produce first-token logits) and skips
-        sub-page matches (no page to alias).  The caller must retain the
-        returned pages before anything else can evict them.  ``prompt`` is
-        the EFFECTIVE prompt: for a preempted request being resumed it is
-        the original prompt plus every token already emitted, so the warm
-        resume frontier is wherever the radix tree still covers it."""
-        if self.radix is None:
-            return 0, []
-        plen = len(prompt)
-        m, pages = self.radix.match(np.asarray(prompt, np.int32), plen - 1)
-        if m < self.page:
-            return 0, []
-        return m, pages
-
-    def _fits(self, need: int) -> int:
-        """Reservation check against the pool, counting the radix cache's
-        held pages; under pressure, LRU-evicts unreferenced cached prefixes.
-        Returns the residual gap (<= 0 means the reservation fits)."""
-        held = self.radix.held_pages if self.radix is not None else 0
-        gap = need + held - self.pool_pages
-        if gap > 0 and self.radix is not None:
-            self.radix.evict(gap)
-            gap = need + self.radix.held_pages - self.pool_pages
-        return gap
-
-    def _cache_pages(self, tokens: np.ndarray, pt, slot: int) -> None:
-        """Hand ``tokens``' full, still-resident pages to the radix cache
-        (shared ownership) — called on prompt completion AND on preemption,
-        where ``tokens`` is the victim's written prefix so resume becomes a
-        warm hit.  Retention may already have freed mid-prompt tiles
-        (butterfly streams past them) — only the contiguous resident run
-        from tile 0 is cacheable."""
-        if self.radix is None:
-            return
-        k = len(tokens) // self.page
-        run = 0
-        while run < k and pt[slot, run] != self.pool_pages:
-            run += 1
-        if run:
-            self.radix.insert(
-                np.asarray(tokens[: run * self.page], np.int32),
-                [int(pt[slot, t]) for t in range(run)],
-            )
-
-    def _suffix_prefill(self, prompt: np.ndarray, m: int, sc: _PagedSlot,
-                        pool, pt, slot: int, caches, ct=None,
-                        owner: str = "?"):
-        """Admission-mode prefill of a prefix-cache hit: stream ONLY the
-        unique suffix (positions m..plen-1) through the paged chunk entry
-        point — prefill starts at the divergence frontier, attending the
-        aliased prefix pages through the page table.  The first chunk
-        CoW-forks the partially-shared boundary tile.  Dead tiles free
-        between chunks (the unique-suffix reservation is priced at
-        chunk-size spans, so the stream must keep that schedule).  Returns
-        (first sampled token — device scalar, pools)."""
-        C = self.chunk_size
-        plen = len(prompt)
-        p = m
-        logits1 = None
-        while p < plen:
-            t = min(C, plen - p)
-            caches = self._ensure_writable(pool, pt, slot, p, p + t, caches,
-                                           owner)
-            ctoks = np.zeros((1, C), np.int32)
-            ctoks[0, :t] = prompt[p : p + t]
-            kv_live = _next_bucket(p + t, self.cache_len)
-            logits1, caches = self.p_chunk_fn(
-                self.params, caches, jnp.asarray(ctoks),
-                jnp.asarray(pt[slot : slot + 1]), jnp.int32(p), jnp.int32(t),
-                kv_live, ct=ct,
-            )
-            self.stats["chunk_calls"] = self.stats.get("chunk_calls", 0) + 1
-            self.stats["prefill_tokens"] += t
-            self.stats["prefill_flops"] += self._prefill_flop_count(p, t)
-            p += t
-            self._free_dead(pool, pt, slot, sc, p, owner)
-        return jnp.argmax(logits1).astype(jnp.int32), caches
-
-    def _cross_admit(self, r: Request, slot: int, ct, caches):
-        """Admit the request's ENCODER side: key the frames, alias the cached
-        read-only page range on a hit (a ``retain`` per page — CoW can never
-        trigger because decode never writes a cross page), or allocate a
-        fresh range and run the encoder once on a miss.  Returns the updated
-        pools, or ``None`` when the cross pool cannot fit a new range even
-        after evicting every unreferenced cached encoder (backpressure)."""
-        frames = np.asarray(r.extras["frames"], np.float32)
-        key = frames.tobytes()
-        pages = self._cross_cache.get(key)
-        if pages is not None:
-            self._cross_cache.move_to_end(key)  # LRU touch
-            for p in pages:
-                self.cross_pool.retain(p, owner=f"req{r.uid}")
-            ct[slot, : len(pages)] = pages
-            self.stats["prefix_hits"] += 1
-            self.stats["prefix_hit_tokens"] += self.cfg.enc_seq
-            self.stats["encoder_hits"] = self.stats.get("encoder_hits", 0) + 1
-            return caches
-        n = self.cross_tiles
-        if self.cross_pool.free_pages < n:
-            # evict LRU cached encoders nobody references but the cache
-            for k in [
-                k for k in self._cross_cache
-                if all(
-                    self.cross_pool.page_refs(p) == 1
-                    for p in self._cross_cache[k]
-                )
-            ]:
-                for p in self._cross_cache.pop(k):
-                    self.cross_pool.release(p, owner="encoder-cache")
-                if self.cross_pool.free_pages >= n:
-                    break
-        if self.cross_pool.free_pages < n:
-            return None
-        pages = [self.cross_pool.alloc("encoder-cache") for _ in range(n)]
-        ct[slot, :n] = pages
-        caches = self.p_encode_fn(
-            self.params, caches, jnp.asarray(frames)[None],
-            jnp.asarray(ct[slot : slot + 1]),
-        )
-        for p in pages:  # the request's own reference; alloc's is the cache's
-            self.cross_pool.retain(p, owner=f"req{r.uid}")
-        self._cross_cache[key] = pages
-        self.stats["encode_calls"] = self.stats.get("encode_calls", 0) + 1
-        return caches
-
-    def _release_cross(self, ct, slot: int, owner: str | None = None) -> None:
-        """Drop the request's references on its aliased cross page range."""
-        for t in range(ct.shape[1]):
-            if ct[slot, t] != self.cross_pages:
-                self.cross_pool.release(int(ct[slot, t]), owner)
-                ct[slot, t] = self.cross_pages
-
-    # -- priority scheduling, preemption, SLO accounting ------------------
-
-    @staticmethod
-    def _eff_prompt(r: Request) -> np.ndarray:
-        """The EFFECTIVE prompt of an admission: the original prompt plus
-        every already-emitted token — non-empty ``generated`` only for a
-        preempted request being resumed.  Greedy sampling makes the resume
-        token-identical: re-prefilling the written prefix reconstructs the
-        exact cache the victim lost (warm via the radix tree where its
-        pages survived, cold recompute otherwise), and the next sampled
-        token follows deterministically."""
-        if not r.generated:
-            return np.asarray(r.prompt, np.int32)
-        return np.concatenate(
-            [np.asarray(r.prompt, np.int32),
-             np.asarray(r.generated, np.int32)]
-        )
-
-    def _stamp_emits(self, sinks: list[tuple[Request, int]],
-                     clock: int) -> None:
-        """Record the emission clock of every token pushed this step — the
-        raw series per-request TTFT / inter-token latency aggregate from."""
-        for r, _ in sinks:
-            if r.ttft is None:
-                r.ttft = clock - r.arrival
-            r.emit_clocks.append(clock)
-
-    def _finalize_slo(self, requests: list[Request],
-                      q: _AdmitQueue) -> None:
-        """End-of-run latency aggregation: p50/p99 TTFT and mean inter-token
-        latency per priority class (engine-step clock units), the
-        SLO-attainment fraction (1.0 when no SLO is configured), and the
-        scheduler counters every loop shares."""
-        per: dict[str, dict[str, list[float]]] = {}
-        attained: list[bool] = []
-        for r in requests:
-            if not r.emit_clocks:
-                continue
-            t = float(r.ttft)
-            gaps = np.diff(np.asarray(r.emit_clocks))
-            itl = float(gaps.mean()) if len(gaps) else 0.0
-            d = per.setdefault(r.priority, {"ttft": [], "itl": []})
-            d["ttft"].append(t)
-            d["itl"].append(itl)
-            ok = True
-            if self.slo_ttft is not None and t > self.slo_ttft:
-                ok = False
-            if self.slo_itl is not None and itl > self.slo_itl:
-                ok = False
-            attained.append(ok)
-        slo = {}
-        for prio in sorted(per):
-            ts = np.asarray(per[prio]["ttft"])
-            its = np.asarray(per[prio]["itl"])
-            slo[prio] = {
-                "n": int(len(ts)),
-                "ttft_p50": float(np.percentile(ts, 50)),
-                "ttft_p99": float(np.percentile(ts, 99)),
-                "itl_p50": float(np.percentile(its, 50)),
-                "itl_p99": float(np.percentile(its, 99)),
-            }
-        self.stats["slo"] = slo
-        self.stats["slo_attainment"] = (
-            float(np.mean(attained)) if attained else 1.0
-        )
-        self.stats["aging_promotions"] = q.promotions
-        self.stats["starved_requests"] = sum(
-            1 for r in requests if not r.emit_clocks
-        )
-        self.stats.setdefault("preemptions", 0)
-
-    def _preempt_slot(self, s: int, q: _AdmitQueue, fetch, pool, pt,
-                      active, sched, parr, pos) -> None:
-        """Evict the request in slot ``s``: flush the async token fetch (the
-        snapshot must hold every emitted token), donate its written prefix's
-        full resident pages to the radix tree (so resume is a warm hit),
-        release its pool pages, and requeue it at its ORIGINAL arrival so
-        its age — and any aging promotion — keeps accruing."""
-        fetch.flush()
-        r = active[s]
-        written = self._eff_prompt(r)[: int(pos[s])]
-        self._cache_pages(written, pt, s)
-        self._free_all(pool, pt, s, owner=f"req{r.uid}")
-        r.preemptions += 1
-        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
-        active[s] = None
-        sched[s] = None
-        if parr is not None:
-            parr[s] = None
-        q.push(r)
-
-    def _preempt_until(self, need, rank: int, q: _AdmitQueue, fetch, pool,
-                       pt, active, sched, parr, pos, admit_pos,
-                       admit_seq) -> int:
-        """Preempt youngest lowest-priority victims until the reservation
-        gap ``self._fits(need())`` closes or no eligible victim remains;
-        returns the final gap (<= 0 means the admission fits).  A victim
-        must hold a strictly worse RAW priority rank than the admitting
-        request (aging changes admission order, never preemption power), be
-        under the per-request preemption cap, and have advanced at least
-        ``preempt_min_progress`` positions since its own admission — the
-        cap bounds total evictions and the progress floor bounds wasted
-        work, so preempt/resume cannot livelock."""
-        gap = self._fits(need())
-        while gap > 0:
-            victim, vkey = None, None
-            for s in range(self.batch):
-                a = active[s]
-                if a is None:
-                    continue
-                if _PRIORITY_RANK[a.priority] <= rank:
-                    continue
-                if a.preemptions >= self.max_preemptions:
-                    continue
-                if int(pos[s]) - int(admit_pos[s]) < self.preempt_min_progress:
-                    continue
-                key = (_PRIORITY_RANK[a.priority], int(a.arrival),
-                       int(admit_seq[s]))
-                if victim is None or key > vkey:
-                    victim, vkey = s, key
-            if victim is None:
-                break
-            self._preempt_slot(victim, q, fetch, pool, pt, active, sched,
-                               parr, pos)
-            gap = self._fits(need())
-        return gap
-
-    def close(self) -> None:
-        """Release the engine-held cache state (radix tree references, cached
-        encoder cross ranges) and check the pools drain to zero.  The pools
-        and the prefix caches PERSIST across ``run()`` calls — a warm second
-        run alias-hits the first run's prompts — so the end-of-run drain
-        assertion of the per-run engines lives here instead.
-
-        Idempotent: a second ``close()`` after a CLEAN first one is a no-op.
-        A close that raised (leak detected) stays re-runnable so a caller
-        can release the stragglers and verify the drain; the leak error
-        names the holders (:meth:`PagePool.holders` labels) so the bug site
-        is attributable without a refcount bisect."""
-        if self._closed or not self.paged:
-            self._closed = True
-            return
-        if self.radix is not None:
-            self.radix.clear()
-        if self.cross_pages is not None:
-            for pages in self._cross_cache.values():
-                for p in pages:
-                    self.cross_pool.release(p, owner="encoder-cache")
-            self._cross_cache.clear()
-            if self.cross_pool.in_use:
-                raise RuntimeError(
-                    f"cross pool leak: {self.cross_pool.in_use} pages still "
-                    "referenced after close() released the encoder cache — "
-                    f"held by {self.cross_pool.holders()}"
-                )
-        if self.pool.in_use:
-            raise RuntimeError(
-                f"page pool leak: {self.pool.in_use} pages still referenced "
-                "after close() released the radix tree — held by "
-                f"{self.pool.holders()}"
-            )
-        self._closed = True
-
-    def __enter__(self) -> "ServeLoop":
-        return self
-
-    def __exit__(self, exc_type, exc, tb) -> bool:
-        if exc_type is not None:
-            # an exception is already propagating: close best-effort, but a
-            # leak (requests mid-flight when the body raised) must not mask
-            # the original error
-            try:
-                self.close()
-            except RuntimeError:
-                pass
-            return False
-        self.close()
-        return False
-
-    def _finish_paged_run(self, pool) -> None:
-        """End-of-run bookkeeping shared by both paged loops: surface the
-        pool and prefix-cache counters.  Requests have released all their
-        references by now; what remains in ``in_use`` is exactly the engine-
-        held cache state (radix tree + encoder cross ranges), which persists
-        for the next run and drains in :meth:`close`."""
-        self.stats["pool_pages"] = self.pool_pages
-        self.stats["pool_peak_pages"] = pool.peak_in_use
-        self.stats["page_allocs"] = pool.alloc_count
-        self.stats["cow_forks"] = pool.fork_count
-        if self.radix is not None:
-            self.stats["prefix_cached_pages_end"] = self.radix.held_pages
-            self.stats["prefix_inserted_pages"] = self.radix.inserted_pages
-            self.stats["prefix_evicted_pages"] = self.radix.evicted_pages
-        if self.cross_pages is not None:
-            self.stats.setdefault("encode_calls", 0)
-            self.stats["cross_pool_pages"] = self.cross_pages
-            self.stats["cross_pool_peak_pages"] = self.cross_pool.peak_in_use
-            self.stats["cross_cached_ranges_end"] = len(self._cross_cache)
-
-    def _run_admission(self, requests: list[Request]) -> list[Request]:
-        """Admission-prefill engine: per-slot prefill + cache insert, then
-        ragged decode steps; finished requests retire immediately and free
-        their slot — but every admission stalls all live decode slots for
-        one blocking batch-1 prefill (counted in ``admission_stall_steps``).
-        """
-        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
-        active: list[Request | None] = [None] * self.batch
-        pos = np.zeros(self.batch, np.int32)  # next write position per slot
-        remaining = np.zeros(self.batch, np.int32)  # decode tokens still owed
-        nxt = jnp.zeros((self.batch,), jnp.int32)  # device feedback tokens
-        fetch = _AsyncTokens(lag=1)
-        self.stats = {
-            "prefill_calls": 0, "decode_steps": 0, "admission_stall_steps": 0,
-        }
-        clock = 0  # admission clock: decode steps + idle ticks (arrivals)
-        with self.mesh:
-            caches = self._zero_caches()
-            while len(q) or any(r is not None for r in active):
-                # admit: fill free slots (waves only, under static batching)
-                may_admit = not self.static_batching or all(
-                    r is None for r in active
-                )
-                if may_admit:
-                    for slot in range(self.batch):
-                        if active[slot] is not None:
-                            continue
-                        r = q.peek(clock)
-                        if r is None:
-                            break  # nothing in the queue has arrived yet
-                        q.pop(r, clock)
-                        if any(a is not None for a in active):
-                            # live decode slots idle for this whole prefill —
-                            # the stall the chunked engine exists to remove
-                            self.stats["admission_stall_steps"] += 1
-                        tok, wave = self._prefill_one(r)
-                        self._stamp_emits([(r, 0)], clock)
-                        fetch.push(tok, [(r, 0)])
-                        if r.max_new <= 1:
-                            continue  # done at prefill; slot stays free
-                        caches = self._insert(caches, wave, jnp.int32(slot))
-                        active[slot] = r
-                        pos[slot] = len(r.prompt)
-                        remaining[slot] = r.max_new - 1
-                        nxt = nxt.at[slot].set(tok)
-                if not any(r is not None for r in active):
-                    clock += 1  # idle tick: waiting on arrivals
-                    continue
-                # one ragged decode step for the whole batch; attention
-                # streams only the live cache prefix (bucketed so each bucket
-                # compiles once) — a short wave on a deep cache reads its own
-                # tiles, not the padded cache.  Ring caches keep their own
-                # mod-window layout and stream the whole (window-sized) ring.
-                kv_live = None
-                if not self.cfg.sliding_window:
-                    hot = max(int(pos[s]) for s in range(self.batch)
-                              if active[s] is not None) + 1
-                    kv_live = _next_bucket(hot, self.cache_len)
-                    self.stats["decode_kv_live_max"] = max(
-                        self.stats.get("decode_kv_live_max", 0), kv_live
-                    )
-                logits, caches = self.decode_fn(
-                    self.params, caches, nxt[:, None], jnp.asarray(pos), kv_live,
-                )
-                self.stats["decode_steps"] += 1
-                clock += 1
-                toks = jnp.argmax(logits, -1).astype(jnp.int32)
-                sinks = []
-                for slot in range(self.batch):
-                    r = active[slot]
-                    if r is None:
-                        continue
-                    sinks.append((r, slot))
-                    pos[slot] += 1
-                    remaining[slot] -= 1
-                    if remaining[slot] <= 0:
-                        active[slot] = None  # evict: slot frees for the queue
-                self._stamp_emits(sinks, clock)
-                fetch.push(toks, sinks)
-                nxt = toks
-        fetch.flush()
-        self._finalize_slo(requests, q)
-        return requests
-
-    def _run_chunked(self, requests: list[Request]) -> list[Request]:
-        """Mixed-step engine: every iteration advances ALL slots — one (B, 1)
-        decode wave samples every decoding row, then each mid-prompt row
-        streams one chunk into the shared cache through a (1, C) slot-chunk
-        call — so a long admission never stalls the batch, and decode steps
-        stay bucketed at the decode rows' own live-cache depth while the
-        prompt streams at its own."""
-        B, C = self.batch, self.chunk_size
-        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
-        active: list[Request | None] = [None] * B
-        pos = np.zeros(B, np.int32)  # next cache write position per slot
-        consumed = np.zeros(B, np.int32)  # prompt tokens consumed per slot
-        remaining = np.zeros(B, np.int32)  # decode tokens still owed
-        nxt = jnp.zeros((B,), jnp.int32)  # device feedback tokens
-        zeros_b1 = jnp.zeros((B, 1), jnp.int32)
-        fetch = _AsyncTokens(lag=1)
-        self.stats = {
-            "prefill_calls": 0, "mixed_steps": 0, "chunk_calls": 0,
-            "decode_steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-            "decode_stall_steps": 0, "overlap_steps": 0,
-        }
-        clock = 0
-        rr = 0  # round-robin offset: fair prefill budget across slots
-        with self.mesh:
-            caches = self._zero_caches()
-            while len(q) or any(r is not None for r in active):
-                # admission is free: a freed slot starts consuming the next
-                # arrived request's chunks on the very next mixed step
-                for slot in range(B):
-                    if active[slot] is not None:
-                        continue
-                    r = q.peek(clock)
-                    if r is None:
-                        break  # nothing in the queue has arrived yet
-                    q.pop(r, clock)
-                    active[slot] = r
-                    pos[slot] = 0
-                    consumed[slot] = 0
-                    remaining[slot] = r.max_new
-                if not any(r is not None for r in active):
-                    clock += 1  # idle tick: waiting on arrivals
-                    continue
-                # schedule: decode rows always advance; prompt rows split the
-                # per-step chunk budget under a round-robin rotation
-                eligible = [
-                    s for s in range(B)
-                    if active[s] is not None
-                    and len(active[s].prompt) - consumed[s] <= 0
-                ]
-                use_nxt = np.zeros(B, bool)
-                chunk_t = np.zeros(B, np.int32)
-                budget = self.chunk_budget
-                # interactive rows split the chunk budget ahead of batch
-                # rows; the rotation keeps it fair within a class (and IS
-                # the whole order under uniform priority / fifo scheduling)
-                order = sorted(
-                    range(B),
-                    key=lambda s: (
-                        0 if self.fifo or active[s] is None
-                        else _PRIORITY_RANK[active[s].priority],
-                        (s - rr) % B,
-                    ),
-                )
-                for slot in order:
-                    r = active[slot]
-                    if r is None:
-                        continue
-                    rem_prompt = len(r.prompt) - consumed[slot]
-                    if rem_prompt > 0:
-                        t = min(C, rem_prompt, budget)
-                        if t <= 0:
-                            continue  # budget-starved this step; retries next
-                        chunk_t[slot] = t
-                        budget -= t
-                    else:
-                        use_nxt[slot] = True  # decode rows: never budget-gated
-                rr = (rr + 1) % B
-                clock += 1
-                self.stats["mixed_steps"] += 1
-                dec_rows = [s for s in range(B) if use_nxt[s]]
-                chunk_rows = [s for s in range(B) if chunk_t[s] > 0]
-                if any(s not in dec_rows for s in eligible):
-                    # observational, not definitional: trips if a scheduler
-                    # change ever gates a decode-eligible row (e.g. on the
-                    # chunk budget) — the CI gate asserts this stays 0
-                    self.stats["decode_stall_steps"] += 1
-                if dec_rows and chunk_rows:
-                    self.stats["overlap_steps"] += 1  # the §V-A overlap
-                # (a) decode wave — mixed_step at (B, 1), bucketed by the
-                # decode rows' own frontier (a short request decoding next to
-                # a 4k prompt mid-prefill still reads a shallow cache)
-                if dec_rows:
-                    ntok_a = np.where(use_nxt, 1, 0).astype(np.int32)
-                    hot = max(int(pos[s]) + 1 for s in dec_rows)
-                    kv_live = _next_bucket(hot, self.cache_len)
-                    self.stats["decode_kv_live_max"] = max(
-                        self.stats.get("decode_kv_live_max", 0), kv_live
-                    )
-                    logits, caches = self.mixed1_fn(
-                        self.params, caches, zeros_b1, nxt,
-                        jnp.asarray(use_nxt), jnp.asarray(pos),
-                        jnp.asarray(ntok_a), kv_live,
-                    )
-                    toks = jnp.argmax(logits, -1).astype(jnp.int32)
-                    self.stats["decode_steps"] += 1
-                    self.stats["decode_tokens"] += len(dec_rows)
-                    sinks = []
-                    for slot in dec_rows:
-                        r = active[slot]
-                        sinks.append((r, slot))
-                        pos[slot] += 1
-                        remaining[slot] -= 1
-                        if remaining[slot] <= 0:
-                            active[slot] = None
-                    self._stamp_emits(sinks, clock)
-                    fetch.push(toks, sinks)
-                    nxt = jnp.where(jnp.asarray(use_nxt), toks, nxt)
-                # (b) prompt chunks — mixed_step at (1, C) per mid-prompt
-                # row, streaming into the slot's rows of the shared cache at
-                # the prompt's own frontier bucket
-                for slot in chunk_rows:
-                    r = active[slot]
-                    t = int(chunk_t[slot])
-                    ctoks = np.zeros((1, C), np.int32)
-                    ctoks[0, :t] = r.prompt[consumed[slot] : consumed[slot] + t]
-                    kv_live = _next_bucket(int(pos[slot]) + t, self.cache_len)
-                    logits1, caches = self.chunk_fn(
-                        self.params, caches, jnp.asarray(ctoks),
-                        jnp.int32(slot), jnp.int32(pos[slot]), jnp.int32(t),
-                        kv_live,
-                    )
-                    self.stats["chunk_calls"] += 1
-                    self.stats["prefill_tokens"] += t
-                    pos[slot] += t
-                    consumed[slot] += t
-                    if consumed[slot] == len(r.prompt):
-                        # the chunk that finishes the prompt samples the
-                        # first generated token (logits at ntok-1)
-                        tok1 = jnp.argmax(logits1).astype(jnp.int32)
-                        self._stamp_emits([(r, 0)], clock)
-                        fetch.push(tok1, [(r, 0)])
-                        nxt = nxt.at[slot].set(tok1)
-                        remaining[slot] -= 1
-                        if remaining[slot] <= 0:
-                            active[slot] = None
-        fetch.flush()
-        self._finalize_slo(requests, q)
-        return requests
-
-    def _run_paged_admission(self, requests: list[Request]) -> list[Request]:
-        """Admission-by-pages engine: per-request batch-1 prefill scattered
-        straight into the page pool through the request's page-table row,
-        then ragged paged decode waves.  A free SLOT no longer suffices for
-        admission — the request must also reserve its worst-case resident
-        page count; otherwise it backpressures in FIFO order until decode
-        frees pages.  Resident HBM is the pool, not batch x cache_len.
-
-        With the radix prefix cache on, admission first longest-prefix
-        matches the prompt: a hit aliases the cached pages into the page
-        table, reserves only the unique-suffix peak, and prefills JUST the
-        suffix from the divergence frontier (via the chunk entry point)."""
-        B = self.batch
-        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
-        active: list[Request | None] = [None] * B
-        sched: list[_PagedSlot | None] = [None] * B
-        pos = np.zeros(B, np.int32)
-        remaining = np.zeros(B, np.int32)
-        admit_pos = np.zeros(B, np.int32)  # pos at admission: progress floor
-        admit_seq = np.zeros(B, np.int64)  # admission order: victim tiebreak
-        aseq = 0
-        nxt = jnp.zeros((B,), jnp.int32)
-        pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
-        pool = self.pool
-        ct = None
-        if self.cross_pages is not None:
-            ct = np.full((B, self.cross_tiles), self.cross_pages, np.int32)
-        fetch = _AsyncTokens(lag=1)
-        self.stats = {
-            "prefill_calls": 0, "decode_steps": 0, "admission_stall_steps": 0,
-            "admission_backpressure": 0, "max_concurrent": 0,
-            "prefill_tokens": 0, "prefill_flops": 0.0,
-            "prefix_hits": 0, "prefix_hit_tokens": 0,
-            "preemptions": 0, "resumes": 0, "resume_warm_hits": 0,
-        }
-        clock = 0
-        with self.mesh:
-            caches = (
-                self._pools if self._pools is not None else self._zero_pools()
-            )
-            while len(q) or any(r is not None for r in active):
-                for slot in range(B):
-                    if active[slot] is not None:
-                        continue
-                    r = q.peek(clock)
-                    if r is None:
-                        break  # nothing in the queue has arrived yet
-                    pr = self._eff_prompt(r)  # prompt + resumed tokens
-                    plen = len(pr)
-                    mn = r.max_new - len(r.generated)
-                    L = plen + mn - 1  # == original prompt + max_new - 1
-                    own = f"req{r.uid}"
-                    rank = _PRIORITY_RANK[r.priority]
-                    # prefix hit: alias cached pages, reserve the unique
-                    # suffix only; fall back to a cold admission if even
-                    # that reservation cannot fit (after preempting any
-                    # eligible lower-priority victims)
-                    m, spages = self._match_prefix(pr)
-                    if m:
-                        for p in spages:
-                            pool.retain(p, owner=own)
-                        sc = self._paged_schedule(
-                            L, step_span=self.chunk_size,
-                            start_tile=m // self.page,
-                        )
-                        need = lambda: (
-                            self._committed(active, sched, pos)
-                            + sc.remaining_peak(m)
-                        )
-                        gap = self._fits(need())
-                        if gap > 0 and self.preemptible:
-                            gap = self._preempt_until(
-                                need, rank, q, fetch, pool, pt, active,
-                                sched, None, pos, admit_pos, admit_seq,
-                            )
-                        if gap > 0:
-                            for p in spages:
-                                pool.release(p, owner=own)
-                            cold_peak = self._paged_schedule(
-                                L, step_span=(
-                                    self.chunk_size
-                                    if self.cross_pages is not None else plen
-                                ),
-                            ).remaining_peak(0)
-                            if cold_peak < sc.remaining_peak(m):
-                                # cold genuinely cheaper (retention frees
-                                # tiles the alias would pin): retry cold
-                                m, spages = 0, []
-                            else:
-                                # cold could not fit either — and its _fits
-                                # would evict the very prefix (a preemption
-                                # victim's donated pages) that makes the
-                                # eventual resume warm
-                                self.stats["admission_backpressure"] += 1
-                                break
-                    if not m:
-                        if self.ring_tiles is not None:
-                            sc = self._ring_schedule(L)
-                        elif self.cross_pages is not None:
-                            # encdec streams the decoder prompt through the
-                            # chunk entry point — spans are chunk-sized
-                            sc = self._paged_schedule(
-                                L, step_span=self.chunk_size
-                            )
-                        else:
-                            sc = self._paged_schedule(L, step_span=plen)
-                        need = lambda: (
-                            self._committed(active, sched, pos)
-                            + sc.remaining_peak(0)
-                        )
-                        gap = self._fits(need())
-                        if gap > 0 and self.preemptible:
-                            gap = self._preempt_until(
-                                need, rank, q, fetch, pool, pt, active,
-                                sched, None, pos, admit_pos, admit_seq,
-                            )
-                        if gap > 0:
-                            # out of pages: the head waits for decode to free
-                            # some — backpressure, not an error
-                            self.stats["admission_backpressure"] += 1
-                            break
-                    if self.cross_pages is not None:
-                        nc = self._cross_admit(r, slot, ct, caches)
-                        if nc is None:
-                            # no cross range free for a new encoder input
-                            self.stats["admission_backpressure"] += 1
-                            break
-                        caches = nc
-                    q.pop(r, clock)
-                    if r.preemptions:  # a victim re-admitting (possibly
-                        self.stats["resumes"] += 1  # mid-prefill, no tokens)
-                        if m:
-                            self.stats["resume_warm_hits"] += 1
-                    if any(a is not None for a in active):
-                        self.stats["admission_stall_steps"] += 1
-                    ct_row = (
-                        None if ct is None else jnp.asarray(ct[slot:slot + 1])
-                    )
-                    if m:
-                        for i, p in enumerate(spages):
-                            pt[slot, i] = p
-                        self.stats["prefix_hits"] += 1
-                        self.stats["prefix_hit_tokens"] += m
-                        tok, caches = self._suffix_prefill(
-                            pr, m, sc, pool, pt, slot, caches, owner=own
-                        )
-                    elif self.ring_tiles is not None or ct is not None:
-                        # mod-window rings allocate their fixed page set up
-                        # front; both rings and encoder-decoder admissions
-                        # then STREAM the prompt through the chunk entry
-                        # point (a monolithic paged prefill would wrap the
-                        # ring / has no cross-table path)
-                        if self.ring_tiles is not None:
-                            for t in range(
-                                min(self.ring_tiles, -(-L // self.page))
-                            ):
-                                pt[slot, t] = pool.alloc(own)
-                        tok, caches = self._suffix_prefill(
-                            pr, 0, sc, pool, pt, slot, caches, ct=ct_row,
-                            owner=own,
-                        )
-                    else:
-                        caches = self._ensure_writable(
-                            pool, pt, slot, 0, plen, caches, own
-                        )
-                        bucket = _next_bucket(plen, self.cache_len)
-                        toks = np.zeros((1, bucket), np.int32)
-                        toks[0, :plen] = pr
-                        logits, caches = self.p_prefill_fn(
-                            self.params, caches, {"tokens": jnp.asarray(toks)},
-                            jnp.asarray([plen], jnp.int32),
-                            jnp.asarray(pt[slot : slot + 1]),
-                        )
-                        self.stats["prefill_calls"] += 1
-                        self.stats["prefill_tokens"] += plen
-                        self.stats["prefill_flops"] += (
-                            self._prefill_flop_count(0, plen)
-                        )
-                        tok = jnp.argmax(logits[0]).astype(jnp.int32)
-                    self._stamp_emits([(r, 0)], clock)
-                    fetch.push(tok, [(r, 0)])
-                    self._cache_pages(pr, pt, slot)
-                    if mn <= 1:
-                        self._free_all(pool, pt, slot, own)
-                        if ct is not None:
-                            self._release_cross(ct, slot, own)
-                        continue  # done at prefill; slot and pages free
-                    self._free_dead(pool, pt, slot, sc, plen, own)
-                    active[slot] = r
-                    sched[slot] = sc
-                    pos[slot] = plen
-                    admit_pos[slot] = plen
-                    admit_seq[slot] = aseq
-                    aseq += 1
-                    remaining[slot] = mn - 1
-                    nxt = nxt.at[slot].set(tok)
-                self.stats["max_concurrent"] = max(
-                    self.stats["max_concurrent"],
-                    sum(a is not None for a in active),
-                )
-                if not any(r is not None for r in active):
-                    clock += 1
-                    continue
-                # ragged paged decode wave: back each row's write tile (CoW-
-                # forking a still-shared boundary tile), then every row
-                # streams its own live pages through its page-table row at
-                # the bucketed virtual depth
-                for slot in range(B):
-                    if active[slot] is not None:
-                        caches = self._ensure_writable(
-                            pool, pt, slot, int(pos[slot]),
-                            int(pos[slot]) + 1, caches,
-                            f"req{active[slot].uid}",
-                        )
-                if self.ring_tiles is not None:
-                    # the ring streams its fixed window-sized page set and
-                    # positions are unbounded — no live-depth bucketing
-                    kv_live = None
-                else:
-                    hot = max(int(pos[s]) for s in range(B)
-                              if active[s] is not None) + 1
-                    kv_live = _next_bucket(hot, self.cache_len)
-                    self.stats["decode_kv_live_max"] = max(
-                        self.stats.get("decode_kv_live_max", 0), kv_live
-                    )
-                logits, caches = self.p_decode_fn(
-                    self.params, caches, nxt[:, None], jnp.asarray(pos),
-                    jnp.asarray(pt), kv_live,
-                    **({} if ct is None else {"ct": jnp.asarray(ct)}),
-                )
-                self.stats["decode_steps"] += 1
-                clock += 1
-                toks = jnp.argmax(logits, -1).astype(jnp.int32)
-                sinks = []
-                for slot in range(B):
-                    r = active[slot]
-                    if r is None:
-                        continue
-                    sinks.append((r, slot))
-                    pos[slot] += 1
-                    remaining[slot] -= 1
-                    if remaining[slot] <= 0:
-                        self._free_all(pool, pt, slot, f"req{r.uid}")
-                        if ct is not None:
-                            self._release_cross(ct, slot, f"req{r.uid}")
-                        active[slot] = None
-                        sched[slot] = None
-                    else:
-                        self._free_dead(
-                            pool, pt, slot, sched[slot], int(pos[slot]),
-                            f"req{r.uid}",
-                        )
-                self._stamp_emits(sinks, clock)
-                fetch.push(toks, sinks)
-                nxt = toks
-        fetch.flush()
-        self._pools = caches
-        self._finish_paged_run(pool)
-        self._finalize_slo(requests, q)
-        return requests
-
-    def _run_paged_chunked(self, requests: list[Request]) -> list[Request]:
-        """Mixed-step engine over the page pool: the decode wave and the
-        per-row prompt chunks of the chunked scheduler, with cache writes and
-        reads indirected through per-request page tables.  Pages allocate
-        lazily at each row's write frontier and free as soon as the
-        retention schedule says no future query can read them — a butterfly
-        prompt releases most of its tiles WHILE it streams in, which is the
-        capacity win the paged_capacity benchmark measures.
-
-        A radix prefix-cache hit admits at the divergence frontier: the
-        matched pages alias into the slot's page table, ``pos``/``consumed``
-        start at the matched length, and the reservation covers only the
-        unique suffix — chunk streaming then picks up mid-prompt exactly as
-        if the prefix had already streamed."""
-        B, C = self.batch, self.chunk_size
-        q = _AdmitQueue(requests, self.aging_steps, self.fifo)
-        active: list[Request | None] = [None] * B
-        sched: list[_PagedSlot | None] = [None] * B
-        parr: list[np.ndarray | None] = [None] * B  # effective prompt per slot
-        pos = np.zeros(B, np.int32)
-        consumed = np.zeros(B, np.int32)
-        remaining = np.zeros(B, np.int32)
-        admit_pos = np.zeros(B, np.int32)  # pos at admission: progress floor
-        admit_seq = np.zeros(B, np.int64)  # admission order: victim tiebreak
-        aseq = 0
-        nxt = jnp.zeros((B,), jnp.int32)
-        pt = np.full((B, self.n_vtiles), self.pool_pages, np.int32)
-        pool = self.pool
-        ct = None
-        if self.cross_pages is not None:
-            ct = np.full((B, self.cross_tiles), self.cross_pages, np.int32)
-        fetch = _AsyncTokens(lag=1)
-        self.stats = {
-            "prefill_calls": 0, "mixed_steps": 0, "chunk_calls": 0,
-            "decode_steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-            "decode_stall_steps": 0, "overlap_steps": 0,
-            "admission_backpressure": 0, "max_concurrent": 0,
-            "prefill_flops": 0.0, "prefix_hits": 0, "prefix_hit_tokens": 0,
-            "preemptions": 0, "resumes": 0, "resume_warm_hits": 0,
-        }
-        clock = 0
-        rr = 0
-        with self.mesh:
-            caches = (
-                self._pools if self._pools is not None else self._zero_pools()
-            )
-            while len(q) or any(r is not None for r in active):
-                # admission: a free slot AND a page reservation — the page
-                # budget, not the slot count, is the capacity limit; a
-                # higher-priority request that cannot reserve may evict the
-                # youngest lowest-priority active request instead of waiting
-                for slot in range(B):
-                    if active[slot] is not None:
-                        continue
-                    r = q.peek(clock)
-                    if r is None:
-                        break  # nothing in the queue has arrived yet
-                    pr = self._eff_prompt(r)  # prompt + resumed tokens
-                    L = len(pr) + (r.max_new - len(r.generated)) - 1
-                    own = f"req{r.uid}"
-                    rank = _PRIORITY_RANK[r.priority]
-                    m, spages = self._match_prefix(pr)
-                    if m:
-                        for p in spages:
-                            pool.retain(p, owner=own)
-                        sc = self._paged_schedule(
-                            L, step_span=C, start_tile=m // self.page
-                        )
-                        need = lambda: (
-                            self._committed(active, sched, pos)
-                            + sc.remaining_peak(m)
-                        )
-                        gap = self._fits(need())
-                        if gap > 0 and self.preemptible:
-                            gap = self._preempt_until(
-                                need, rank, q, fetch, pool, pt, active,
-                                sched, parr, pos, admit_pos, admit_seq,
-                            )
-                        if gap > 0:
-                            for p in spages:
-                                pool.release(p, owner=own)
-                            cold_peak = self._paged_schedule(
-                                L, step_span=C
-                            ).remaining_peak(0)
-                            if cold_peak < sc.remaining_peak(m):
-                                # cold genuinely cheaper (retention frees
-                                # tiles the alias would pin): retry cold
-                                m, spages = 0, []
-                            else:
-                                # cold could not fit either — and its _fits
-                                # would evict the very prefix (a preemption
-                                # victim's donated pages) that makes the
-                                # eventual resume warm
-                                self.stats["admission_backpressure"] += 1
-                                break
-                    if not m:
-                        sc = (
-                            self._ring_schedule(L)
-                            if self.ring_tiles is not None
-                            else self._paged_schedule(L, step_span=C)
-                        )
-                        need = lambda: (
-                            self._committed(active, sched, pos)
-                            + sc.remaining_peak(0)
-                        )
-                        gap = self._fits(need())
-                        if gap > 0 and self.preemptible:
-                            gap = self._preempt_until(
-                                need, rank, q, fetch, pool, pt, active,
-                                sched, parr, pos, admit_pos, admit_seq,
-                            )
-                        if gap > 0:
-                            self.stats["admission_backpressure"] += 1
-                            break
-                    if self.cross_pages is not None:
-                        nc = self._cross_admit(r, slot, ct, caches)
-                        if nc is None:
-                            self.stats["admission_backpressure"] += 1
-                            break
-                        caches = nc
-                    q.pop(r, clock)
-                    if r.preemptions:  # a victim re-admitting (possibly
-                        self.stats["resumes"] += 1  # mid-prefill, no tokens)
-                        if m:
-                            self.stats["resume_warm_hits"] += 1
-                    if m:
-                        for i, p in enumerate(spages):
-                            pt[slot, i] = p
-                        self.stats["prefix_hits"] += 1
-                        self.stats["prefix_hit_tokens"] += m
-                    elif self.ring_tiles is not None:
-                        # the fixed mod-window page set, allocated up front —
-                        # chunk streaming reuses the slots in phase
-                        for t in range(min(self.ring_tiles, -(-L // self.page))):
-                            pt[slot, t] = pool.alloc(own)
-                    active[slot] = r
-                    sched[slot] = sc
-                    parr[slot] = pr
-                    pos[slot] = m
-                    consumed[slot] = m
-                    admit_pos[slot] = m
-                    admit_seq[slot] = aseq
-                    aseq += 1
-                    remaining[slot] = r.max_new - len(r.generated)
-                self.stats["max_concurrent"] = max(
-                    self.stats["max_concurrent"],
-                    sum(a is not None for a in active),
-                )
-                if not any(r is not None for r in active):
-                    clock += 1
-                    continue
-                eligible = [
-                    s for s in range(B)
-                    if active[s] is not None
-                    and len(parr[s]) - consumed[s] <= 0
-                ]
-                use_nxt = np.zeros(B, bool)
-                chunk_t = np.zeros(B, np.int32)
-                budget = self.chunk_budget
-                # interactive rows split the chunk budget ahead of batch
-                # rows; the rotation keeps it fair within a class (and IS
-                # the whole order under uniform priority / fifo scheduling)
-                order = sorted(
-                    range(B),
-                    key=lambda s: (
-                        0 if self.fifo or active[s] is None
-                        else _PRIORITY_RANK[active[s].priority],
-                        (s - rr) % B,
-                    ),
-                )
-                for slot in order:
-                    r = active[slot]
-                    if r is None:
-                        continue
-                    rem_prompt = len(parr[slot]) - consumed[slot]
-                    if rem_prompt > 0:
-                        t = min(C, rem_prompt, budget)
-                        if t <= 0:
-                            continue
-                        chunk_t[slot] = t
-                        budget -= t
-                    else:
-                        use_nxt[slot] = True
-                rr = (rr + 1) % B
-                clock += 1
-                self.stats["mixed_steps"] += 1
-                dec_rows = [s for s in range(B) if use_nxt[s]]
-                chunk_rows = [s for s in range(B) if chunk_t[s] > 0]
-                if any(s not in dec_rows for s in eligible):
-                    self.stats["decode_stall_steps"] += 1
-                if dec_rows and chunk_rows:
-                    self.stats["overlap_steps"] += 1
-                # (a) paged decode wave: every decoding row advances through
-                # the decode grid; non-decoding rows run with a sentinel
-                # page-table row so their garbage write DROPS — a mid-prompt
-                # row's frontier tile may alias a shared prefix page, which
-                # an unmasked write would corrupt for every sibling
-                if dec_rows:
-                    for slot in dec_rows:
-                        caches = self._ensure_writable(
-                            pool, pt, slot, int(pos[slot]),
-                            int(pos[slot]) + 1, caches,
-                            f"req{active[slot].uid}",
-                        )
-                    if self.ring_tiles is not None:
-                        kv_live = None  # ring positions are unbounded
-                    else:
-                        hot = max(int(pos[s]) + 1 for s in dec_rows)
-                        kv_live = _next_bucket(hot, self.cache_len)
-                        self.stats["decode_kv_live_max"] = max(
-                            self.stats.get("decode_kv_live_max", 0), kv_live
-                        )
-                    use = np.asarray(use_nxt)
-                    pt_wave = np.where(
-                        use[:, None], pt, np.int32(self.pool_pages)
-                    ).astype(np.int32)
-                    logits, caches = self.p_decode_fn(
-                        self.params, caches, nxt[:, None], jnp.asarray(pos),
-                        jnp.asarray(pt_wave), kv_live,
-                        **({} if ct is None else {"ct": jnp.asarray(ct)}),
-                    )
-                    toks = jnp.argmax(logits, -1).astype(jnp.int32)
-                    self.stats["decode_steps"] += 1
-                    self.stats["decode_tokens"] += len(dec_rows)
-                    sinks = []
-                    for slot in dec_rows:
-                        r = active[slot]
-                        sinks.append((r, slot))
-                        pos[slot] += 1
-                        remaining[slot] -= 1
-                        if remaining[slot] <= 0:
-                            self._free_all(pool, pt, slot, f"req{r.uid}")
-                            if ct is not None:
-                                self._release_cross(ct, slot, f"req{r.uid}")
-                            active[slot] = None
-                            sched[slot] = None
-                            parr[slot] = None
-                        else:
-                            self._free_dead(
-                                pool, pt, slot, sched[slot], int(pos[slot]),
-                                f"req{r.uid}",
-                            )
-                    self._stamp_emits(sinks, clock)
-                    fetch.push(toks, sinks)
-                    nxt = jnp.where(jnp.asarray(use_nxt), toks, nxt)
-                # (b) prompt chunks through the paged chunk grid: allocate
-                # the chunk's tiles, stream it into the pool, then free
-                # whatever the pattern says is already dead
-                for slot in chunk_rows:
-                    r = active[slot]
-                    t = int(chunk_t[slot])
-                    caches = self._ensure_writable(
-                        pool, pt, slot, int(pos[slot]), int(pos[slot]) + t,
-                        caches, f"req{r.uid}",
-                    )
-                    ctoks = np.zeros((1, C), np.int32)
-                    ctoks[0, :t] = parr[slot][
-                        consumed[slot] : consumed[slot] + t
-                    ]
-                    kv_live = _next_bucket(int(pos[slot]) + t, self.cache_len)
-                    logits1, caches = self.p_chunk_fn(
-                        self.params, caches, jnp.asarray(ctoks),
-                        jnp.asarray(pt[slot : slot + 1]),
-                        jnp.int32(pos[slot]), jnp.int32(t), kv_live,
-                        ct=None if ct is None else jnp.asarray(
-                            ct[slot : slot + 1]
-                        ),
-                    )
-                    self.stats["chunk_calls"] += 1
-                    self.stats["prefill_tokens"] += t
-                    self.stats["prefill_flops"] += self._prefill_flop_count(
-                        int(pos[slot]), t
-                    )
-                    pos[slot] += t
-                    consumed[slot] += t
-                    if consumed[slot] == len(parr[slot]):
-                        self._cache_pages(parr[slot], pt, slot)
-                        tok1 = jnp.argmax(logits1).astype(jnp.int32)
-                        self._stamp_emits([(r, 0)], clock)
-                        fetch.push(tok1, [(r, 0)])
-                        nxt = nxt.at[slot].set(tok1)
-                        remaining[slot] -= 1
-                        if remaining[slot] <= 0:
-                            self._free_all(pool, pt, slot, f"req{r.uid}")
-                            if ct is not None:
-                                self._release_cross(ct, slot, f"req{r.uid}")
-                            active[slot] = None
-                            sched[slot] = None
-                            parr[slot] = None
-                            continue
-                    self._free_dead(pool, pt, slot, sched[slot],
-                                    int(pos[slot]), f"req{r.uid}")
-        fetch.flush()
-        self._pools = caches
-        self._finish_paged_run(pool)
-        self._finalize_slo(requests, q)
-        return requests

@@ -1,0 +1,36 @@
+"""The serving package: host-side page accounting (:mod:`.pool`), request
+queueing (:mod:`.queueing`), compiled entry points (:mod:`.entries`), the
+single-loop engine (:mod:`.loop`), and the disaggregated prefill/decode
+engine (:mod:`.disagg`).  :mod:`repro.launch.serve` re-exports the public
+surface for compatibility."""
+
+from repro.launch.serving.disagg import DecodeWorker, DisaggRouter, PrefillWorker
+from repro.launch.serving.entries import (
+    abstract_cache,
+    cache_shardings,
+    make_mixed_fn,
+    make_paged_fns,
+    make_serve_fns,
+    make_slot_chunk_fn,
+    zero_pools,
+)
+from repro.launch.serving.loop import ServeLoop
+from repro.launch.serving.pool import PagePool, RadixCache
+from repro.launch.serving.queueing import Request
+
+__all__ = [
+    "abstract_cache",
+    "cache_shardings",
+    "make_mixed_fn",
+    "make_paged_fns",
+    "make_serve_fns",
+    "make_slot_chunk_fn",
+    "zero_pools",
+    "PagePool",
+    "RadixCache",
+    "Request",
+    "ServeLoop",
+    "PrefillWorker",
+    "DecodeWorker",
+    "DisaggRouter",
+]

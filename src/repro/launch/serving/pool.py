@@ -1,0 +1,397 @@
+"""Host-side page accounting: the sharded refcounted page-pool allocator and
+the radix-tree prefix cache that shares its pages.
+
+Device state lives elsewhere (the pools are plain jax arrays, sharded over
+the ``pages`` mesh axis by :func:`repro.models.transformer.paged_pool_specs`);
+this module is the single source of truth for WHO holds WHICH physical page
+and on WHICH shard.
+"""
+
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+__all__ = ["PagePool", "RadixCache"]
+
+
+class PagePool:
+    """Host-side refcounted free-list allocator over the global KV page pool.
+
+    Pages are unit-granular (one kv tile each), so there is no external
+    fragmentation by construction: ``alloc`` succeeds whenever ``in_use <
+    n_pages`` — the fragmentation bound the tests pin down.  The engine
+    layers a *reservation* discipline on top (each active request commits its
+    worst-case future residency, :func:`repro.core.sparsity.
+    page_peak_resident`), which makes ``alloc`` infallible at every reachable
+    state and turns pool exhaustion into admission backpressure instead of a
+    mid-stream deadlock.
+
+    Prefix sharing adds reference counting: a physical page can back the
+    same virtual tile of many requests plus the radix cache.  Every sharer
+    holds one reference (``retain``); ``release`` drops one, and the page
+    returns to the free list only when the LAST reference across all sharers
+    is gone — dead-tile freeing from the retention schedules composes with
+    sharing for free.  ``fork`` is the allocator half of copy-on-write: a
+    writer that holds a page jointly trades its reference for a fresh
+    private page (the engine copies the device rows).
+
+    Every reference carries an advisory ``owner`` label (request id, the
+    radix tree, the encoder cache) so a leak at :meth:`close` names WHO
+    still holds the pages instead of just counting them — :meth:`holders`
+    aggregates the labels of every in-use page.  Labels never influence
+    refcount semantics; a mismatched release just drops the most recent
+    label.  ``transfer`` relabels a reference without touching the count —
+    the disaggregated engine's page-ownership handoff (prefill worker ->
+    decode worker) is a page-table row move plus this refcount move.
+
+    ``n_shards > 1`` makes the allocator MESH-SHARDED: the page id space
+    splits into ``n_shards`` contiguous ranges (shard ``s`` owns
+    ``[s * n_pages/n_shards, (s+1) * n_pages/n_shards)`` — exactly the
+    ranges GSPMD's contiguous partition of the device pool's page axis
+    assigns to each mesh shard), each range keeps its own free list, and
+    ``alloc`` places every page on the fullest-free shard so no shard's
+    residency exceeds ``ceil(global / n_shards)``.  ``in_use`` /
+    ``peak_in_use`` and the reservation discipline stay GLOBAL — admission
+    backpressure and the preemption ladder are unchanged by sharding."""
+
+    def __init__(self, n_pages: int, n_shards: int = 1):
+        if n_pages < 1:
+            raise ValueError(f"pool needs >= 1 page, got {n_pages}")
+        if n_shards < 1:
+            raise ValueError(f"pool needs >= 1 shard, got {n_shards}")
+        if n_pages % n_shards:
+            raise ValueError(
+                f"{n_pages} pages do not split into {n_shards} equal shards "
+                "— round the pool budget up to a shard multiple"
+            )
+        self.n_pages = n_pages
+        self.n_shards = n_shards
+        self.pages_per_shard = n_pages // n_shards
+        # one LIFO free list per contiguous shard range; a 1-shard pool is
+        # bit-identical to the historical flat free list (pops page 0 first)
+        self._free: list[list[int]] = [
+            list(range((s + 1) * self.pages_per_shard - 1,
+                       s * self.pages_per_shard - 1, -1))
+            for s in range(n_shards)
+        ]
+        self._refs = [0] * n_pages
+        self._owners: list[list[str]] = [[] for _ in range(n_pages)]
+        self.in_use = 0
+        self.peak_in_use = 0
+        self.shard_in_use = [0] * n_shards
+        self.shard_peak_in_use = [0] * n_shards
+        self.alloc_count = 0
+        self.fork_count = 0
+
+    @property
+    def free_pages(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def shard_of(self, pid: int) -> int:
+        """Which shard's range (and device shard) holds physical page pid."""
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        return pid // self.pages_per_shard
+
+    def page_refs(self, pid: int) -> int:
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        return self._refs[pid]
+
+    def _drop_owner(self, pid: int, owner: str | None) -> None:
+        ow = self._owners[pid]
+        if owner is not None and owner in ow:
+            ow.remove(owner)
+        elif ow:
+            ow.pop()
+
+    def alloc(self, owner: str = "?") -> int:
+        if self.in_use >= self.n_pages:
+            raise RuntimeError(
+                "page pool exhausted — the reservation invariant was broken "
+                "(engine bug), admission should have backpressured"
+            )
+        # balanced placement: the fullest-free shard takes the page (ties to
+        # the lowest shard id, deterministic) — this is what keeps per-shard
+        # peaks within ceil(global peak / n_shards) of each other, the bound
+        # the --check-shard gate asserts
+        s = max(range(self.n_shards), key=lambda i: (len(self._free[i]), -i))
+        pid = self._free[s].pop()
+        if self._refs[pid]:
+            # the free list must never hand out a page somebody still reads
+            # — this is the invariant the churn property test hammers
+            raise AssertionError(
+                f"free list handed out page {pid} with {self._refs[pid]} "
+                "live refs — refcount bookkeeping is corrupt"
+            )
+        self._refs[pid] = 1
+        self._owners[pid] = [owner]
+        self.in_use += 1
+        self.alloc_count += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.shard_in_use[s] += 1
+        self.shard_peak_in_use[s] = max(
+            self.shard_peak_in_use[s], self.shard_in_use[s]
+        )
+        return pid
+
+    def retain(self, pid: int, owner: str = "?") -> None:
+        """Add a sharer's reference to an allocated page (prefix aliasing)."""
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        if self._refs[pid] == 0:
+            raise ValueError(f"retain of free page {pid} — it could be "
+                             "reallocated under the new reader")
+        self._refs[pid] += 1
+        self._owners[pid].append(owner)
+
+    def fork(self, pid: int, owner: str = "?") -> int:
+        """Copy-on-write: move the caller's reference off shared page ``pid``
+        onto a freshly allocated private page (returned).  The caller owns
+        the device copy of the rows.  Forking an exclusively-held page is an
+        engine bug — the write could have gone in place."""
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        if self._refs[pid] == 0:
+            raise ValueError(f"fork of free page {pid}")
+        if self._refs[pid] == 1:
+            raise ValueError(
+                f"fork of exclusively-held page {pid} — write in place"
+            )
+        new = self.alloc(owner)
+        self._refs[pid] -= 1  # never reaches zero here: refs were >= 2
+        self._drop_owner(pid, owner)
+        self.fork_count += 1
+        return new
+
+    def release(self, pid: int, owner: str | None = None) -> None:
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        if self._refs[pid] == 0:
+            # a double free would put the page on the free list twice and
+            # later hand it to two requests — silent cross-request KV
+            # corruption; fail loudly at the bug site instead
+            raise ValueError(f"page id {pid} is not allocated (double free?)")
+        self._refs[pid] -= 1
+        self._drop_owner(pid, owner)
+        if self._refs[pid] == 0:
+            s = self.shard_of(pid)
+            self._free[s].append(pid)
+            self.in_use -= 1
+            self.shard_in_use[s] -= 1
+
+    def transfer(self, pid: int, old: str, new: str) -> None:
+        """Relabel one reference on page ``pid`` from owner ``old`` to
+        ``new`` — the refcount-move half of a page-ownership handoff (the
+        other half is the page-table row move).  The count is untouched: the
+        reference changes hands, it does not duplicate or drop."""
+        if not 0 <= pid < self.n_pages:
+            raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
+        ow = self._owners[pid]
+        if old not in ow:
+            raise ValueError(
+                f"transfer of page {pid}: {old!r} holds no reference "
+                f"(holders: {ow})"
+            )
+        ow[ow.index(old)] = new
+
+    def holders(self) -> dict[str, int]:
+        """Reference counts per owner label over all in-use pages — the
+        attribution a leak error reports."""
+        c: collections.Counter[str] = collections.Counter()
+        for pid in range(self.n_pages):
+            if self._refs[pid]:
+                c.update(self._owners[pid] or ["?"])
+        return dict(c)
+
+    def close(self, context: str = "") -> None:
+        """Assert the pool drained to zero; a leak raises with the per-owner
+        holder counts so the bug site is attributable without a refcount
+        bisect (owner labels exist exactly for this report)."""
+        if self.in_use:
+            where = f" ({context})" if context else ""
+            raise RuntimeError(
+                f"page pool leak{where}: {self.in_use} pages still "
+                f"referenced — held by {self.holders()}"
+            )
+
+
+class _RadixNode:
+    """One edge of the prefix tree: a token run (length a multiple of the
+    page size, so ownership never tears a page) plus the physical pages
+    backing it.  ``children`` maps first-token -> LIST of nodes: when two
+    cached sequences diverge inside a page we cannot split at the true
+    divergence point, so sub-page-divergent siblings share a bucket instead
+    (bounded duplication, exact matching)."""
+
+    __slots__ = ("tokens", "pages", "children", "parent", "last_use")
+
+    def __init__(self, tokens: np.ndarray, pages: list[int], parent):
+        self.tokens = tokens
+        self.pages = pages
+        self.children: dict[int, list[_RadixNode]] = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+class RadixCache:
+    """SGLang-style radix tree over prompt token ids, owning KV pages of the
+    paged pool at tile granularity.
+
+    Every page a node owns carries ONE tree reference in the
+    :class:`PagePool`; requests that alias a cached prefix retain their own
+    references, so a page outlives the tree node (eviction) and the
+    requests (retirement) independently — it frees exactly when the last
+    reader across all sharers lets go.  ``match`` may extend partway into a
+    node's last page (the divergence frontier can sit mid-tile); the aliased
+    boundary page is then shared, and the engine CoW-forks it on the first
+    divergent write.  Eviction is LRU over leaves whose pages hold no
+    reference but the tree's — evicting a still-read node would free
+    nothing and orphan the sharers' accounting."""
+
+    def __init__(self, pool: PagePool, page: int):
+        self.pool = pool
+        self.page = page
+        self.root = _RadixNode(np.empty(0, np.int32), [], None)
+        self.clock = 0
+        self.held_pages = 0  # pages currently carrying a tree reference
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    @staticmethod
+    def _common(a: np.ndarray, b: np.ndarray) -> int:
+        n = min(len(a), len(b))
+        if n == 0:
+            return 0
+        eq = a[:n] == b[:n]
+        return int(eq.argmin()) if not eq.all() else n
+
+    def _best_child(self, node: _RadixNode, tokens: np.ndarray):
+        best, bk = None, 0
+        if len(tokens):
+            for child in node.children.get(int(tokens[0]), []):
+                k = self._common(tokens, child.tokens)
+                if k > bk:
+                    best, bk = child, k
+        return best, bk
+
+    def match(self, prompt: np.ndarray, cap: int) -> tuple[int, list[int]]:
+        """Longest cached prefix of ``prompt[:cap]``: returns (matched token
+        count m, physical pages covering positions 0..m-1).  The last page is
+        only partially matched when m lands mid-tile — aliasing it anyway is
+        what lets chunked prefill start exactly at the divergence frontier;
+        the engine must treat it as shared (fork before writing).  Touches
+        the walked path's LRU clocks."""
+        prompt = np.asarray(prompt, np.int32)
+        self.clock += 1
+        node, m, pages = self.root, 0, []
+        node.last_use = self.clock
+        while m < cap:
+            best, bk = self._best_child(node, prompt[m:cap])
+            if best is None or bk == 0:
+                break
+            best.last_use = self.clock
+            pages += best.pages[: -(-bk // self.page)]
+            m += bk
+            if bk < len(best.tokens):
+                break  # diverged (or cap) inside this edge
+            node = best
+        return m, pages
+
+    def insert(self, tokens: np.ndarray, pages: list[int]) -> None:
+        """Cache ``pages`` (full pages backing ``tokens``; len(tokens) ==
+        len(pages) * page) — the tree retains the pages not already covered
+        by an existing cached prefix."""
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) != len(pages) * self.page:
+            raise ValueError(
+                f"insert of {len(tokens)} tokens over {len(pages)} pages of "
+                f"{self.page} — only whole pages are cacheable"
+            )
+        self.clock += 1
+        node = self.root
+        node.last_use = self.clock
+        i = 0
+        while i < len(tokens):
+            best, bk = self._best_child(node, tokens[i:])
+            kp = (bk // self.page) * self.page  # page-aligned match depth
+            if best is not None and kp == len(best.tokens):
+                best.last_use = self.clock
+                node = best
+                i += kp
+                continue
+            if best is not None and kp > 0:
+                # diverges past a page boundary inside the edge: split there
+                best = self._split(best, kp)
+                best.last_use = self.clock
+                node = best
+                i += kp
+                continue
+            # no child, or divergence inside the first page: new sibling
+            new = _RadixNode(tokens[i:].copy(), list(pages[i // self.page:]), node)
+            new.last_use = self.clock
+            for p in new.pages:
+                self.pool.retain(p, owner="radix")
+            self.held_pages += len(new.pages)
+            self.inserted_pages += len(new.pages)
+            node.children.setdefault(int(tokens[i]), []).append(new)
+            return
+        # the whole run is already cached — nothing new to own
+
+    def _split(self, node: _RadixNode, kp: int) -> _RadixNode:
+        head = _RadixNode(node.tokens[:kp], node.pages[: kp // self.page],
+                          node.parent)
+        head.last_use = node.last_use
+        bucket = node.parent.children[int(node.tokens[0])]
+        bucket[bucket.index(node)] = head
+        node.tokens = node.tokens[kp:]
+        node.pages = node.pages[kp // self.page:]
+        node.parent = head
+        head.children = {int(node.tokens[0]): [node]}
+        return head
+
+    def _walk(self):
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for kids in n.children.values():
+                stack.extend(kids)
+            yield n
+
+    def evict(self, need: int) -> int:
+        """Free >= ``need`` pool pages by dropping least-recently-used cached
+        prefixes whose pages nobody else references; returns pages freed
+        (possibly fewer — everything left is either shared or interior)."""
+        freed = 0
+        while freed < need:
+            victim = None
+            for n in self._walk():
+                if n is self.root or n.children:
+                    continue  # interior nodes keep their prefix chain intact
+                if any(self.pool.page_refs(p) > 1 for p in n.pages):
+                    continue  # shared with an active request: frees nothing
+                if victim is None or n.last_use < victim.last_use:
+                    victim = n
+            if victim is None:
+                break
+            for p in victim.pages:
+                self.pool.release(p, owner="radix")
+            freed += len(victim.pages)
+            self.held_pages -= len(victim.pages)
+            self.evicted_pages += len(victim.pages)
+            bucket = victim.parent.children[int(victim.tokens[0])]
+            bucket.remove(victim)
+            if not bucket:
+                del victim.parent.children[int(victim.tokens[0])]
+        return freed
+
+    def clear(self) -> None:
+        """Drop every tree reference (end of run): pages shared with live
+        readers survive until those readers release."""
+        for n in self._walk():
+            for p in n.pages:
+                self.pool.release(p, owner="radix")
+        self.root = _RadixNode(np.empty(0, np.int32), [], None)
+        self.held_pages = 0

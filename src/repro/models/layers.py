@@ -385,7 +385,8 @@ def run_decode_attention(
 
 
 def gather_pages(
-    pool: jax.Array, page_table: jax.Array, n_rows: int, page: int
+    pool: jax.Array, page_table: jax.Array, n_rows: int, page: int,
+    page_range: tuple[int, int] | None = None,
 ) -> jax.Array:
     """Materialise rows ``0..n_rows-1`` of each request's VIRTUAL cache from
     the shared page pool.  pool: (n_pages * page, KV, hd); page_table:
@@ -398,7 +399,25 @@ def gather_pages(
     tables (and several virtual tiles, in principle) may name the same
     physical page — a pure read-side gather returns each row its own view of
     the shared rows, bit-identical to a private copy, so the XLA forms need
-    no CoW awareness (the host engine forks pages before any write)."""
+    no CoW awareness (the host engine forks pages before any write).
+
+    ``page_range=(lo, hi)`` makes the gather MESH-LOCAL: ``pool`` is then ONE
+    shard of a page-sharded pool holding physical pages ``lo..hi-1``
+    (``(hi - lo) * page`` rows), ids rebase to the shard, and rows whose page
+    the shard does not own come back ZERO — each allocated tile is owned by
+    exactly one shard, so a sum over the shards' gathers reassembles the
+    replicated gather on every allocated row (a ``psum`` inside
+    ``shard_map``, a plain sum in the host-side sweep test)."""
+    if page_range is not None:
+        lo, hi = page_range
+        rows = jnp.arange(n_rows, dtype=jnp.int32)
+        vt = rows // page
+        phys = page_table[:, vt]  # (B, n_rows) global ids
+        owned = (phys >= lo) & (phys < hi)
+        loc = jnp.clip(phys - lo, 0, hi - lo - 1)
+        flat = loc * page + (rows % page)[None, :]
+        out = pool[flat]
+        return jnp.where(owned[:, :, None, None], out, jnp.zeros((), out.dtype))
     n_pages = pool.shape[0] // page
     rows = jnp.arange(n_rows, dtype=jnp.int32)
     vt = rows // page  # (n_rows,)

@@ -817,8 +817,15 @@ def paged_pool_specs(
     (mod-window slots), the pool is just pages.  Encoder-decoder stacks add a
     per-slot ``cross`` pool of ``cross_pages`` pages holding the encoder
     output's KV as read-only shared page ranges.  Pools shard KV heads over
-    the model axis; pages stay replicated (sharding the page axis is the
-    ROADMAP's sharded-paged-cache item)."""
+    the model axis AND pages over the ``pages`` mesh axis: GSPMD partitions
+    the row axis contiguously, so shard ``s`` of ``k`` owns physical pages
+    ``[s * n_pages/k, (s+1) * n_pages/k)`` — the same ranges the host-side
+    :class:`repro.launch.serve.PagePool` shards its free lists over, which
+    is what lets :func:`repro.core.sparsity.translate_tables` rebase a
+    shard's tables into its local page range.  A mesh without a ``pages``
+    axis (every single-chip test mesh) replicates the pools, the old
+    behaviour.  The cross pool stays replicated — it is read-only and
+    shared, its capacity is not the scaling axis."""
     n = cfg.n_periods
     kv, hd = cfg.n_kv_heads, cfg.head_dim
     out: dict = {}
@@ -826,7 +833,7 @@ def paged_pool_specs(
         sc: dict = {}
         if slot.mixer == "attn":
             kvspec = ParamSpec(
-                (n, n_pages * page, kv, hd), (None, None, "tp", None)
+                (n, n_pages * page, kv, hd), (None, "pages", "tp", None)
             )
             sc["attn"] = {"k": kvspec, "v": kvspec}
         elif slot.mixer == "mamba":

@@ -23,7 +23,7 @@ from repro.configs import registry
 from repro.core import sparsity
 from repro.core.attention import AttentionSpec
 from repro.launch.mesh import make_local_mesh
-from repro.launch.serve import Request, ServeLoop, _AdmitQueue
+from repro.launch.serve import DisaggRouter, Request, ServeLoop, _AdmitQueue
 from repro.models import model as M
 
 
@@ -436,3 +436,71 @@ def test_page_resume_peak_frontier_bounds():
     with pytest.raises(ValueError, match="frontier"):
         sparsity.page_resume_peak("causal", 32, 8, 8, frontier=-1)
     assert sparsity.page_resume_peak("causal", 0, 8, 8, frontier=0) == 0
+
+
+# --------------------------------------------------------------------------
+# Preemption-aware chunk budget (resume_chunk_frac)
+# --------------------------------------------------------------------------
+
+
+def test_resume_budget_cap_counts_and_stays_identical(setup):
+    """A resumed victim re-prefills at a reduced ``resume_chunk_frac`` share
+    of the step budget — the ``resume_budget_capped`` stat counts the
+    shrunk chunks, fresh admissions keep the full budget, and the capped
+    run stays token-identical to the uncontended reference (chunking never
+    changes greedy tokens, only how the prefill is sliced)."""
+    cfg, mesh, params = setup
+    kw = dict(batch=3, cache_len=512, chunked=True, chunk_size=32,
+              paged=True)
+    with ServeLoop(cfg, mesh, params, pool_pages=12, **kw) as ample:
+        ref = ample.run(_overload_reqs(cfg))
+        assert "resume_budget_capped" not in ample.stats  # nothing resumed
+    with ServeLoop(cfg, mesh, params, pool_pages=4,
+                   resume_chunk_frac=0.25, **kw) as loop:
+        done = loop.run(_overload_reqs(cfg))
+        assert loop.stats["resumes"] >= 1
+        # the ~200-token victim re-prefills in ceil(consumed / 8) chunks of
+        # cap = int(32 * 0.25) = 8 instead of 32, so the cap must fire
+        assert loop.stats["resume_budget_capped"] >= 1
+        for r1, r2 in zip(ref, done):
+            assert r2.generated == r1.generated, f"uid {r1.uid}"
+    assert loop.pool.in_use == 0
+
+
+def test_resume_budget_frac_one_never_caps(setup):
+    """``resume_chunk_frac=1.0`` is the no-op cap: the victim's draws are
+    already bounded by the step budget, so the stat never appears."""
+    cfg, mesh, params = setup
+    with ServeLoop(cfg, mesh, params, batch=3, cache_len=512, chunked=True,
+                   chunk_size=32, paged=True, pool_pages=4,
+                   resume_chunk_frac=1.0) as loop:
+        loop.run(_overload_reqs(cfg))
+        assert loop.stats["preemptions"] >= 1
+        assert "resume_budget_capped" not in loop.stats
+
+
+def test_resume_chunk_frac_validation(setup):
+    cfg, mesh, params = setup
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="resume_chunk_frac"):
+            ServeLoop(cfg, mesh, params, batch=2, cache_len=64,
+                      chunked=True, paged=True, resume_chunk_frac=bad)
+
+
+# --------------------------------------------------------------------------
+# DisaggRouter construction contract (cheap: rejected before any compile)
+# --------------------------------------------------------------------------
+
+
+def test_disagg_rejects_unsupported_configs(setup):
+    cfg, mesh, params = setup
+    with pytest.raises(ValueError, match="prefill_batch"):
+        DisaggRouter(cfg, mesh, params, batch=2, prefill_batch=0,
+                     cache_len=64)
+    ring_cfg = dataclasses.replace(cfg, sliding_window=32)
+    with pytest.raises(ValueError, match="sliding"):
+        DisaggRouter(ring_cfg, mesh, params, batch=2, cache_len=64)
+    with pytest.raises(ValueError, match="paged"):
+        DisaggRouter(cfg, mesh, params, batch=2, cache_len=64, paged=False)
+    with pytest.raises(ValueError, match="chunked"):
+        DisaggRouter(cfg, mesh, params, batch=2, cache_len=64, chunked=False)
