@@ -49,6 +49,7 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
@@ -302,6 +303,18 @@ def main() -> None:
                          "back to host-side-only shard accounting otherwise "
                          "(deterministic sub-benchmark; emits the "
                          "shard_capacity BENCH section)")
+    ap.add_argument("--check-quant", action="store_true",
+                    help="CI gate: at a FIXED HBM byte budget (16 bf16 "
+                         "pages), the int8 paged pool — whose pages are "
+                         "(1 + 4/head_dim)/2 the bytes, so the same budget "
+                         "buys more of them — must admit >= 2x the "
+                         "concurrent long-context requests of the bf16 "
+                         "pool, with greedy tokens IDENTICAL between the "
+                         "two runs on the gate workload, admission-prefill "
+                         "logits within tolerance of the bf16 pool's, and "
+                         "both pools drained at close() (deterministic "
+                         "sub-benchmark; emits the quant_capacity BENCH "
+                         "section)")
     ap.add_argument("--json", default="BENCH_attention.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
@@ -350,6 +363,7 @@ def main() -> None:
     ring_json = []
     preempt_json = []
     shard_json = []
+    quant_json = []
     failures = []
     for impl in impls:
         cfg = dataclasses.replace(
@@ -443,6 +457,12 @@ def main() -> None:
             )
             shard_json += sh_rows
             failures += sh_fail
+        if args.check_quant:
+            q_rows, q_fail = check_quant(
+                cfg, mesh, params, impl=impl, pattern=args.pattern,
+            )
+            quant_json += q_rows
+            failures += q_fail
         if args.scenario == "shared_prefix" and "paged" in per_mode:
             # the scenario's paged run doubles as the prefix-cache BENCH row:
             # how much admission work the radix tree absorbed on this shape
@@ -480,6 +500,8 @@ def main() -> None:
             write_bench_json(args.json, "preemption", preempt_json)
         if shard_json:
             write_bench_json(args.json, "shard_capacity", shard_json)
+        if quant_json:
+            write_bench_json(args.json, "quant_capacity", quant_json)
     if failures:
         for f in failures:
             print(f"CHECK FAILED: {f}", file=sys.stderr)
@@ -496,6 +518,8 @@ def main() -> None:
         print("check-preempt: all assertions passed")
     if args.check_shard:
         print("check-shard: all assertions passed")
+    if args.check_quant:
+        print("check-quant: all assertions passed")
 
 
 def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
@@ -585,6 +609,134 @@ def check_paged_capacity(cfg, mesh, params, *, impl: str, pattern: str):
         f"paged_capacity[{impl}/{pattern}]: {conc}x concurrent vs "
         f"{contig_batch} contiguous at {budget_pages} pages "
         f"(peak resident {peak}, {row['capacity_x']}x)"
+    )
+    return [row], failures
+
+
+def check_quant(cfg, mesh, params, *, impl: str, pattern: str):
+    """The quantized-pool CI gate: int8 pages at the SAME HBM byte budget.
+
+    A bf16 page stores ``2 * head_dim`` bytes per (row, kv_head); an int8
+    page stores ``head_dim`` payload bytes plus one f32 scale, so the same
+    byte budget that buys 16 bf16 pages buys
+    ``floor(16 * 2*head_dim / (head_dim + 4))`` int8 pages.  Long-context
+    requests sized at ~6 pages of peak residency then make admission
+    capacity the observable: the bf16 pool packs 2 concurrent requests, the
+    int8 pool must pack >= 2x that (the tentpole's capacity claim, measured
+    end-to-end through the scheduler's backpressure, not computed from
+    widths).  Deterministic assertions: (a) int8 ``max_concurrent`` >= 2x
+    bf16's, (b) greedy generations are IDENTICAL between the two runs —
+    quantization noise on this workload stays below every argmax margin, so
+    any token flip is a scale-handling bug, not rounding, (c) a direct
+    admission-prefill through the quantized pool keeps final-token logits
+    within tolerance of the bf16 pool's (the fused path reads dequantized
+    pages in-kernel; tolerance 0.05 on logits of O(3) magnitude is ~10x
+    the measured divergence), (d) both pools drain at close().  Returns
+    (bench rows, failures)."""
+    page = 128  # the effective kv tile of the default spec
+    cache_len = 8 * page
+    bf16_pages = 16  # the fixed budget, priced in bf16-page bytes
+    hd = cfg.head_dim
+    int8_pages = int(bf16_pages * 2.0 * hd / (hd + 4))
+    chunk = 64
+    rng = np.random.default_rng(7)
+    # ~6 pages of peak residency each: ceil((len + max_new) / page) == 6
+    lens = [int(rng.integers(645, 760)) for _ in range(5)]
+    prompts = [rng.integers(0, cfg.vocab, size=ln).astype(np.int32) for ln in lens]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=3) for i, p in enumerate(prompts)]
+
+    failures = []
+    runs = {}
+    for kd, pages in (("bf16", bf16_pages), ("int8", int8_pages)):
+        t0 = time.perf_counter()
+        with ServeLoop(
+            cfg, mesh, params, batch=len(prompts), cache_len=cache_len,
+            chunked=True, chunk_size=chunk, paged=True, pool_pages=pages,
+            kv_dtype=kd,
+        ) as loop:
+            done = loop.run(mk())
+            dt = time.perf_counter() - t0
+            conc = loop.stats["max_concurrent"]
+            bp = loop.stats["admission_backpressure"]
+        if loop.pool.in_use:
+            failures.append(
+                f"{impl}/{pattern}: {kd} pool leaked "
+                f"{loop.pool.in_use} pages after the quant gate run"
+            )
+        runs[kd] = (done, conc, bp, dt, pages)
+
+    done_bf, conc_bf, _, dt_bf, _ = runs["bf16"]
+    done_i8, conc_i8, bp_i8, dt_i8, _ = runs["int8"]
+    for rb, ri in zip(done_bf, done_i8):
+        if rb.generated != ri.generated:
+            failures.append(
+                f"{impl}/{pattern}: uid {rb.uid} int8 generations diverge "
+                f"from bf16 on the gate workload — a scale-handling bug, "
+                f"not quantization noise"
+            )
+            break
+    if conc_i8 < 2 * conc_bf:
+        failures.append(
+            f"{impl}/{pattern}: int8 packed {conc_i8} concurrent requests "
+            f"vs bf16's {conc_bf} at the same byte budget — expected >= 2x"
+        )
+
+    # direct admission prefill through both pools: logits divergence
+    from repro.launch.serving.entries import make_paged_fns, zero_pools
+
+    nv = cache_len // page
+    plen = 200
+    toks = np.zeros((1, 256), np.int32)
+    toks[0, :plen] = prompts[0][:plen]
+    pt = jnp.arange(nv, dtype=jnp.int32)[None, :]
+    lg = {}
+    for kd in ("bf16", "int8"):
+        pre = make_paged_fns(
+            cfg, mesh, n_pages=nv, page=page, chunk=chunk, kv_dtype=kd
+        )[0]
+        pools = zero_pools(cfg, mesh, nv, page, kv_dtype=kd)
+        logits, _ = pre(
+            params, pools, {"tokens": jnp.asarray(toks)},
+            jnp.asarray([plen], jnp.int32), pt,
+        )
+        lg[kd] = np.asarray(logits[0], np.float32)
+    div = float(np.max(np.abs(lg["bf16"] - lg["int8"])))
+    tol = 0.05
+    if div > tol:
+        failures.append(
+            f"{impl}/{pattern}: admission-prefill logits diverge by {div:.4f} "
+            f"between bf16 and int8 pools (tolerance {tol})"
+        )
+    if int(lg["bf16"].argmax()) != int(lg["int8"].argmax()):
+        failures.append(
+            f"{impl}/{pattern}: admission-prefill argmax flipped between "
+            f"bf16 and int8 pools"
+        )
+
+    row = {
+        "attn": impl,
+        "pattern": pattern,
+        "cache_len": cache_len,
+        "page_tokens": page,
+        "head_dim": hd,
+        "budget_bf16_pages": bf16_pages,
+        "budget_int8_pages": int8_pages,
+        "bf16_concurrent": conc_bf,
+        "int8_concurrent": conc_i8,
+        "capacity_x": round(conc_i8 / max(conc_bf, 1), 2),
+        "int8_admission_backpressure": bp_i8,
+        "tokens": sum(len(r.generated) for r in done_i8),
+        "prefill_logits_max_div": round(div, 5),
+        "wall_s_bf16": round(dt_bf, 3),
+        "wall_s_int8": round(dt_i8, 3),
+    }
+    print(
+        f"quant_capacity[{impl}/{pattern}]: int8 {conc_i8}x concurrent vs "
+        f"bf16 {conc_bf}x at the same byte budget "
+        f"({bf16_pages} bf16 pages == {int8_pages} int8 pages, "
+        f"{row['capacity_x']}x, logits div {div:.4f})"
     )
     return [row], failures
 

@@ -31,6 +31,7 @@ __all__ = [
     "truncate_kv_live",
     "attention_flops",
     "attention_hbm_bytes",
+    "kv_dtype_bytes",
     "ragged_attention_flops",
     "ragged_attention_hbm_bytes",
 ]
@@ -211,6 +212,25 @@ def attention_hbm_bytes(
     kv_io = dtype_bytes * batch * s_kv * kv_heads * head_dim * 2  # K + V once
     score_bytes = 4 if spec.f32_softmax else dtype_bytes
     return float(qo_io + kv_io + 4 * score_bytes * batch * heads * s_q * kv_vis)
+
+
+def kv_dtype_bytes(
+    kv_dtype: str, head_dim: int, base_bytes: float = 2.0
+) -> float:
+    """Effective HBM bytes per stored KV *value* in a paged pool at
+    ``kv_dtype``, including the amortized per-(row, kv_head) float32 scale
+    the quantized layouts carry (4 bytes spread over ``head_dim`` values —
+    :mod:`repro.core.quant`).  ``bf16`` pools store at the model's cache
+    dtype (``base_bytes``) and carry no scales.  Pass the result anywhere a
+    byte pricer takes ``dtype_bytes`` — both decode streaming traffic and
+    resident pool capacity scale by exactly this factor."""
+    if kv_dtype == "bf16":
+        return float(base_bytes)
+    if kv_dtype in ("int8", "fp8_e4m3"):
+        return 1.0 + 4.0 / max(head_dim, 1)
+    raise ValueError(
+        f"kv_dtype must be one of ('bf16', 'int8', 'fp8_e4m3'), got {kv_dtype!r}"
+    )
 
 
 # --------------------------------------------------------------------------

@@ -73,10 +73,17 @@ def pick_tiles(s_q: int, s_kv: int, q_tile: int, kv_tile: int) -> tuple[int, int
 
 
 def _prefill_kernel(
-    kvi_ref, lv_ref, vt_ref, q_ref, k_ref, v_ref, y_ref, m_ref, l_ref, acc_ref,
-    *, scale: float, causal: bool, window: int | None, s_q: int, s_kv: int,
-    q_tile: int, kv_tile: int,
+    kvi_ref, lv_ref, vt_ref, q_ref, k_ref, v_ref, *refs,
+    scale: float, causal: bool, window: int | None, s_q: int, s_kv: int,
+    q_tile: int, kv_tile: int, quantized: bool = False,
 ):
+    # quantized pools append per-row scale tiles after v: dequant happens here,
+    # right after the tile DMA, so the MXU math below is identical either way
+    if quantized:
+        ksc_ref, vsc_ref, y_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ksc_ref = vsc_ref = None
+        y_ref, m_ref, l_ref, acc_ref = refs
     i = pl.program_id(2)
     jj = pl.program_id(3)
     nj = pl.num_programs(3)
@@ -96,6 +103,9 @@ def _prefill_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (tq, d)
         k = k_ref[0].astype(jnp.float32)  # (tk, d)
         v = v_ref[0].astype(jnp.float32)
+        if ksc_ref is not None:
+            k = k * ksc_ref[0][:, None]
+            v = v * vsc_ref[0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (tq, tk)
@@ -153,6 +163,8 @@ def mha_prefill(
     kv_tile: int,
     interpret: bool = False,
     kv_virt: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """q: (BK, G, Sq_pad, D) -> y same shape; k, v: (BK, Skv_pad, D).
 
@@ -167,7 +179,12 @@ def mha_prefill(
     pool (``k``/``v`` are the pool, one page per kv tile) while ``kv_virt``
     holds the virtual tile the fine position mask is computed from
     (:func:`repro.core.sparsity.translate_tables`).  Defaults to
-    ``kv_index`` — the contiguous identity mapping."""
+    ``kv_index`` — the contiguous identity mapping.
+
+    ``k_scale`` / ``v_scale`` ((BK, Skv_pad) float32, or None): per-row
+    dequant scales of a QUANTIZED pool — the kernel reconstructs each K/V
+    tile right after its DMA (:mod:`repro.core.quant`); when None the call
+    compiles the exact unquantized graph."""
     from jax.experimental.pallas import tpu as pltpu
 
     bk, g, sq_pad, d = q.shape
@@ -179,16 +196,28 @@ def mha_prefill(
         raise ValueError(f"kv_index rows {nq} vs q tiles {sq_pad // q_tile}")
     if kv_virt is None:
         kv_virt = kv_index
+    quantized = k_scale is not None
 
     grid = (bk, g, nq, max_live)
+    in_specs = [
+        pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, g, i, 0)),
+        pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj], 0)),
+        pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj], 0)),
+    ]
+    args = [
+        kv_index.astype(jnp.int32), step_live.astype(jnp.int32),
+        kv_virt.astype(jnp.int32), q, k, v,
+    ]
+    if quantized:
+        sspec = pl.BlockSpec(
+            (1, kv_tile), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj])
+        )
+        in_specs += [sspec, sspec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # kv_index, step_live, kv_virt drive the DMA
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, g, i, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj], 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, kvi[i, jj], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, q_tile, d), lambda b, g, i, jj, kvi, lv, vt: (b, g, i, 0)
         ),
@@ -202,14 +231,12 @@ def mha_prefill(
         functools.partial(
             _prefill_kernel, scale=scale, causal=causal, window=window,
             s_q=s_q, s_kv=s_kv, q_tile=q_tile, kv_tile=kv_tile,
+            quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(
-        kv_index.astype(jnp.int32), step_live.astype(jnp.int32),
-        kv_virt.astype(jnp.int32), q, k, v,
-    )
+    )(*args)
 
 
 def _chunk_kernel(
@@ -463,9 +490,14 @@ def mha_decode(
 
 
 def _decode_kernel_paged(
-    cl_ref, kvi_ref, vt_ref, lv_ref, q_ref, k_ref, v_ref, y_ref,
-    m_ref, l_ref, acc_ref, *, scale: float, window: int | None, kv_tile: int,
+    cl_ref, kvi_ref, vt_ref, lv_ref, q_ref, k_ref, v_ref, *refs,
+    scale: float, window: int | None, kv_tile: int, quantized: bool = False,
 ):
+    if quantized:
+        ksc_ref, vsc_ref, y_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ksc_ref = vsc_ref = None
+        y_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     jj = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -483,6 +515,9 @@ def _decode_kernel_paged(
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (gp, d)
         k = k_ref[0].astype(jnp.float32)  # (tk, d) — one physical page
         v = v_ref[0].astype(jnp.float32)
+        if ksc_ref is not None:  # dequantize the page in-register, post-DMA
+            k = k * ksc_ref[0][:, None]
+            v = v * vsc_ref[0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (gp, tk)
@@ -528,6 +563,8 @@ def mha_decode_paged(
     window: int | None,
     kv_tile: int,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Flash-decode over a PAGED cache: q (B, KV, Gp, D); k, v are the global
     page pool laid out (KV, n_pages * kv_tile, D) — no batch axis, every row
@@ -536,7 +573,10 @@ def mha_decode_paged(
     tiles (the fine mask's position base), ``step_live`` the packed liveness
     (:func:`repro.core.sparsity.translate_tables`).  ``cur_len`` (B,) is each
     row's live length in virtual token space; the grid never visits a dead or
-    unallocated tile.  Returns (B, KV, Gp, D)."""
+    unallocated tile.  ``k_scale`` / ``v_scale`` ((KV, n_pages * kv_tile)
+    float32, or None) carry a quantized pool's per-row dequant scales through
+    the SAME page indirection — the kernel reconstructs each page tile right
+    after its DMA.  Returns (B, KV, Gp, D)."""
     from jax.experimental.pallas import tpu as pltpu
 
     b, kvh, gp, d = q.shape
@@ -548,16 +588,28 @@ def mha_decode_paged(
             f"tables {kv_index.shape}/{kv_virt.shape} vs batch {b}"
         )
     max_live = kv_index.shape[1]
+    quantized = k_scale is not None
 
     grid = (b, kvh, max_live)
+    in_specs = [
+        pl.BlockSpec((1, 1, gp, d), lambda b, h, jj, cl, kvi, vt, lv: (b, h, 0, 0)),
+        pl.BlockSpec((1, kv_tile, d), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj], 0)),
+        pl.BlockSpec((1, kv_tile, d), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj], 0)),
+    ]
+    args = [
+        cur_len.astype(jnp.int32), kv_index.astype(jnp.int32),
+        kv_virt.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v,
+    ]
+    if quantized:
+        sspec = pl.BlockSpec(
+            (1, kv_tile), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj])
+        )
+        in_specs += [sspec, sspec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,  # cur_len, kv_index, kv_virt, step_live
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, gp, d), lambda b, h, jj, cl, kvi, vt, lv: (b, h, 0, 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj], 0)),
-            pl.BlockSpec((1, kv_tile, d), lambda b, h, jj, cl, kvi, vt, lv: (h, kvi[b, jj], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, gp, d), lambda b, h, jj, cl, kvi, vt, lv: (b, h, 0, 0)
         ),
@@ -569,23 +621,26 @@ def mha_decode_paged(
     )
     return pl.pallas_call(
         functools.partial(
-            _decode_kernel_paged, scale=scale, window=window, kv_tile=kv_tile
+            _decode_kernel_paged, scale=scale, window=window, kv_tile=kv_tile,
+            quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(
-        cur_len.astype(jnp.int32), kv_index.astype(jnp.int32),
-        kv_virt.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v,
-    )
+    )(*args)
 
 
 def _chunk_kernel_paged(
-    start_ref, kvi_ref, vt_ref, lv_ref, q_ref, k_ref, v_ref, y_ref,
-    m_ref, l_ref, acc_ref, *, scale: float, window: int | None, s_kv: int,
+    start_ref, kvi_ref, vt_ref, lv_ref, q_ref, k_ref, v_ref, *refs,
+    scale: float, window: int | None, s_kv: int,
     q_tile: int, kv_tile: int, n_kv_tiles: int, pattern: str,
-    pattern_arg: int | None,
+    pattern_arg: int | None, quantized: bool = False,
 ):
+    if quantized:
+        ksc_ref, vsc_ref, y_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ksc_ref = vsc_ref = None
+        y_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     jj = pl.program_id(3)
     nj = pl.num_programs(3)
@@ -603,6 +658,9 @@ def _chunk_kernel_paged(
         q = q_ref[0, 0, 0].astype(jnp.float32) * scale  # (cp, d)
         k = k_ref[0].astype(jnp.float32)  # (tk, d) — one physical page
         v = v_ref[0].astype(jnp.float32)
+        if ksc_ref is not None:  # dequantize the page in-register, post-DMA
+            k = k * ksc_ref[0][:, None]
+            v = v * vsc_ref[0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (cp, tk)
@@ -661,6 +719,8 @@ def mha_chunk_paged(
     pattern: str = "dense",
     pattern_arg: int | None = None,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Mixed chunked-prefill attention over a PAGED shared KV cache.
 
@@ -671,7 +731,10 @@ def mha_chunk_paged(
     ``s_kv`` is the VIRTUAL cache length (fine masks index virtual token
     positions; the per-query pattern gate runs on virtual tiles).  Same grid
     semantics as :func:`mha_chunk` with the batch and kv-head axes split so
-    the pool needs no per-row copy.  Returns (B, KV, G, C_pad, D)."""
+    the pool needs no per-row copy.  ``k_scale`` / ``v_scale`` ((KV,
+    n_pages * kv_tile) float32, or None): quantized-pool per-row dequant
+    scales, page-indirected like K/V and applied right after the tile DMA.
+    Returns (B, KV, G, C_pad, D)."""
     from jax.experimental.pallas import tpu as pltpu
 
     b, kvh, g, cp, d = q.shape
@@ -683,25 +746,37 @@ def mha_chunk_paged(
             f"table rows {kv_index.shape[0]} / start rows {start.shape[0]} vs B {b}"
         )
     max_live = kv_index.shape[1]
+    quantized = k_scale is not None
 
     grid = (b, kvh, g, max_live)
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, 1, cp, d),
+            lambda b, h, gg, jj, st, kvi, vt, lv: (b, h, gg, 0, 0),
+        ),
+        pl.BlockSpec(
+            (1, kv_tile, d),
+            lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj], 0),
+        ),
+        pl.BlockSpec(
+            (1, kv_tile, d),
+            lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj], 0),
+        ),
+    ]
+    args = [
+        start.astype(jnp.int32), kv_index.astype(jnp.int32),
+        kv_virt.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v,
+    ]
+    if quantized:
+        sspec = pl.BlockSpec(
+            (1, kv_tile), lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj])
+        )
+        in_specs += [sspec, sspec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,  # start, kv_index, kv_virt, step_live
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, 1, cp, d),
-                lambda b, h, gg, jj, st, kvi, vt, lv: (b, h, gg, 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, kv_tile, d),
-                lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj], 0),
-            ),
-            pl.BlockSpec(
-                (1, kv_tile, d),
-                lambda b, h, gg, jj, st, kvi, vt, lv: (h, kvi[b, jj], 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, 1, cp, d), lambda b, h, gg, jj, st, kvi, vt, lv: (b, h, gg, 0, 0)
         ),
@@ -716,12 +791,9 @@ def mha_chunk_paged(
             _chunk_kernel_paged, scale=scale, window=window, s_kv=s_kv,
             q_tile=q_tile, kv_tile=kv_tile,
             n_kv_tiles=-(-s_kv // kv_tile), pattern=pattern,
-            pattern_arg=pattern_arg,
+            pattern_arg=pattern_arg, quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(
-        start.astype(jnp.int32), kv_index.astype(jnp.int32),
-        kv_virt.astype(jnp.int32), step_live.astype(jnp.int32), q, k, v,
-    )
+    )(*args)

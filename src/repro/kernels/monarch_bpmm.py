@@ -34,16 +34,21 @@ from jax.experimental import pallas as pl
 __all__ = ["monarch_bpmm", "pick_token_tile"]
 
 
-def pick_token_tile(gin: int, nb: int, b: int, dtype_bytes: int = 4) -> int:
+def pick_token_tile(gin: int, nb: int, b: int, dtype_bytes: float = 4) -> int:
     """Token-tile size so x/u/y tiles fit a ~12 MB VMEM budget.
 
-    ``dtype_bytes`` must come from the ACTUAL activation dtype (bf16 tiles
-    are half the bytes of f32 and fit twice the tokens); the f32 default is a
-    conservative fallback for callers without an array in hand."""
+    ``dtype_bytes`` must come from the ACTUAL storage dtype (bf16 tiles are
+    half the bytes of f32 and fit twice the tokens); the f32 default is a
+    conservative fallback for callers without an array in hand.  Fractional
+    widths are legal: quantized KV tiles price at their EFFECTIVE width —
+    e.g. ``repro.core.attention.kv_dtype_bytes`` returns ``1 + 4/head_dim``
+    for int8/fp8 pages (payload byte + amortized per-row f32 scale) — so a
+    quantized stream budgets nearly twice the tokens of bf16 in the same
+    VMEM."""
     piece = nb * b
-    per_token = (gin + 3) * piece * dtype_bytes  # x(gin) + u + acc + y
+    per_token = (gin + 3) * piece * float(dtype_bytes)  # x(gin) + u + acc + y
     budget = 12 * 1024 * 1024
-    tile = budget // max(per_token, 1)
+    tile = int(budget // max(per_token, 1.0))
     for cand in (512, 256, 128, 64, 32, 16, 8):
         if cand <= tile:
             return cand

@@ -411,6 +411,18 @@ def _pool_layout(k_pool: jax.Array, v_pool: jax.Array, page: int):
     return kt, vt, rows // page, d
 
 
+def _scale_layout(k_scale, v_scale):
+    """(P*page, KV) per-row dequant scales -> kernel layout (KV, P*page) f32
+    — the scale analogue of :func:`_pool_layout` (no head_dim axis to pad;
+    the scale tile rides the page index map, so lanes are the page rows)."""
+    if k_scale is None:
+        return None, None
+    return (
+        jnp.swapaxes(k_scale, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(v_scale, 0, 1).astype(jnp.float32),
+    )
+
+
 def _virtual_extent(page_table: jax.Array, page: int, kv_live: int | None) -> int:
     """Static virtual cache length the tables cover: the page table's full
     span, truncated to the engine's bucketed ``kv_live`` bound (rounded up to
@@ -443,6 +455,8 @@ def flash_paged_prefill(
     *,
     page: int,
     spec: AttentionSpec | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Fused prefill attention reading prompt KV back through the page pool.
 
@@ -453,7 +467,9 @@ def flash_paged_prefill(
     physical-page map.  The static block map over the prompt translates to
     physical page ids, so the prefill grid streams pool pages directly —
     batch-1 because the table is shared across grid rows, which is exactly
-    the admission engine's shape."""
+    the admission engine's shape.  ``k_scale`` / ``v_scale`` ((n_pages *
+    page, KV) f32 or None) are a quantized pool's per-row dequant scales —
+    forwarded through the same page indirection."""
     spec = spec or AttentionSpec(impl="flash_kernel")
     pattern, arg, causal, window = canonical_pattern(
         spec.pattern, spec.pattern_arg, True, None
@@ -480,11 +496,12 @@ def flash_paged_prefill(
     qt = q.reshape(1, s, kvh, g, hd).transpose(0, 2, 3, 1, 4).reshape(kvh, g, s, hd)
     qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - s), (0, d - hd)))
 
+    ks, vs = _scale_layout(k_scale, v_scale)
     y = fa.mha_prefill(
         qt, kt, vt, kv_phys, step_live,
         scale=1.0 / math.sqrt(hd), causal=causal, window=window,
         s_q=s, s_kv=s, q_tile=tq, kv_tile=page, interpret=_interpret(),
-        kv_virt=kv_virt,
+        kv_virt=kv_virt, k_scale=ks, v_scale=vs,
     )
     y = y[:, :, :s, :hd].reshape(1, kvh, g, s, hd)
     return y.transpose(0, 3, 1, 2, 4).reshape(1, s, h, hd)
@@ -504,6 +521,8 @@ def flash_paged_chunk(
     ring_window: int | None = None,
     ring_tiles: int | None = None,
     page_range: tuple[int, int] | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged form of :func:`flash_chunk`: q (B, C, H, hd) mixed rows over the
     shared pool (n_pages * page, KV, hd), each row reading through its own
@@ -562,11 +581,12 @@ def flash_paged_chunk(
     qt = q.reshape(b, c, kvh, g, hd).transpose(0, 2, 3, 1, 4)
     qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, cp - c), (0, d - hd)))
 
+    ks, vs = _scale_layout(k_scale, v_scale)
     y = fa.mha_chunk_paged(
         qt, kt, vt, start, kv_phys, kv_virt, step_live,
         scale=1.0 / math.sqrt(hd), window=window, s_kv=skv,
         q_tile=spec.q_tile, kv_tile=page, pattern=pattern, pattern_arg=arg,
-        interpret=_interpret(),
+        interpret=_interpret(), k_scale=ks, v_scale=vs,
     )
     y = y[:, :, :, :c, :hd]
     return y.transpose(0, 3, 1, 2, 4).reshape(b, c, h, hd)
@@ -585,6 +605,8 @@ def flash_paged_decode(
     ring_window: int | None = None,
     ring_tiles: int | None = None,
     page_range: tuple[int, int] | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged form of :func:`flash_decode`: q (B, H, hd) over the shared pool.
 
@@ -632,10 +654,11 @@ def flash_paged_decode(
 
     qt = jnp.pad(q.reshape(b, kvh, g, hd), ((0, 0), (0, 0), (0, gp - g), (0, d - hd)))
 
+    ks, vs = _scale_layout(k_scale, v_scale)
     y = fa.mha_decode_paged(
         qt, kt, vt, cl_rows, kv_phys, kv_virt, step_live,
         scale=1.0 / math.sqrt(hd), window=window, kv_tile=page,
-        interpret=_interpret(),
+        interpret=_interpret(), k_scale=ks, v_scale=vs,
     )
     return y[:, :, :g, :hd].reshape(b, h, hd)
 

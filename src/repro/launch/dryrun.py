@@ -196,7 +196,14 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
     sharding: per-shard peak resident pages (the balanced allocator's
     ``ceil(global / k)`` bound), per-shard resident bytes, and the
     per-shard capacity ratio — the analytic counterpart of the
-    ``--check-shard`` gate."""
+    ``--check-shard`` gate.
+
+    ``kv_dtype`` prices the SAME paged residency at each pool storage
+    width (bf16 | int8 | fp8_e4m3, :func:`repro.core.attention.
+    kv_dtype_bytes` — quantized widths include the amortized per-row f32
+    scale): resident bytes, capacity ratio against the bf16 dense
+    reservation, and the decode-step live read set — the analytic
+    counterpart of the ``--check-quant`` gate."""
     import math
 
     from repro.core import sparsity
@@ -284,6 +291,21 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
                 (per_layer_dense / k) / max(per_layer_shard, 1)
             ),
         }
+    # --- pool storage width: the same residency at bf16 / int8 / fp8 ------
+    kv_dtype_split = {}
+    base_bytes = jnp.dtype(cfg.dtype).itemsize
+    for kd in ("bf16", "int8", "fp8_e4m3"):
+        eff = attn.kv_dtype_bytes(kd, cfg.head_dim, base_bytes=base_bytes)
+        rb = 2 * cfg.n_kv_heads * cfg.head_dim * eff
+        plp = shape.batch * peak_pages * page * rb
+        lr = shape.batch * max(math.ceil(density * n_tiles), 1) * page * rb
+        kv_dtype_split[kd] = {
+            "effective_bytes_per_value": float(eff),
+            "paged_resident_bytes": float(n_attn * plp),
+            "decode_live_read_bytes": float(n_attn * lr),
+            "capacity_ratio": float(per_layer_dense / max(plp, 1)),
+        }
+
     return {
         "pattern": pattern,
         "retention_patterns": sorted(pats),
@@ -304,6 +326,7 @@ def _kv_cache_stage(cfg: ModelConfig, shape: Shape) -> dict | None:
         ),
         "prefill_flops_saved_frac": float(1.0 - warm / max(cold, 1.0)),
         "shard_split": shard_split,
+        "kv_dtype": kv_dtype_split,
     }
 
 
@@ -471,6 +494,13 @@ def _summ(rec: dict) -> str:
         f"(-{kv['prefill_flops_saved_frac']:.0%}flops)"
         if kv else ""
     )
+    if kv and kv.get("kv_dtype"):
+        kd = kv["kv_dtype"]
+        kv_s += " qcap=" + "/".join(
+            f"{name.split('_')[0]}:{kd[name]['capacity_ratio']:.1f}x"
+            for name in ("bf16", "int8", "fp8_e4m3")
+            if name in kd
+        )
     return (
         f"[ok] {rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} "
         f"compile={rec['t_compile_s']:.0f}s mem/dev={m['peak_est_bytes']/2**30:.2f}GiB "

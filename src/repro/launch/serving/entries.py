@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import quant
 from repro.core.attention import override_attention
 from repro.distributed import sharding as shd
 from repro.models import model as M
@@ -50,16 +51,35 @@ def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
 
 
 def zero_pools(cfg: ModelConfig, mesh: Mesh, n_pages: int, page: int,
-               cross_pages: int | None = None):
+               cross_pages: int | None = None, kv_dtype: str = "bf16"):
     """Zero-initialised paged KV pools placed at their MESH shardings — on a
     mesh with a ``pages`` axis the page rows land sharded from the start, so
     the donated entry-point calls never reshard a committed replicated
-    array."""
-    specs = tf.paged_pool_specs(cfg, n_pages, page, cross_pages=cross_pages)
+    array.
+
+    ``kv_dtype`` != 'bf16' stores the self-attention K/V leaves at the
+    quantized width and adds their float32 ``*_scale`` leaves
+    (:func:`repro.models.transformer.paged_pool_specs`); cross pools and
+    everything else stay at the config's cache dtype."""
+    specs = tf.paged_pool_specs(
+        cfg, n_pages, page, cross_pages=cross_pages, kv_dtype=kv_dtype
+    )
     shards = shd.sharding_tree(specs, mesh, M.rules_for(cfg))
-    dt = jnp.dtype(cfg.dtype)
-    return jax.tree.map(
-        lambda s, sh: jax.device_put(jnp.zeros(s.shape, dt), sh),
+    base = jnp.dtype(cfg.dtype)
+    store = quant.kv_store_dtype(kv_dtype, base)
+
+    def leaf_dtype(path):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names and names[-1].endswith("_scale"):
+            return jnp.dtype(jnp.float32)
+        if "attn" in names and names[-1] in ("k", "v"):
+            return store
+        return base
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s, sh: jax.device_put(
+            jnp.zeros(s.shape, leaf_dtype(path)), sh
+        ),
         specs, shards,
         is_leaf=lambda x: isinstance(x, shd.ParamSpec),
     )
@@ -271,6 +291,7 @@ def make_paged_fns(
     attn_impl: str | None = None,
     attn_pattern: str | None = None,
     cross_pages: int | None = None,
+    kv_dtype: str = "bf16",
 ):
     """Compiled entry points of the PAGED serve engine: ``(prefill, decode,
     chunk_fn, copy_fn, encode_fn)`` over one global page pool instead of
@@ -306,12 +327,19 @@ def make_paged_fns(
     ``pages`` axis the pool's page rows are SHARDED over it — each device
     holds the contiguous physical range the host allocator's matching shard
     places into — while the page tables stay replicated (they are the
-    ownership record both sides read)."""
+    ownership record both sides read).
+
+    ``kv_dtype`` selects the pool storage width (bf16 | int8 | fp8_e4m3) —
+    the entry points themselves are layout-agnostic (the caches tree flows
+    through opaquely), only the pool SHARDING tree must know about the
+    quantized pools' extra ``*_scale`` leaves."""
     cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
     rt = M.resolve_runtime(cfg, mesh)
     p_shard = shd.sharding_tree(M.build_specs(cfg), mesh, M.rules_for(cfg))
     pool_shard = shd.sharding_tree(
-        tf.paged_pool_specs(cfg, n_pages, page, cross_pages=cross_pages),
+        tf.paged_pool_specs(
+            cfg, n_pages, page, cross_pages=cross_pages, kv_dtype=kv_dtype
+        ),
         mesh, M.rules_for(cfg),
     )
     tok_shard = NamedSharding(

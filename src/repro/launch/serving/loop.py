@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import sparsity
+from repro.core import quant, sparsity
 from repro.core.attention import override_attention
 from repro.distributed import sharding as shd
 from repro.models import model as M
@@ -122,9 +122,15 @@ class ServeLoop:
         scheduler: str = "priority", aging_steps: int = 64,
         max_preemptions: int = 2, preempt_min_progress: int = 1,
         resume_chunk_frac: float = 0.5, slo_ttft: int | None = None,
-        slo_itl: float | None = None,
+        slo_itl: float | None = None, kv_dtype: str = "bf16",
     ):
         cfg = override_attention(cfg, impl=attn_impl, pattern=attn_pattern)
+        quant.validate_kv_dtype(kv_dtype)
+        if kv_dtype != "bf16" and not paged:
+            raise ValueError(
+                "kv_dtype quantization is a paged-pool feature (scales ride "
+                "the page tables) — pass paged=True or kv_dtype='bf16'"
+            )
         if cfg.sliding_window and cache_len < cfg.sliding_window:
             raise ValueError(
                 f"cache_len {cache_len} < sliding_window {cfg.sliding_window}: "
@@ -209,6 +215,7 @@ class ServeLoop:
             and not cfg.sliding_window and cfg.family != "encdec"
         )
         self.paged = paged
+        self.kv_dtype = kv_dtype
         if paged:
             spec = cfg.attention_spec
             # one page == one kv tile of the effective grid, so the packed
@@ -287,6 +294,7 @@ class ServeLoop:
              self.p_copy_fn, self.p_encode_fn) = make_paged_fns(
                 cfg, mesh, n_pages=self.pool_pages, page=self.page,
                 chunk=chunk_size, cross_pages=self.cross_pages,
+                kv_dtype=kv_dtype,
             )
             self.stats = {}
             return
@@ -430,7 +438,7 @@ class ServeLoop:
         # resharding on entry
         return zero_pools(
             self.cfg, self.mesh, self.pool_pages, self.page,
-            cross_pages=self.cross_pages,
+            cross_pages=self.cross_pages, kv_dtype=self.kv_dtype,
         )
 
     def _paged_schedule(

@@ -151,7 +151,13 @@ class PagePool:
         """Copy-on-write: move the caller's reference off shared page ``pid``
         onto a freshly allocated private page (returned).  The caller owns
         the device copy of the rows.  Forking an exclusively-held page is an
-        engine bug — the write could have gone in place."""
+        engine bug — the write could have gone in place.
+
+        The host pool never sees device payloads: the device-side page copy
+        (:func:`repro.models.transformer.paged_copy_page`) tree-maps over
+        EVERY pool leaf, so a quantized pool's K/V rows and their per-row
+        scale leaves copy together — a page and its scales cannot diverge
+        through a fork."""
         if not 0 <= pid < self.n_pages:
             raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
         if self._refs[pid] == 0:
@@ -186,7 +192,10 @@ class PagePool:
         """Relabel one reference on page ``pid`` from owner ``old`` to
         ``new`` — the refcount-move half of a page-ownership handoff (the
         other half is the page-table row move).  The count is untouched: the
-        reference changes hands, it does not duplicate or drop."""
+        reference changes hands, it does not duplicate or drop.  Device
+        payloads are keyed by the PHYSICAL page id, which a transfer never
+        changes — quantized K/V rows and their scale leaves ride along
+        without the pool knowing the storage dtype."""
         if not 0 <= pid < self.n_pages:
             raise ValueError(f"page id {pid} outside pool of {self.n_pages}")
         ow = self._owners[pid]

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import sparsity
+from repro.core import quant, sparsity
 from repro.core.attention import AttentionSpec, truncate_kv_live
 from repro.distributed.sharding import constrain
 
@@ -417,7 +417,10 @@ def gather_pages(
         loc = jnp.clip(phys - lo, 0, hi - lo - 1)
         flat = loc * page + (rows % page)[None, :]
         out = pool[flat]
-        return jnp.where(owned[:, :, None, None], out, jnp.zeros((), out.dtype))
+        # broadcast `owned` over the pool's trailing dims — (KV, hd) for a
+        # KV pool, (KV,) for a quantized pool's per-row scale leaf
+        owned = owned.reshape(owned.shape + (1,) * (out.ndim - 2))
+        return jnp.where(owned, out, jnp.zeros((), out.dtype))
     n_pages = pool.shape[0] // page
     rows = jnp.arange(n_rows, dtype=jnp.int32)
     vt = rows // page  # (n_rows,)
@@ -441,6 +444,22 @@ def ring_kpos(frontier: jax.Array, page: int, ring_tiles: int) -> jax.Array:
     return (base[:, :, None] + off[None, None, :]).reshape(st.shape[0], -1)
 
 
+def _gather_dequant(q, k_pool, v_pool, k_scale, v_scale, page_table, n_rows, page):
+    """Gather both pools' virtual rows and, for a quantized pool, the
+    matching scale rows — reconstructing the bf16 cache the contiguous
+    (oracle) forms consume.  The scale leaves ride the SAME page table, so a
+    CoW-forked, radix-aliased, or ring-phased page always lands next to its
+    own scales."""
+    kg = gather_pages(k_pool, page_table, n_rows, page)
+    vg = gather_pages(v_pool, page_table, n_rows, page)
+    if k_scale is not None:
+        ks = gather_pages(k_scale, page_table, n_rows, page)
+        vs = gather_pages(v_scale, page_table, n_rows, page)
+        kg = quant.dequantize_rows(kg, ks, dtype=q.dtype)
+        vg = quant.dequantize_rows(vg, vs, dtype=q.dtype)
+    return kg, vg
+
+
 def run_paged_prefill_attention(
     q: jax.Array,
     k_new: jax.Array,
@@ -452,17 +471,22 @@ def run_paged_prefill_attention(
     page: int,
     spec: AttentionSpec = AttentionSpec(),
     rt: Runtime = Runtime(),
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Admission prefill over a paged cache: q/k_new/v_new are the (1, S)
     prompt's projections (already scattered into the pool by the caller).
     The fused kernel reads the KV back *through the page table* — the
     physical-page indexing proof for the prefill grid; the XLA form attends
-    the in-flight projections directly (the gather would reproduce them)."""
+    the in-flight projections directly (the gather would reproduce them, and
+    for a QUANTIZED pool the in-flight values are the exact pre-quantization
+    KV — no dequant needed)."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 
         return ops.flash_paged_prefill(
-            q, k_pool, v_pool, page_table, page=page, spec=spec
+            q, k_pool, v_pool, page_table, page=page, spec=spec,
+            k_scale=k_scale, v_scale=v_scale,
         )
     return run_attention(q, k_new, v_new, spec=spec, causal=True, rt=rt)
 
@@ -480,34 +504,43 @@ def run_paged_decode_attention(
     kv_live: int | None = None,
     ring_window: int | None = None,
     ring_tiles: int | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """One-token attention over the paged pool: q (B, H, hd), per-row
     ``cur_len`` live lengths in virtual token space.  ``kv_live`` buckets the
     virtual extent (compile-per-bucket, like the contiguous engine).
     ``ring_window`` / ``ring_tiles`` select the mod-window ring form:
     positions are unbounded, the table's ``ring_tiles`` slots are reused in
-    phase, and only the trailing ``ring_window`` keys are live."""
+    phase, and only the trailing ``ring_window`` keys are live.
+    ``k_scale`` / ``v_scale`` carry a quantized pool's per-row dequant
+    scales: the fused kernel dequantizes post-DMA, the XLA forms right after
+    the gather — one scheme, two address spaces."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 
         return ops.flash_paged_decode(
             q, k_pool, v_pool, cur_len, page_table, page=page, spec=spec,
             kv_live=kv_live, ring_window=ring_window, ring_tiles=ring_tiles,
+            k_scale=k_scale, v_scale=v_scale,
         )
     if ring_tiles is not None:
         cl = jnp.broadcast_to(
             jnp.asarray(cur_len, jnp.int32).reshape(-1), (q.shape[0],)
         )
-        kg = gather_pages(k_pool, page_table, ring_tiles * page, page)
-        vg = gather_pages(v_pool, page_table, ring_tiles * page, page)
+        kg, vg = _gather_dequant(
+            q, k_pool, v_pool, k_scale, v_scale, page_table,
+            ring_tiles * page, page,
+        )
         kpos = ring_kpos(cl - 1, page, ring_tiles)  # (B, R*page) slot order
         mask = (kpos < cl[:, None]) & (kpos > (cl[:, None] - 1 - ring_window))
         return decode_attention(q, kg, vg, None, pattern_mask=mask)
     n_rows = page_table.shape[1] * page
     if kv_live is not None:
         n_rows = min(n_rows, max(int(kv_live), 1))
-    kg = gather_pages(k_pool, page_table, n_rows, page)
-    vg = gather_pages(v_pool, page_table, n_rows, page)
+    kg, vg = _gather_dequant(
+        q, k_pool, v_pool, k_scale, v_scale, page_table, n_rows, page
+    )
     return run_decode_attention(q, kg, vg, cur_len, spec=spec, rt=rt)
 
 
@@ -525,25 +558,32 @@ def run_paged_chunk_attention(
     kv_live: int | None = None,
     ring_window: int | None = None,
     ring_tiles: int | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Mixed chunked-prefill attention over the paged pool (the paged form of
     :func:`run_chunk_attention`): q (B, C, H, hd) rows at absolute positions
     ``start[b]..``, per-row page tables, per-row live-tile tables translated
     to physical pages.  ``ring_window`` / ``ring_tiles`` select the
-    mod-window ring form (slot-phase tables, absolute-position masks)."""
+    mod-window ring form (slot-phase tables, absolute-position masks).
+    ``k_scale`` / ``v_scale``: quantized-pool dequant scales (fused:
+    post-DMA in-kernel; XLA: post-gather)."""
     if spec.fused and _fused_ok(rt):
         from repro.kernels import ops
 
         return ops.flash_paged_chunk(
             q, k_pool, v_pool, start, ntok, page_table, page=page, spec=spec,
             kv_live=kv_live, ring_window=ring_window, ring_tiles=ring_tiles,
+            k_scale=k_scale, v_scale=v_scale,
         )
     if ring_tiles is not None:
         sv = jnp.asarray(start, jnp.int32).reshape(-1)
         nv = jnp.asarray(ntok, jnp.int32).reshape(-1)
         fr = sv + jnp.maximum(nv, 1) - 1  # per-row write frontier
-        kg = gather_pages(k_pool, page_table, ring_tiles * page, page)
-        vg = gather_pages(v_pool, page_table, ring_tiles * page, page)
+        kg, vg = _gather_dequant(
+            q, k_pool, v_pool, k_scale, v_scale, page_table,
+            ring_tiles * page, page,
+        )
         kpos = ring_kpos(fr, page, ring_tiles)
         return chunk_attention_cache(
             q, kg, vg, sv, window=ring_window, kpos=kpos
@@ -551,8 +591,9 @@ def run_paged_chunk_attention(
     n_rows = page_table.shape[1] * page
     if kv_live is not None:
         n_rows = min(n_rows, max(int(kv_live), 1))
-    kg = gather_pages(k_pool, page_table, n_rows, page)
-    vg = gather_pages(v_pool, page_table, n_rows, page)
+    kg, vg = _gather_dequant(
+        q, k_pool, v_pool, k_scale, v_scale, page_table, n_rows, page
+    )
     return run_chunk_attention(q, kg, vg, start, ntok, spec=spec, rt=rt)
 
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api
+from repro.core import quant
 from repro.core.fft_mixing import fnet_mixing
 from repro.distributed.sharding import ParamSpec, constrain
 from repro.models import params as pp
@@ -184,7 +185,8 @@ def _paged_kv_write(
     page_table: jax.Array,
     page: int,
     ring_tiles: int | None = None,
-) -> jax.Array:
+    scale: jax.Array | None = None,
+):
     """Page-table-indirected masked scatter: token KV at absolute positions
     ``rows`` (B, C) lands at ``page_table[b, rows // page] * page + rows %
     page`` of the flat pool (n_pages * page, KV, hd).  Rows that are invalid
@@ -203,7 +205,17 @@ def _paged_kv_write(
     guarantee every tile overlapping a write range is exclusively held
     before the step — ``ServeLoop._ensure_writable`` forks shared pages
     (``PagePool.fork`` + :func:`paged_copy_page`) and repoints the table
-    entry, making the first divergent write land in a private copy."""
+    entry, making the first divergent write land in a private copy.
+
+    ``scale`` selects the QUANTIZED pool form: the pool stores int8 /
+    fp8_e4m3 pages and ``scale`` is the matching (n_pages * page, KV) f32
+    per-row-per-head scale pool.  Each written row is quantized
+    independently (:func:`repro.core.quant.quantize_rows` — symmetric absmax
+    over head_dim, the scheme resolved from ``pool.dtype``) and its scale
+    scatters through the SAME flat page-row index, so a page and its scales
+    can never diverge — CoW copies, radix aliasing, rings, and shard
+    transfers carry them as one unit.  Returns ``(pool, scale)`` in that
+    form, the pool alone otherwise (the PR-9 graph, bit-identical)."""
     n_pages = pool.shape[0] // page
     vt = rows // page
     if ring_tiles is not None:
@@ -212,9 +224,18 @@ def _paged_kv_write(
     phys = jnp.take_along_axis(page_table, vt, axis=1)
     flat = phys * page + rows % page
     flat = jnp.where(valid & (phys < n_pages), flat, pool.shape[0])
-    return pool.at[flat.reshape(-1)].set(
-        new.astype(pool.dtype).reshape(-1, *new.shape[2:]), mode="drop"
+    if scale is None:
+        return pool.at[flat.reshape(-1)].set(
+            new.astype(pool.dtype).reshape(-1, *new.shape[2:]), mode="drop"
+        )
+    qv, sc = quant.quantize_rows(new, pool.dtype)  # (B, C, KV, hd), (B, C, KV)
+    pool = pool.at[flat.reshape(-1)].set(
+        qv.reshape(-1, *qv.shape[2:]), mode="drop"
     )
+    scale = scale.at[flat.reshape(-1)].set(
+        sc.reshape(-1, *sc.shape[2:]).astype(scale.dtype), mode="drop"
+    )
+    return pool, scale
 
 
 def paged_copy_page(caches: dict, src: jax.Array, dst: jax.Array, page: int) -> dict:
@@ -319,17 +340,39 @@ def apply_attention(
             ring_tiles = page_table.shape[1]
             spec = dataclasses.replace(spec, pattern="dense")
         kc, vc = cache["k"], cache["v"]
+        # quantized pools carry per-(row, kv_head) scale leaves in the same
+        # flat page layout as K/V — absent for bf16 (see repro.core.quant)
+        ksc, vsc = cache.get("k_scale"), cache.get("v_scale")
+
+        def write(kc, vc, ksc, vsc, rows, valid, ring=None):
+            if ksc is None:
+                kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page, ring)
+                vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page, ring)
+                return kc, vc, None, None
+            kc, ksc = _paged_kv_write(
+                kc, k_new, rows, valid, page_table, page, ring, scale=ksc
+            )
+            vc, vsc = _paged_kv_write(
+                vc, v_new, rows, valid, page_table, page, ring, scale=vsc
+            )
+            return kc, vc, ksc, vsc
+
+        def pack(kc, vc, ksc, vsc):
+            out = {"k": kc, "v": vc}
+            if ksc is not None:
+                out["k_scale"], out["v_scale"] = ksc, vsc
+            return out
+
         if mode == "mixed":
             assert ntok is not None
             rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, C)
             valid = jnp.arange(s)[None, :] < ntok[:, None]
-            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page, ring_tiles)
-            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page, ring_tiles)
-            new_cache = {"k": kc, "v": vc}
+            kc, vc, ksc, vsc = write(kc, vc, ksc, vsc, rows, valid, ring_tiles)
+            new_cache = pack(kc, vc, ksc, vsc)
             out = run_paged_chunk_attention(
                 q, kc, vc, pos, ntok, page_table, page=page, spec=spec,
                 rt=rt, kv_live=kv_live, ring_window=ring_window,
-                ring_tiles=ring_tiles,
+                ring_tiles=ring_tiles, k_scale=ksc, v_scale=vsc,
             )
         elif mode == "decode":
             # every row writes at its own position; a retired slot's page
@@ -339,13 +382,12 @@ def apply_attention(
             # wave, with the page table enforcing ownership
             rows = pos[:, None]  # (B, 1)
             valid = jnp.ones_like(rows, bool)
-            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page, ring_tiles)
-            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page, ring_tiles)
-            new_cache = {"k": kc, "v": vc}
+            kc, vc, ksc, vsc = write(kc, vc, ksc, vsc, rows, valid, ring_tiles)
+            new_cache = pack(kc, vc, ksc, vsc)
             out = run_paged_decode_attention(
                 q[:, 0], kc, vc, pos + 1, page_table, page=page, spec=spec,
                 rt=rt, kv_live=kv_live, ring_window=ring_window,
-                ring_tiles=ring_tiles,
+                ring_tiles=ring_tiles, k_scale=ksc, v_scale=vsc,
             )[:, None]
         elif mode == "prefill":
             if ring_tiles is not None:
@@ -360,12 +402,11 @@ def apply_attention(
                 lengths if lengths is not None else jnp.full((b,), s, jnp.int32)
             )
             valid = jnp.arange(s)[None, :] < ln[:, None]
-            kc = _paged_kv_write(kc, k_new, rows, valid, page_table, page)
-            vc = _paged_kv_write(vc, v_new, rows, valid, page_table, page)
-            new_cache = {"k": kc, "v": vc}
+            kc, vc, ksc, vsc = write(kc, vc, ksc, vsc, rows, valid)
+            new_cache = pack(kc, vc, ksc, vsc)
             out = run_paged_prefill_attention(
                 q, k_new, v_new, kc, vc, page_table, page=page, spec=spec,
-                rt=rt,
+                rt=rt, k_scale=ksc, v_scale=vsc,
             )
         else:
             raise ValueError(f"paged caches have no {mode!r} mode")
@@ -806,7 +847,11 @@ def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
 
 
 def paged_pool_specs(
-    cfg: ModelConfig, n_pages: int, page: int, cross_pages: int | None = None
+    cfg: ModelConfig,
+    n_pages: int,
+    page: int,
+    cross_pages: int | None = None,
+    kv_dtype: str = "bf16",
 ) -> dict:
     """ParamSpec tree for the paged KV cache: one GLOBAL page pool per
     attention slot, (n_periods, n_pages * page, KV, hd) — no batch axis, no
@@ -825,7 +870,14 @@ def paged_pool_specs(
     shard's tables into its local page range.  A mesh without a ``pages``
     axis (every single-chip test mesh) replicates the pools, the old
     behaviour.  The cross pool stays replicated — it is read-only and
-    shared, its capacity is not the scaling axis."""
+    shared, its capacity is not the scaling axis.
+
+    ``kv_dtype`` != 'bf16' adds float32 ``k_scale`` / ``v_scale`` leaves
+    shaped (n_periods, n_pages * page, KV) to each self-attention pool —
+    one symmetric scale per (row, kv_head), sharded and paged exactly like
+    the rows they reconstruct (:mod:`repro.core.quant`).  Cross pools stay
+    unquantized: they are written once at encode and read-only shared, so
+    capacity pressure (the quantization motive) never lands on them."""
     n = cfg.n_periods
     kv, hd = cfg.n_kv_heads, cfg.head_dim
     out: dict = {}
@@ -836,6 +888,11 @@ def paged_pool_specs(
                 (n, n_pages * page, kv, hd), (None, "pages", "tp", None)
             )
             sc["attn"] = {"k": kvspec, "v": kvspec}
+            if kv_dtype != "bf16":
+                quant.validate_kv_dtype(kv_dtype)
+                sspec = ParamSpec((n, n_pages * page, kv), (None, "pages", "tp"))
+                sc["attn"]["k_scale"] = sspec
+                sc["attn"]["v_scale"] = sspec
         elif slot.mixer == "mamba":
             raise ValueError("paged serving requires attention-only stacks")
         if cfg.family == "encdec":
